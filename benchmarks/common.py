@@ -1,0 +1,47 @@
+"""Shared benchmark plumbing: timers, CSV rows, graph suite.
+
+Scale note: the paper's graphs are up to 3.7B edges; this container is one
+CPU core, so the suite reproduces every *comparison* at proportionally
+reduced sizes (10³–10⁵ edges) with the same generators/skews.  Rows print
+as ``name,us_per_call,derived`` per the harness contract.
+"""
+
+from __future__ import annotations
+
+import time
+from typing import Callable
+
+from repro.graphs import powerlaw_graph, rmat_graph
+from repro.graphs.generators import community_graph
+
+ROWS: list[tuple[str, float, str]] = []
+
+
+def emit(name: str, us_per_call: float, derived: str = "") -> None:
+    ROWS.append((name, us_per_call, derived))
+    print(f"{name},{us_per_call:.1f},{derived}")
+
+
+def timed(fn: Callable, *args, **kw):
+    t0 = time.perf_counter()
+    out = fn(*args, **kw)
+    return out, (time.perf_counter() - t0) * 1e6
+
+
+GRAPHS = {
+    # name: (generator, kwargs, paper analogue)
+    "web-like": (community_graph,
+                 dict(n_vertices=4000, n_communities=64, avg_degree=8,
+                      p_intra=0.95, rho=2.0, seed=0), "IT/UK-style web graph"),
+    "social-like": (community_graph,
+                    dict(n_vertices=3000, n_communities=24, avg_degree=10,
+                         p_intra=0.8, rho=2.2, seed=1), "OK/LJ-style social"),
+    "powerlaw": (powerlaw_graph,
+                 dict(n_vertices=3000, avg_degree=8, rho=2.2, seed=2),
+                 "configuration-model control"),
+}
+
+
+def get_graph(name: str):
+    gen, kw, _ = GRAPHS[name]
+    return gen(**kw)

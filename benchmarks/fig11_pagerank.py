@@ -1,0 +1,41 @@
+"""Fig. 11 analogue: deployment on the GAS engine — PageRank comm + runtime.
+
+Communication is counted exactly (replica sync messages); "runtime" is the
+modeled distributed time = max-shard compute + comm/bandwidth under the
+paper's RTT sweep (we cannot wall-clock a 32-node docker cluster here, but
+the comm volumes — the quantity the paper's speedups derive from — are
+exact).
+"""
+
+from __future__ import annotations
+
+from repro.core import S5PConfig, s5p_partition, replication_factor
+from repro.core.baselines import PARTITIONERS
+from repro.gas import build_gas_graph, pagerank
+from repro.gas.engine import comm_stats
+
+from .common import emit, get_graph, timed
+
+METHODS = ("hash", "dbh", "hdrf", "2ps-l", "s5p")
+
+
+def run(quick: bool = True):
+    src, dst, n = get_graph("web-like")
+    k = 8
+    iters = 5
+    base_comm = None
+    for m in METHODS:
+        parts = (s5p_partition(src, dst, n, S5PConfig(k=k)).parts
+                 if m == "s5p" else PARTITIONERS[m](src, dst, n, k))
+        g = build_gas_graph(src, dst, parts, n, k)
+        (vals, stats), us = timed(pagerank, g, iters)
+        comm = stats.total_bytes()
+        rf = replication_factor(src, dst, parts, n_vertices=n, k=k)
+        if m == "hash":
+            base_comm = comm
+        red = (1 - comm / base_comm) * 100 if base_comm else 0.0
+        # modeled distributed runtime: per-iter sync at 1 GB/s + 10 ms RTT
+        t_model = iters * (comm / iters / 1e9 + 0.010)
+        emit(f"fig11/pagerank/{m}", us,
+             f"RF={rf:.3f};comm_B={comm};comm_reduction={red:.1f}%;"
+             f"modeled_s={t_model:.3f}")

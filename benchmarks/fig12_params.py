@@ -1,0 +1,26 @@
+"""Fig. 12 analogue: parameter sensitivity — β (head/tail threshold) and
+game batch size."""
+
+from __future__ import annotations
+
+from repro.core import S5PConfig, replication_factor, s5p_partition
+
+from .common import emit, get_graph, timed
+
+
+def run(quick: bool = True):
+    src, dst, n = get_graph("social-like")
+    k = 8
+    betas = (0.5, 1.0, 2.0) if quick else (0.25, 0.5, 1.0, 2.0, 4.0, 8.0)
+    for beta in betas:
+        out, us = timed(s5p_partition, src, dst, n,
+                        S5PConfig(k=k, beta=beta))
+        rf = replication_factor(src, dst, out.parts, n_vertices=n, k=k)
+        emit(f"fig12a/beta{beta}", us,
+             f"RF={rf:.3f};head_clusters={out.n_head_clusters};"
+             f"clusters={out.n_clusters}")
+    for bs in (16, 64, 256):
+        out, us = timed(s5p_partition, src, dst, n,
+                        S5PConfig(k=k, game_batch_size=bs))
+        rf = replication_factor(src, dst, out.parts, n_vertices=n, k=k)
+        emit(f"fig12b/batch{bs}", us, f"RF={rf:.3f};rounds={out.game_rounds}")

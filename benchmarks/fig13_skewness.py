@@ -1,0 +1,31 @@
+"""Fig. 13 analogue: RF vs graph skewness (R-MAT sweep G₁→G₃ style).
+
+Paper claim: baselines degrade faster than S5P as skew increases."""
+
+from __future__ import annotations
+
+from repro.core import S5PConfig, replication_factor, s5p_partition
+from repro.core.baselines import PARTITIONERS
+from repro.graphs import graph_skewness, rmat_graph
+
+from .common import emit, timed
+
+
+def run(quick: bool = True):
+    k = 8
+    factors = (4, 8, 16) if quick else (4, 8, 16, 32)
+    deltas = {}
+    for m in ("hdrf", "2ps-l", "s5p"):
+        rfs = []
+        for ef in factors:
+            src, dst, n = rmat_graph(11, edge_factor=ef, seed=ef)
+            rho, r1, r2, _ = graph_skewness(src, dst, n)
+            parts = (s5p_partition(src, dst, n, S5PConfig(k=k)).parts
+                     if m == "s5p" else PARTITIONERS[m](src, dst, n, k))
+            rf = replication_factor(src, dst, parts, n_vertices=n, k=k)
+            rfs.append(rf)
+            emit(f"fig13/ef{ef}/{m}", 0.0,
+                 f"RF={rf:.3f};rho={rho:.2f};pearson1={r1:.3f}")
+        deltas[m] = rfs[-1] - rfs[0]
+    emit("fig13/summary", 0.0,
+         ";".join(f"{m}_rf_growth={d:+.3f}" for m, d in deltas.items()))

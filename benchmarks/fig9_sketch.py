@@ -1,0 +1,28 @@
+"""Fig. 9 analogue: CMS vs exact Θ store — time, memory, RF, ε sweep."""
+
+from __future__ import annotations
+
+from repro.core import S5PConfig, replication_factor, s5p_partition
+
+from .common import emit, get_graph, timed
+
+
+def run(quick: bool = True):
+    src, dst, n = get_graph("social-like")
+    k = 8
+
+    exact, us_e = timed(s5p_partition, src, dst, n,
+                        S5PConfig(k=k, use_cms=False))
+    rf_e = replication_factor(src, dst, exact.parts, n_vertices=n, k=k)
+    emit("fig9/exact-RBT-equivalent", us_e,
+         f"RF={rf_e:.4f};mem_B={exact.aux['exact_count_bytes']}")
+
+    for eps, nu in [(0.1, 0.01)] + ([] if quick else [(0.05, 0.01), (0.2, 0.05)]):
+        cms, us_c = timed(
+            s5p_partition, src, dst, n,
+            S5PConfig(k=k, use_cms=True, cms_epsilon=eps, cms_nu=nu))
+        rf_c = replication_factor(src, dst, cms.parts, n_vertices=n, k=k)
+        ratio = exact.aux["exact_count_bytes"] / max(cms.aux["sketch_bytes"], 1)
+        emit(f"fig9/cms-eps{eps}", us_c,
+             f"RF={rf_c:.4f};mem_B={cms.aux['sketch_bytes']};"
+             f"mem_reduction={ratio:.1f}x;rf_delta={(rf_c - rf_e) / rf_e:+.3%}")

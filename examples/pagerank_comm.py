@@ -1,0 +1,45 @@
+"""Distributed-graph-processing example: S5P feeding the GAS engine.
+
+Reproduces the paper's §6.6 deployment story: partition with S5P vs hash,
+run PageRank on the PowerGraph-style engine, report exact replica-sync
+communication per superstep.
+
+    PYTHONPATH=src python examples/pagerank_comm.py
+"""
+
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
+
+import numpy as np
+
+from repro.core import S5PConfig, s5p_partition
+from repro.core.baselines import hash_partition
+from repro.gas import build_gas_graph, pagerank
+from repro.graphs.generators import community_graph
+
+
+def main():
+    src, dst, n = community_graph(5000, n_communities=64, avg_degree=10, seed=1)
+    k = 16
+    print(f"graph |V|={n} |E|={len(src)}, {k} partitions, PageRank ×10\n")
+    results = {}
+    for name, parts in (
+        ("hash", hash_partition(src, dst, n, k)),
+        ("s5p", s5p_partition(src, dst, n, S5PConfig(k=k)).parts),
+    ):
+        g = build_gas_graph(src, dst, parts, n, k)
+        vals, stats = pagerank(g, iterations=10)
+        results[name] = (np.asarray(vals), stats.total_bytes())
+        print(f"{name:5s} comm = {stats.total_bytes() / 1e6:.2f} MB "
+              f"({stats.mirror_to_master_msgs} mirror msgs)")
+    assert np.allclose(results["hash"][0], results["s5p"][0], rtol=1e-4), \
+        "partitioning must not change the answer"
+    red = 1 - results["s5p"][1] / results["hash"][1]
+    print(f"\nS5P reduces PageRank communication by {red:.1%} "
+          f"(identical results)")
+
+
+if __name__ == "__main__":
+    main()

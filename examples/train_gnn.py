@@ -1,0 +1,68 @@
+"""End-to-end training driver: GCN node classification on a Cora-shaped
+graph — data pipeline → model → AdamW → checkpointed fault-tolerant loop.
+
+    PYTHONPATH=src python examples/train_gnn.py --steps 300
+"""
+
+import argparse
+import sys
+import time
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import CheckpointManager
+from repro.graphs.datasets import cora_like
+from repro.models import gnn as G
+from repro.optim import AdamWConfig, make_train_step, init_state
+from repro.runtime import FaultInjector, FaultTolerantLoop
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--fail-at", type=int, nargs="*", default=[150])
+    args = ap.parse_args()
+
+    data = cora_like(seed=0)
+    cfg = G.GCNConfig(n_layers=2, d_hidden=16, d_feat=1433, n_classes=7)
+    params = G.gcn_init(cfg, jax.random.PRNGKey(0))
+    state = init_state(params)
+
+    n = data.n_vertices
+    rng = np.random.default_rng(0)
+    train_mask = (rng.random(n) < 0.7).astype(np.float32)
+    batch = {
+        "feats": jnp.asarray(data.features),
+        "edge_src": jnp.asarray(data.src),
+        "edge_dst": jnp.asarray(data.dst),
+        "labels": jnp.asarray(data.labels),
+        "label_mask": jnp.asarray(train_mask),
+    }
+    step = jax.jit(make_train_step(G.gcn_loss, cfg, AdamWConfig(lr=0.01)))
+
+    manager = CheckpointManager("/tmp/repro_gcn_ckpt", keep=2)
+    loop = FaultTolerantLoop(step, lambda s: batch, manager, ckpt_every=50,
+                             injector=FaultInjector(args.fail_at))
+    t0 = time.time()
+    state, n_steps, metrics = loop.run(state, args.steps)
+    dt = time.time() - t0
+
+    logits = G.gcn_forward(state.params, batch["feats"], batch["edge_src"],
+                           batch["edge_dst"], n, cfg)
+    pred = np.asarray(jnp.argmax(logits, -1))
+    test = train_mask == 0
+    acc = (pred[test] == np.asarray(data.labels)[test]).mean()
+    print(f"trained {n_steps} steps in {dt:.1f}s "
+          f"({dt / n_steps * 1e3:.1f} ms/step), "
+          f"{loop.restarts} injected-failure restart(s)")
+    print(f"final loss {float(metrics['loss'] if isinstance(metrics, dict) else 0):.4f}, "
+          f"held-out accuracy {acc:.3f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,62 @@
+"""LM pretraining driver on the public API (reduced-size by default; pass
+--d-model 768 --layers 12 for a ~100M-param run if you have the cycles).
+
+    PYTHONPATH=src python examples/train_lm.py --steps 100
+"""
+
+import argparse
+import sys
+import time
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
+
+import jax
+import jax.numpy as jnp
+
+from repro.checkpoint import CheckpointManager
+from repro.data import TokenPipeline, Prefetcher
+from repro.models import lm as LM
+from repro.optim import AdamWConfig, make_train_step, init_state
+from repro.optim.schedules import cosine_schedule
+from repro.runtime import FaultTolerantLoop, StragglerMonitor
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--d-model", type=int, default=128)
+    ap.add_argument("--layers", type=int, default=4)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    args = ap.parse_args()
+
+    cfg = LM.LMConfig(
+        n_layers=args.layers, d_model=args.d_model,
+        n_heads=max(args.d_model // 64, 2), n_kv_heads=max(args.d_model // 128, 1),
+        d_head=64, d_ff=args.d_model * 4, vocab=8192, attn_chunk=128,
+        dtype=jnp.float32,
+    )
+    print(f"model: {LM.count_params(cfg) / 1e6:.1f}M params")
+    params = LM.init_params(cfg, jax.random.PRNGKey(0))
+    state = init_state(params)
+    opt = AdamWConfig(lr=3e-4, schedule=cosine_schedule(20, args.steps))
+    step = jax.jit(make_train_step(LM.loss_fn, cfg, opt))
+
+    pipe = Prefetcher(TokenPipeline(cfg.vocab, args.batch, args.seq, seed=1))
+    pipe.start()
+    monitor = StragglerMonitor()
+    manager = CheckpointManager("/tmp/repro_lm_ckpt", keep=2)
+    loop = FaultTolerantLoop(step, pipe, manager, ckpt_every=max(args.steps // 2, 10),
+                             straggler_monitor=monitor)
+    t0 = time.time()
+    state, n_steps, metrics = loop.run(state, args.steps)
+    dt = time.time() - t0
+    pipe.stop()
+    tok_s = args.batch * args.seq * n_steps / dt
+    print(f"{n_steps} steps in {dt:.1f}s — {tok_s:,.0f} tokens/s, "
+          f"final loss {float(metrics['loss']):.3f}")
+
+
+if __name__ == "__main__":
+    main()

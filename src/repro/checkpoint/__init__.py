@@ -1,0 +1,2 @@
+from .manager import CheckpointManager, save_checkpoint, restore_checkpoint  # noqa: F401
+from .reshard import reshard_state  # noqa: F401

@@ -1,0 +1,23 @@
+"""Elastic restart: re-place a host checkpoint onto any mesh.
+
+Checkpoints are stored as full (unsharded) host arrays, so resharding is
+placement-only: given the target mesh + sharding tree, ``jax.device_put``
+each leaf.  This is what lets a run checkpointed on 2×16×16 resume on
+16×16 (pod loss) or on a test mesh — and what the elastic controller uses
+after S5P re-partitions the graph for a new worker count.
+"""
+
+from __future__ import annotations
+
+import jax
+
+__all__ = ["reshard_state"]
+
+
+def reshard_state(host_state, shardings):
+    """host_state: pytree of numpy arrays; shardings: matching pytree of
+    jax.sharding.Sharding (or None ⇒ default placement)."""
+    def put(x, s):
+        return jax.device_put(x, s) if s is not None else jax.device_put(x)
+
+    return jax.tree.map(put, host_state, shardings)

@@ -1,0 +1,21 @@
+"""--arch registry: one module per assigned architecture."""
+from .base import ArchSpec  # noqa: F401
+
+from . import (  # noqa: F401
+    qwen2_5_14b, llama3_8b, qwen3_14b, mixtral_8x7b, mixtral_8x22b,
+    schnet, egnn, dimenet, gcn_cora, xdeepfm,
+)
+
+REGISTRY = {
+    m.ARCH.name: m.ARCH
+    for m in (
+        qwen2_5_14b, llama3_8b, qwen3_14b, mixtral_8x7b, mixtral_8x22b,
+        schnet, egnn, dimenet, gcn_cora, xdeepfm,
+    )
+}
+
+
+def get_arch(name: str) -> ArchSpec:
+    if name not in REGISTRY:
+        raise KeyError(f"unknown arch {name!r}; available: {sorted(REGISTRY)}")
+    return REGISTRY[name]

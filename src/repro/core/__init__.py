@@ -1,0 +1,20 @@
+"""S5P core: the paper's contribution (clustering + Stackelberg game)."""
+
+from .cms import CMSketch, make_sketch, cms_update, cms_query, cms_merge, pair_key  # noqa: F401
+from .clustering import (  # noqa: F401
+    cluster_stream,
+    cluster_chunk,
+    compact_clusters,
+    compute_degrees,
+    reference_cluster_python,
+)
+from .game import GameInputs, GameResult, run_game, best_response_gap  # noqa: F401
+from .postprocess import assign_edges, assign_edges_stream  # noqa: F401
+from .s5p import S5PConfig, S5POutput, s5p_partition  # noqa: F401
+from .metrics import (  # noqa: F401
+    replication_factor,
+    load_balance,
+    partition_loads,
+    gas_comm_bytes,
+)
+from .baselines import PARTITIONERS  # noqa: F401

@@ -1,0 +1,351 @@
+"""Skewness-aware streaming graph clustering (paper Algorithm 1).
+
+Edges arrive as a stream.  Each edge is classified *head* (both endpoints
+have global degree > ξ) or *tail* (otherwise) and drives an
+allocate/migrate update on one of two vertex→cluster tables:
+
+- ``V2C_H`` (head): cluster volumes tracked in **global-degree** units;
+- ``V2C_T`` (tail): volumes in **local-degree** units (1 per edge arrival).
+
+Migration merges the lighter endpoint's cluster into the heavier one when
+the receiving cluster stays under the volume cap κ = 2|E|/k.
+
+TPU adaptation (recorded in DESIGN.md §2): the paper's per-edge loop with
+early-exit branches becomes a ``jax.lax.scan`` with branchless
+``jnp.where`` state transitions.  The carry is strictly O(|V|):
+two V2C tables, two volume arrays (≤ |V| + 1 slots each; the trailing slot
+is a write sink for masked updates), one local-degree array, two id
+counters.  The state transitions are bit-identical to the sequential
+algorithm — ``tests/test_clustering.py`` checks the scan against a
+pure-Python transcription of Algorithm 1 on randomized streams.
+
+Global degrees come from a one-pass precompute (same contract as 2PS-L;
+the paper's head-cluster volume updates explicitly use global degrees).
+"""
+
+from __future__ import annotations
+
+from functools import partial
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = [
+    "ClusterState",
+    "ClusterResult",
+    "init_state",
+    "cluster_chunk",
+    "cluster_stream",
+    "compact_clusters",
+    "reference_cluster_python",
+]
+
+
+class ClusterState(NamedTuple):
+    """Carry of the clustering scan.  All arrays are O(|V|)."""
+
+    v2c_h: jax.Array  # (V,) int32, -1 = unassigned
+    v2c_t: jax.Array  # (V,) int32, -1 = unassigned
+    vol_h: jax.Array  # (V + 1,) int32 head-cluster volumes (global-degree units)
+    vol_t: jax.Array  # (V + 1,) int32 tail-cluster volumes (local-degree units)
+    ld: jax.Array  # (V,) int32 streaming local degree
+    next_h: jax.Array  # () int32 next head cluster id
+    next_t: jax.Array  # () int32 next tail cluster id
+
+
+class ClusterResult(NamedTuple):
+    """Compacted output of clustering (input to the Stackelberg game)."""
+
+    v2c: jax.Array  # (V,) combined cluster id per vertex's *primary* table
+    v2c_h: jax.Array  # (V,) head cluster id in combined id space (-1 if none)
+    v2c_t: jax.Array  # (V,) tail cluster id in combined id space (-1 if none)
+    n_head: int  # number of head clusters (ids [0, n_head))
+    n_clusters: int  # total clusters; tail ids in [n_head, n_clusters)
+    is_head_vertex: jax.Array  # (V,) bool
+
+
+def init_state(n_vertices: int) -> ClusterState:
+    v = n_vertices
+    return ClusterState(
+        v2c_h=jnp.full((v,), -1, jnp.int32),
+        v2c_t=jnp.full((v,), -1, jnp.int32),
+        vol_h=jnp.zeros((v + 1,), jnp.int32),
+        vol_t=jnp.zeros((v + 1,), jnp.int32),
+        ld=jnp.zeros((v,), jnp.int32),
+        next_h=jnp.int32(0),
+        next_t=jnp.int32(0),
+    )
+
+
+def _edge_step(state: ClusterState, edge, *, degrees, xi, kappa, global_tail=False):
+    """One Algorithm-1 step.  ``edge`` = (u, v); branchless.
+
+    ``global_tail=True`` is the S5P-B variant (§5.3): tail clusters also use
+    allocation-time *global* degrees for volumes and migration amounts.
+    """
+    u, v = edge
+    sink = state.vol_h.shape[0] - 1  # masked-write sink slot
+    du = degrees[u]
+    dv = degrees[v]
+    is_head = (du > xi) & (dv > xi)
+    valid = u != v  # self loops are no-ops (paper graphs are simple)
+
+    # ---------------- head branch (global-degree volumes) ----------------
+    cu = state.v2c_h[u]
+    cv = state.v2c_h[v]
+    new_u = cu < 0
+    new_v = cv < 0
+    h_on = is_head & valid
+    # allocation: new ids, volume += global degree of the joining vertex
+    cu2 = jnp.where(new_u, state.next_h, cu)
+    next_h = state.next_h + jnp.where(h_on & new_u, 1, 0).astype(jnp.int32)
+    cv2 = jnp.where(new_v, next_h, cv)
+    next_h = next_h + jnp.where(h_on & new_v, 1, 0).astype(jnp.int32)
+    vol_h = state.vol_h
+    vol_h = vol_h.at[jnp.where(h_on & new_u, cu2, sink)].add(
+        jnp.where(h_on & new_u, du, 0)
+    )
+    vol_h = vol_h.at[jnp.where(h_on & new_v, cv2, sink)].add(
+        jnp.where(h_on & new_v, dv, 0)
+    )
+    v2c_h = state.v2c_h
+    v2c_h = v2c_h.at[u].set(jnp.where(h_on, cu2, v2c_h[u]))
+    v2c_h = v2c_h.at[v].set(jnp.where(h_on, cv2, v2c_h[v]))
+    # migration (lines 5-11): only when both volumes < κ
+    vu = vol_h[cu2]
+    vv = vol_h[cv2]
+    both_small = (vu < kappa) & (vv < kappa) & (cu2 != cv2)
+    # i = argmin_z vol(C[z]) - d(z); j = other
+    score_u = vu - du
+    score_v = vv - dv
+    u_is_i = score_u <= score_v  # tie → u (deterministic; matches reference)
+    ci = jnp.where(u_is_i, cu2, cv2)
+    cj = jnp.where(u_is_i, cv2, cu2)
+    i_vtx = jnp.where(u_is_i, u, v)
+    di = jnp.where(u_is_i, du, dv)
+    can_migrate = h_on & both_small & (vol_h[cj] + di < kappa)
+    vol_h = vol_h.at[jnp.where(can_migrate, cj, sink)].add(jnp.where(can_migrate, di, 0))
+    vol_h = vol_h.at[jnp.where(can_migrate, ci, sink)].add(jnp.where(can_migrate, -di, 0))
+    v2c_h = v2c_h.at[i_vtx].set(jnp.where(can_migrate, cj, v2c_h[i_vtx]))
+
+    # ---------------- tail branch (local-degree volumes) ----------------
+    t_on = (~is_head) & valid
+    tu = state.v2c_t[u]
+    tv = state.v2c_t[v]
+    tnew_u = tu < 0
+    tnew_v = tv < 0
+    tu2 = jnp.where(tnew_u, state.next_t, tu)
+    next_t = state.next_t + jnp.where(t_on & tnew_u, 1, 0).astype(jnp.int32)
+    tv2 = jnp.where(tnew_v, next_t, tv)
+    next_t = next_t + jnp.where(t_on & tnew_v, 1, 0).astype(jnp.int32)
+    vol_t = state.vol_t
+    ld = state.ld
+    if global_tail:
+        # S5P-B: allocation-time global-degree volumes (mirrors head branch)
+        vol_t = vol_t.at[jnp.where(t_on & tnew_u, tu2, sink)].add(
+            jnp.where(t_on & tnew_u, du, 0)
+        )
+        vol_t = vol_t.at[jnp.where(t_on & tnew_v, tv2, sink)].add(
+            jnp.where(t_on & tnew_v, dv, 0)
+        )
+    else:
+        # Update vol(·) by 1 and ld(·) by 1 for both endpoints (lines 14-15).
+        vol_t = vol_t.at[jnp.where(t_on, tu2, sink)].add(jnp.where(t_on, 1, 0))
+        vol_t = vol_t.at[jnp.where(t_on, tv2, sink)].add(jnp.where(t_on, 1, 0))
+        ld = ld.at[u].add(jnp.where(t_on, 1, 0))
+        ld = ld.at[v].add(jnp.where(t_on, 1, 0))
+    v2c_t = state.v2c_t.at[u].set(jnp.where(t_on, tu2, state.v2c_t[u]))
+    v2c_t = v2c_t.at[v].set(jnp.where(t_on, tv2, v2c_t[v]))
+    # migration (lines 16-21): i = argmin vol; move ld(i) units
+    tvu = vol_t[tu2]
+    tvv = vol_t[tv2]
+    t_small = (tvu < kappa) & (tvv < kappa) & (tu2 != tv2)
+    tu_is_i = tvu <= tvv
+    tci = jnp.where(tu_is_i, tu2, tv2)
+    tcj = jnp.where(tu_is_i, tv2, tu2)
+    ti_vtx = jnp.where(tu_is_i, u, v)
+    ldi = degrees[ti_vtx] if global_tail else ld[ti_vtx]
+    t_mig = t_on & t_small
+    if global_tail:
+        t_mig = t_mig & (vol_t[tcj] + ldi < kappa)
+    vol_t = vol_t.at[jnp.where(t_mig, tcj, sink)].add(jnp.where(t_mig, ldi, 0))
+    vol_t = vol_t.at[jnp.where(t_mig, tci, sink)].add(jnp.where(t_mig, -ldi, 0))
+    v2c_t = v2c_t.at[ti_vtx].set(jnp.where(t_mig, tcj, v2c_t[ti_vtx]))
+
+    return ClusterState(
+        v2c_h=v2c_h,
+        v2c_t=v2c_t,
+        vol_h=vol_h,
+        vol_t=vol_t,
+        ld=ld,
+        next_h=next_h,
+        next_t=next_t,
+    )
+
+
+@partial(jax.jit, static_argnames=("xi", "kappa", "global_tail"))
+def cluster_chunk(
+    state: ClusterState,
+    src: jax.Array,
+    dst: jax.Array,
+    degrees: jax.Array,
+    *,
+    xi: int,
+    kappa: int,
+    global_tail: bool = False,
+) -> ClusterState:
+    """Process one chunk of the edge stream through Algorithm 1."""
+
+    def body(s, e):
+        return (
+            _edge_step(s, e, degrees=degrees, xi=xi, kappa=kappa, global_tail=global_tail),
+            (),
+        )
+
+    state, _ = jax.lax.scan(body, state, (src, dst))
+    return state
+
+
+def cluster_stream(
+    src: jax.Array,
+    dst: jax.Array,
+    n_vertices: int,
+    *,
+    xi: int,
+    kappa: int,
+    chunk_size: int = 1 << 16,
+    global_tail: bool = False,
+) -> ClusterState:
+    """Run Algorithm 1 over the whole stream in fixed-size device chunks.
+
+    Only the O(|V|) carry persists between chunks — the streaming memory
+    contract.  Degrees are the one-pass global precompute.
+    """
+    src = jnp.asarray(src, jnp.int32)
+    dst = jnp.asarray(dst, jnp.int32)
+    degrees = compute_degrees(src, dst, n_vertices)
+    state = init_state(n_vertices)
+    n = src.shape[0]
+    for start in range(0, n, chunk_size):
+        stop = min(start + chunk_size, n)
+        s, d = src[start:stop], dst[start:stop]
+        if s.shape[0] < chunk_size and start > 0:
+            # pad tail chunk with self-loops (no-ops) to reuse the compiled scan
+            pad = chunk_size - s.shape[0]
+            s = jnp.concatenate([s, jnp.zeros((pad,), jnp.int32)])
+            d = jnp.concatenate([d, jnp.zeros((pad,), jnp.int32)])
+        state = cluster_chunk(
+            state, s, d, degrees, xi=xi, kappa=kappa, global_tail=global_tail
+        )
+    return state
+
+
+def compute_degrees(src: jax.Array, dst: jax.Array, n_vertices: int) -> jax.Array:
+    ones = jnp.ones_like(src)
+    deg = jax.ops.segment_sum(ones, src, num_segments=n_vertices)
+    deg = deg + jax.ops.segment_sum(ones, dst, num_segments=n_vertices)
+    return deg.astype(jnp.int32)
+
+
+def compact_clusters(state: ClusterState, degrees: jax.Array, xi: int) -> ClusterResult:
+    """Renumber head/tail clusters into one dense combined id space.
+
+    Head clusters keep ids [0, n_head); tail clusters are shifted to
+    [n_head, n_head + n_tail).  A vertex's *primary* cluster is its head
+    cluster if it has one (head vertices lead), else its tail cluster.
+    """
+    v2c_h = np.asarray(state.v2c_h)
+    v2c_t = np.asarray(state.v2c_t)
+    deg = np.asarray(degrees)
+
+    used_h = np.unique(v2c_h[v2c_h >= 0])
+    used_t = np.unique(v2c_t[v2c_t >= 0])
+    remap_h = np.full(int(state.next_h) + 1, -1, np.int32)
+    remap_h[used_h] = np.arange(used_h.size, dtype=np.int32)
+    remap_t = np.full(int(state.next_t) + 1, -1, np.int32)
+    remap_t[used_t] = np.arange(used_t.size, dtype=np.int32) + used_h.size
+
+    out_h = np.where(v2c_h >= 0, remap_h[np.maximum(v2c_h, 0)], -1).astype(np.int32)
+    out_t = np.where(v2c_t >= 0, remap_t[np.maximum(v2c_t, 0)], -1).astype(np.int32)
+    primary = np.where(out_h >= 0, out_h, out_t).astype(np.int32)
+    is_head_vertex = deg > xi
+
+    return ClusterResult(
+        v2c=jnp.asarray(primary),
+        v2c_h=jnp.asarray(out_h),
+        v2c_t=jnp.asarray(out_t),
+        n_head=int(used_h.size),
+        n_clusters=int(used_h.size + used_t.size),
+        is_head_vertex=jnp.asarray(is_head_vertex),
+    )
+
+
+# ---------------------------------------------------------------------------
+# Pure-Python transcription of Algorithm 1 — the oracle for property tests.
+# ---------------------------------------------------------------------------
+
+
+def reference_cluster_python(edges, n_vertices, xi, kappa):
+    """Direct sequential transcription of paper Algorithm 1 (line numbers in
+    comments refer to the paper listing).  Returns plain numpy state."""
+    v2c_h = np.full(n_vertices, -1, np.int64)
+    v2c_t = np.full(n_vertices, -1, np.int64)
+    vol_h = np.zeros(n_vertices + 1, np.int64)
+    vol_t = np.zeros(n_vertices + 1, np.int64)
+    ld = np.zeros(n_vertices, np.int64)
+    deg = np.zeros(n_vertices, np.int64)
+    for u, v in edges:
+        deg[u] += 1
+        deg[v] += 1
+    next_h = 0
+    next_t = 0
+    for u, v in edges:
+        if u == v:
+            continue
+        if deg[u] > xi and deg[v] > xi:  # head edge
+            if v2c_h[u] < 0:  # line 3: assign new id
+                v2c_h[u] = next_h
+                next_h += 1
+                vol_h[v2c_h[u]] += deg[u]  # line 4: update vol by d(u)
+            if v2c_h[v] < 0:
+                v2c_h[v] = next_h
+                next_h += 1
+                vol_h[v2c_h[v]] += deg[v]
+            cu, cv = v2c_h[u], v2c_h[v]
+            if vol_h[cu] < kappa and vol_h[cv] < kappa and cu != cv:  # line 5
+                # line 6: i = argmin vol(C[z]) - d(z); tie → u
+                if vol_h[cu] - deg[u] <= vol_h[cv] - deg[v]:
+                    i_vtx, ci, cj, di = u, cu, cv, deg[u]
+                else:
+                    i_vtx, ci, cj, di = v, cv, cu, deg[v]
+                if vol_h[cj] + di < kappa:  # line 8
+                    vol_h[cj] += di
+                    vol_h[ci] -= di
+                    v2c_h[i_vtx] = cj
+        else:  # tail edge
+            if v2c_t[u] < 0:  # line 13
+                v2c_t[u] = next_t
+                next_t += 1
+            if v2c_t[v] < 0:
+                v2c_t[v] = next_t
+                next_t += 1
+            vol_t[v2c_t[u]] += 1  # line 14: update vol by 1
+            vol_t[v2c_t[v]] += 1
+            ld[u] += 1  # line 15: update ld by 1
+            ld[v] += 1
+            tu, tv = v2c_t[u], v2c_t[v]
+            if vol_t[tu] < kappa and vol_t[tv] < kappa and tu != tv:  # line 16
+                if vol_t[tu] <= vol_t[tv]:  # line 17: i = argmin vol; tie → u
+                    i_vtx, ci, cj = u, tu, tv
+                else:
+                    i_vtx, ci, cj = v, tv, tu
+                ldi = ld[i_vtx]
+                vol_t[cj] += ldi  # lines 19-21 (unconditional in listing)
+                vol_t[ci] -= ldi
+                v2c_t[i_vtx] = cj
+    return dict(
+        v2c_h=v2c_h, v2c_t=v2c_t, vol_h=vol_h, vol_t=vol_t, ld=ld,
+        next_h=next_h, next_t=next_t, deg=deg,
+    )

@@ -1,0 +1,134 @@
+"""Count-Min Sketch (CMS) for inter-cluster edge counts (paper §4.4).
+
+The paper stores ``Θ(c_i, c_j)`` — the number of graph edges spanning cluster
+``c_i`` and cluster ``c_j`` — in a count-min sketch instead of an exact
+red-black tree, trading a one-sided, probabilistically-bounded overestimate
+for a ``w × d`` memory footprint (w = ⌈e/ε⌉, d = ⌈ln 1/ν⌉).
+
+TPU adaptation: the paper hashes the *string concatenation* of two cluster
+ids.  TPUs have no strings, so we hash the ordered integer pair with a
+xxhash-style 32-bit avalanche mix, one independent seed per sketch row.  All
+arithmetic is uint32 and jit/vmap/scan-friendly.  The sketch is *mergeable*
+(element-wise sum), which is what lets the distributed pipeline combine
+per-shard sketches with a single ``psum`` (see core/distributed.py).
+
+A Pallas TPU kernel for the batched update/query hot loop lives in
+``repro.kernels.cms_sketch``; this module is the reference implementation
+and the small-input path.
+"""
+
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "CMSketch",
+    "make_sketch",
+    "pair_key",
+    "cms_update",
+    "cms_query",
+    "cms_merge",
+    "suggest_params",
+]
+
+_GOLDEN = jnp.uint32(0x9E3779B1)
+_MIX1 = jnp.uint32(0x85EBCA6B)
+_MIX2 = jnp.uint32(0xC2B2AE35)
+
+
+class CMSketch(NamedTuple):
+    """A count-min sketch: ``table[d, w]`` of uint32 counts + row seeds."""
+
+    table: jax.Array  # (d, w) uint32
+    seeds: jax.Array  # (d,) uint32
+
+    @property
+    def depth(self) -> int:
+        return self.table.shape[0]
+
+    @property
+    def width(self) -> int:
+        return self.table.shape[1]
+
+    def memory_bytes(self) -> int:
+        return self.table.size * 4 + self.seeds.size * 4
+
+
+def suggest_params(epsilon: float = 0.1, nu: float = 0.01) -> tuple[int, int]:
+    """Paper §4.4: w = ⌈e/ε⌉, d = ⌈ln(1/ν)⌉ (ε=0.1, ν=0.01 ⇒ w=28, d=5)."""
+    w = math.ceil(math.e / epsilon)
+    d = math.ceil(math.log(1.0 / nu))
+    return w, d
+
+
+def make_sketch(width: int, depth: int, seed: int = 0) -> CMSketch:
+    seeds = jax.random.randint(
+        jax.random.PRNGKey(seed), (depth,), 1, 2**31 - 1, dtype=jnp.int32
+    ).astype(jnp.uint32)
+    return CMSketch(table=jnp.zeros((depth, width), dtype=jnp.uint32), seeds=seeds)
+
+
+def _avalanche(h: jax.Array) -> jax.Array:
+    """xxhash/murmur-style 32-bit finalizer: full avalanche on uint32."""
+    h = h ^ (h >> 16)
+    h = h * _MIX1
+    h = h ^ (h >> 13)
+    h = h * _MIX2
+    h = h ^ (h >> 16)
+    return h
+
+
+def pair_key(a: jax.Array, b: jax.Array) -> jax.Array:
+    """Order-insensitive uint32 key for a cluster-id pair.
+
+    The paper concatenates the two id strings; we mix ``(min, max)`` so that
+    (a, b) and (b, a) — the same undirected cluster adjacency — collide on
+    purpose.
+    """
+    a = a.astype(jnp.uint32)
+    b = b.astype(jnp.uint32)
+    lo = jnp.minimum(a, b)
+    hi = jnp.maximum(a, b)
+    h = lo * _GOLDEN
+    h = _avalanche(h ^ hi)
+    return h
+
+
+def _row_cols(keys: jax.Array, seeds: jax.Array, width: int) -> jax.Array:
+    """Column index for every (row, key): shape (d, n)."""
+    # broadcast: (d, 1) seeds vs (n,) keys
+    h = _avalanche(keys[None, :] ^ seeds[:, None] * _GOLDEN)
+    return (h % jnp.uint32(width)).astype(jnp.int32)
+
+
+@partial(jax.jit, static_argnames=())
+def cms_update(sketch: CMSketch, keys: jax.Array, counts: jax.Array | None = None) -> CMSketch:
+    """Add ``counts`` (default 1) at ``keys``; batched, scatter-add per row."""
+    if counts is None:
+        counts = jnp.ones_like(keys, dtype=jnp.uint32)
+    counts = counts.astype(jnp.uint32)
+    cols = _row_cols(keys, sketch.seeds, sketch.width)  # (d, n)
+    d = sketch.table.shape[0]
+    rows = jnp.broadcast_to(jnp.arange(d, dtype=jnp.int32)[:, None], cols.shape)
+    table = sketch.table.at[rows.reshape(-1), cols.reshape(-1)].add(
+        jnp.broadcast_to(counts[None, :], cols.shape).reshape(-1)
+    )
+    return CMSketch(table=table, seeds=sketch.seeds)
+
+
+@partial(jax.jit, static_argnames=())
+def cms_query(sketch: CMSketch, keys: jax.Array) -> jax.Array:
+    """Point query: min over rows — one-sided (over-)estimate of the count."""
+    cols = _row_cols(keys, sketch.seeds, sketch.width)  # (d, n)
+    vals = jnp.take_along_axis(sketch.table, cols, axis=1)  # (d, n)
+    return jnp.min(vals, axis=0)
+
+
+def cms_merge(a: CMSketch, b: CMSketch) -> CMSketch:
+    """Merge two sketches built with identical seeds (element-wise sum)."""
+    return CMSketch(table=a.table + b.table, seeds=a.seeds)

@@ -1,0 +1,108 @@
+"""Edge-placement postprocessing (paper Algorithm 3).
+
+After the game fixes the cluster→partition map ``C2P``, a final streaming
+pass assigns every edge to a concrete partition under the hard capacity
+``L = ⌈τ|E|/k⌉``:
+
+- both endpoint partitions over capacity → skew-aware overflow: **head**
+  edges take the *first* partition with room, **tail** edges the *last*
+  (minimizing the spread of head vertices across partitions, per §4.3);
+- otherwise the *less-loaded* of the two endpoint partitions (Alg. 3
+  lines 9-10; the prose says "larger size" but the listing places into
+  the smaller — we follow the listing, which is the balance-preserving
+  reading; recorded in DESIGN.md).
+
+Implemented as a jitted ``lax.scan`` with an O(k) carry (the load vector),
+streamed in chunks like Algorithm 1.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["assign_edges", "assign_edges_stream"]
+
+
+@partial(jax.jit, static_argnames=("k",))
+def _assign_chunk(load, max_load, src, dst, is_head_edge, cu, cv, c2p, *, k: int):
+    """One streamed chunk of Algorithm 3.  Returns (load, parts)."""
+    arange = jnp.arange(k, dtype=jnp.int32)
+    L = max_load
+
+    def step(load, edge):
+        head, pcu, pcv, valid = edge
+        over_u = load[pcu] >= L
+        over_v = load[pcv] >= L
+        room = load < L
+        any_room = jnp.any(room)
+        first_room = jnp.argmax(room).astype(jnp.int32)
+        last_room = (k - 1 - jnp.argmax(room[::-1])).astype(jnp.int32)
+        fallback = jnp.argmin(load).astype(jnp.int32)
+        overflow_choice = jnp.where(
+            any_room, jnp.where(head, first_room, last_room), fallback
+        )
+        # lines 9-10: more-loaded endpoint loses; tie → P_u (line 10 'else')
+        endpoint_choice = jnp.where(load[pcu] > load[pcv], pcv, pcu)
+        part = jnp.where(over_u & over_v, overflow_choice, endpoint_choice)
+        load = load + jnp.where(valid, (arange == part).astype(load.dtype), 0)
+        return load, jnp.where(valid, part, -1)
+
+    pcu = c2p[cu]
+    pcv = c2p[cv]
+    valid = src != dst
+    load, parts = jax.lax.scan(step, load, (is_head_edge, pcu, pcv, valid))
+    return load, parts
+
+
+def assign_edges_stream(
+    src: jax.Array,
+    dst: jax.Array,
+    is_head_edge: jax.Array,
+    cu: jax.Array,
+    cv: jax.Array,
+    c2p: jax.Array,
+    k: int,
+    max_load: int,
+    *,
+    chunk_size: int = 1 << 16,
+):
+    """Algorithm 3 over the full stream.  Returns (parts (E,), load (k,))."""
+    load = jnp.zeros((k,), jnp.int32)
+    ml = jnp.int32(max_load)
+    n = src.shape[0]
+    outs = []
+    for start in range(0, n, chunk_size):
+        stop = min(start + chunk_size, n)
+        sl = slice(start, stop)
+        s, d, h, a, b = src[sl], dst[sl], is_head_edge[sl], cu[sl], cv[sl]
+        if s.shape[0] < chunk_size and start > 0:
+            pad = chunk_size - s.shape[0]
+            z = jnp.zeros((pad,), jnp.int32)
+            s = jnp.concatenate([s, z])
+            d = jnp.concatenate([d, z])  # self-loops ⇒ masked out
+            h = jnp.concatenate([h, jnp.zeros((pad,), h.dtype)])
+            a = jnp.concatenate([a, z])
+            b = jnp.concatenate([b, z])
+        load, parts = _assign_chunk(load, ml, s, d, h, a, b, c2p, k=k)
+        outs.append(parts[: stop - start])
+    return jnp.concatenate(outs), load
+
+
+def assign_edges(
+    src,
+    dst,
+    is_head_edge,
+    cu,
+    cv,
+    c2p,
+    k: int,
+    max_load: int,
+):
+    """Single-shot convenience wrapper (no chunking)."""
+    return assign_edges_stream(
+        src, dst, is_head_edge, cu, cv, c2p, k, max_load,
+        chunk_size=max(int(src.shape[0]), 1),
+    )

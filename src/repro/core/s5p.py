@@ -1,0 +1,246 @@
+"""S5P — Skewness-aware Streaming Vertex-cut Partitioner (the paper's system).
+
+Pipeline (paper Fig. 2):
+
+  edge stream ──Alg.1──▶ head/tail clusters ──Alg.2──▶ cluster→partition
+              ──Alg.3──▶ edge→partition  (+ RF / balance metrics)
+
+Variants exposed here:
+- ``S5P``            — the full system (CMS-backed Θ counts by default);
+- ``S5P (exact Θ)``  — red-black-tree-equivalent exact counts (Fig. 9 ablation);
+- ``S5P-B``          — bounded variant of §5.3 (global degrees everywhere,
+                       no κ cap, no maxLoad) with the Theorem-2 RF bound;
+- ``one_stage=True`` — single-stage simultaneous game (Fig. 7d ablation).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+import time
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import clustering as _cl
+from . import game as _game
+from . import postprocess as _post
+from .cms import CMSketch, cms_query, cms_update, make_sketch, pair_key, suggest_params
+
+__all__ = ["S5PConfig", "S5POutput", "s5p_partition", "cluster_statistics"]
+
+_INT32_MAX = 2**31 - 1
+
+
+@dataclasses.dataclass(frozen=True)
+class S5PConfig:
+    k: int
+    tau: float = 1.0  # balance threshold (paper uses 1.0)
+    beta: float = 1.0  # ξ = β · avg_degree (paper recommends β = 1)
+    use_cms: bool = True
+    cms_epsilon: float = 0.1
+    cms_nu: float = 0.01
+    game_batch_size: int = 256
+    game_max_rounds: int = 64
+    game_accept_prob: float = 0.7
+    chunk_size: int = 1 << 16
+    bounded: bool = False  # S5P-B (§5.3)
+    one_stage: bool = False  # Fig. 7d ablation: no leader/follower split
+    seed: int = 0
+
+
+@dataclasses.dataclass
+class S5POutput:
+    parts: jax.Array  # (E,) int32 edge → partition
+    k: int
+    n_clusters: int
+    n_head_clusters: int
+    game_rounds: int
+    game_converged: bool
+    xi: int
+    kappa: int
+    max_load: int
+    cluster_assignment: np.ndarray  # (C,) cluster → partition
+    timings: dict[str, float]
+    aux: dict[str, Any]
+
+
+def _edge_clusters(src, dst, res: _cl.ClusterResult, degrees, xi):
+    """Per-edge (cu, cv, is_head_edge) from the compacted tables."""
+    is_head = (degrees[src] > xi) & (degrees[dst] > xi)
+    cu = jnp.where(is_head, res.v2c_h[src], res.v2c_t[src])
+    cv = jnp.where(is_head, res.v2c_h[dst], res.v2c_t[dst])
+    return cu, cv, is_head
+
+
+def cluster_statistics(
+    src,
+    dst,
+    res: _cl.ClusterResult,
+    degrees,
+    xi: int,
+    *,
+    use_cms: bool,
+    cms_epsilon: float,
+    cms_nu: float,
+    seed: int,
+    chunk_size: int = 1 << 18,
+):
+    """Stream pass 2: cluster sizes + inter-cluster adjacency Θ.
+
+    Sizes: an internal edge (cu == cv) contributes 1 to its cluster; a
+    boundary edge contributes ½ to each side (postprocess will place it at
+    one of the two — ½ is its expectation, keeping Σ|c| = |E|).
+
+    Θ counts: streamed into a count-min sketch (paper §4.4) or kept exact.
+    The *structural* pair list (which clusters are adjacent) is deduped
+    host-side; CMS replaces only the count storage — the paper's claim (and
+    our Fig. 9 benchmark) is about count-map memory, which dominates.
+
+    Cross-type adjacency: a head vertex belongs to *both* a head cluster and
+    (if it ever appears in a tail edge) a tail cluster.  An edge spans every
+    pair of endpoint memberships (paper §4.3's Θ over C_H ∪ C_T) — this is
+    the channel through which leader (head-cluster) moves steer followers;
+    without it the two stages of the Stackelberg game would decouple.
+    """
+    C = res.n_clusters
+    cu, cv, is_head = _edge_clusters(src, dst, res, degrees, xi)
+    valid = src != dst
+    internal = (cu == cv) & valid
+    boundary = (cu != cv) & valid
+
+    sizes = jax.ops.segment_sum(
+        jnp.where(internal, 1.0, 0.0), jnp.maximum(cu, 0), num_segments=C
+    )
+    sizes = sizes + jax.ops.segment_sum(
+        jnp.where(boundary, 0.5, 0.0), jnp.maximum(cu, 0), num_segments=C
+    )
+    sizes = sizes + jax.ops.segment_sum(
+        jnp.where(boundary, 0.5, 0.0), jnp.maximum(cv, 0), num_segments=C
+    )
+
+    # membership cross-product pairs: primary (cu, cv) + the other-type
+    # memberships of each endpoint (−1 ⇒ absent)
+    hu, hv = res.v2c_h[src], res.v2c_h[dst]
+    tu, tv = res.v2c_t[src], res.v2c_t[dst]
+    alt_u = jnp.where(is_head, tu, hu)  # u's membership in the *other* table
+    alt_v = jnp.where(is_head, tv, hv)
+    pair_sets = [
+        (cu, cv, valid),
+        (alt_u, cv, valid & (alt_u >= 0)),
+        (cu, alt_v, valid & (alt_v >= 0)),
+    ]
+    a_parts, b_parts = [], []
+    for a, b, ok in pair_sets:
+        ok = ok & (a != b) & (a >= 0) & (b >= 0)
+        a_parts.append(np.asarray(jnp.where(ok, jnp.minimum(a, b), C)))
+        b_parts.append(np.asarray(jnp.where(ok, jnp.maximum(a, b), C)))
+    a_np = np.concatenate(a_parts)
+    b_np = np.concatenate(b_parts)
+    keys = a_np.astype(np.int64) * (C + 1) + b_np
+    uniq, counts = np.unique(keys[a_np < C], return_counts=True)
+    pa = (uniq // (C + 1)).astype(np.int32)
+    pb = (uniq % (C + 1)).astype(np.int32)
+
+    sketch_mem = 0
+    if use_cms:
+        w, d = suggest_params(cms_epsilon, cms_nu)
+        sketch = make_sketch(w * max(1, int(math.sqrt(C))), d, seed=seed)
+        # stream the boundary edges through the sketch in chunks
+        ba = jnp.asarray(a_np[a_np < C])
+        bb = jnp.asarray(b_np[a_np < C])
+        n = ba.shape[0]
+        for start in range(0, n, chunk_size):
+            sl = slice(start, min(start + chunk_size, n))
+            sketch = cms_update(sketch, pair_key(ba[sl], bb[sl]))
+        pw = cms_query(sketch, pair_key(jnp.asarray(pa), jnp.asarray(pb))).astype(jnp.float32)
+        sketch_mem = sketch.memory_bytes()
+    else:
+        pw = jnp.asarray(counts, jnp.float32)
+
+    exact_mem = int(uniq.size) * (8 + 4)  # RBT-equivalent: key + count per pair
+    return sizes, jnp.asarray(pa), jnp.asarray(pb), pw, {
+        "n_pairs": int(uniq.size),
+        "sketch_bytes": sketch_mem,
+        "exact_count_bytes": exact_mem,
+        "counts_exact": counts,
+    }
+
+
+def s5p_partition(src, dst, n_vertices: int, config: S5PConfig) -> S5POutput:
+    src = jnp.asarray(src, jnp.int32)
+    dst = jnp.asarray(dst, jnp.int32)
+    E = int(src.shape[0])
+    k = config.k
+    timings: dict[str, float] = {}
+
+    degrees = _cl.compute_degrees(src, dst, n_vertices)
+    avg_deg = 2.0 * E / max(n_vertices, 1)
+    xi = min(int(config.beta * avg_deg), _INT32_MAX - 1)
+    kappa = _INT32_MAX if config.bounded else max(int(math.ceil(2.0 * E / k)), 2)
+
+    # ---- Phase 1: skewness-aware streaming clustering (Alg. 1) ----
+    t0 = time.perf_counter()
+    state = _cl.cluster_stream(
+        src, dst, n_vertices, xi=xi, kappa=kappa,
+        chunk_size=config.chunk_size, global_tail=config.bounded,
+    )
+    res = _cl.compact_clusters(state, degrees, xi)
+    timings["clustering"] = time.perf_counter() - t0
+
+    if res.n_clusters == 0:  # degenerate: no valid edges
+        return S5POutput(
+            parts=jnp.full((E,), -1, jnp.int32), k=k, n_clusters=0,
+            n_head_clusters=0, game_rounds=0, game_converged=True, xi=xi,
+            kappa=kappa, max_load=0, cluster_assignment=np.zeros(0, np.int32),
+            timings=timings, aux={},
+        )
+
+    # ---- Phase 2: Stackelberg game (Alg. 2) ----
+    t0 = time.perf_counter()
+    sizes, pa, pb, pw, stats = cluster_statistics(
+        src, dst, res, degrees, xi,
+        use_cms=config.use_cms, cms_epsilon=config.cms_epsilon,
+        cms_nu=config.cms_nu, seed=config.seed,
+    )
+    n_head = res.n_clusters if config.one_stage else res.n_head
+    inputs = _game.GameInputs(
+        sizes=sizes.astype(jnp.float32), pair_a=pa, pair_b=pb,
+        pair_w=pw.astype(jnp.float32), n_head=n_head, k=k,
+    )
+    # batch ≲ C/8: near-simultaneous sweeps over a small player set cycle
+    # (the potential argument needs mostly-sequential moves)
+    bs = max(16, min(config.game_batch_size, res.n_clusters // 8))
+    game = _game.run_game(
+        inputs, res.n_clusters,
+        batch_size=bs, max_rounds=config.game_max_rounds,
+        accept_prob=config.game_accept_prob, seed=config.seed,
+    )
+    timings["game"] = time.perf_counter() - t0
+
+    # ---- Phase 3: postprocess (Alg. 3) ----
+    t0 = time.perf_counter()
+    max_load = _INT32_MAX if config.bounded else int(math.ceil(config.tau * E / k))
+    cu, cv, is_head = _edge_clusters(src, dst, res, degrees, xi)
+    parts, load = _post.assign_edges_stream(
+        src, dst, is_head, jnp.maximum(cu, 0), jnp.maximum(cv, 0),
+        game.assignment, k, max_load, chunk_size=config.chunk_size,
+    )
+    timings["postprocess"] = time.perf_counter() - t0
+
+    return S5POutput(
+        parts=parts,
+        k=k,
+        n_clusters=res.n_clusters,
+        n_head_clusters=res.n_head,
+        game_rounds=int(game.rounds),
+        game_converged=bool(game.converged),
+        xi=xi,
+        kappa=kappa,
+        max_load=max_load,
+        cluster_assignment=np.asarray(game.assignment),
+        timings=timings,
+        aux=stats,
+    )

@@ -1,0 +1,1 @@
+from .pipeline import TokenPipeline, RecsysPipeline, Prefetcher  # noqa: F401

@@ -1,0 +1,96 @@
+"""Step-addressable synthetic data pipelines + host prefetch.
+
+Every pipeline is a pure function of (seed, step) — the property the
+fault-tolerant loop relies on for bitwise resume: replaying step s after a
+restart yields the identical batch, so optimizer state trajectories match
+exactly (tested).
+
+``Prefetcher`` overlaps host batch synthesis with device compute (the
+standard double-buffering trick; on real hardware this hides input
+latency — one of the distributed-optimization items of DESIGN.md §5).
+"""
+
+from __future__ import annotations
+
+import queue
+import threading
+from typing import Callable, Iterator
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["TokenPipeline", "RecsysPipeline", "Prefetcher"]
+
+
+class TokenPipeline:
+    """Zipf-distributed token batches (LM pretraining stand-in)."""
+
+    def __init__(self, vocab: int, batch: int, seq: int, seed: int = 0,
+                 zipf_a: float = 1.2):
+        self.vocab, self.batch, self.seq, self.seed = vocab, batch, seq, seed
+        self.zipf_a = zipf_a
+
+    def __call__(self, step: int) -> dict:
+        rng = np.random.default_rng((self.seed, step))
+        toks = rng.zipf(self.zipf_a, (self.batch, self.seq + 1)) % self.vocab
+        toks = toks.astype(np.int32)
+        return {"tokens": jnp.asarray(toks[:, :-1]),
+                "targets": jnp.asarray(toks[:, 1:])}
+
+
+class RecsysPipeline:
+    """Click-log batches: power-law feature ids + logistic labels."""
+
+    def __init__(self, vocabs: tuple[int, ...], batch: int, seed: int = 0):
+        self.vocabs, self.batch, self.seed = vocabs, batch, seed
+
+    def __call__(self, step: int) -> dict:
+        rng = np.random.default_rng((self.seed, step))
+        cols = []
+        for v in self.vocabs:
+            z = rng.zipf(1.3, self.batch) % v
+            cols.append(z.astype(np.int32))
+        ids = np.stack(cols, axis=1)
+        # labels correlate with a fixed random hash of field 0 (learnable)
+        h = (ids[:, 0] * 2654435761 % 97) / 97.0
+        labels = (rng.random(self.batch) < 0.15 + 0.5 * h).astype(np.float32)
+        return {"field_ids": jnp.asarray(ids), "labels": jnp.asarray(labels)}
+
+
+class Prefetcher:
+    """Double-buffered host → device prefetch around any step-addressable fn."""
+
+    def __init__(self, fn: Callable[[int], dict], depth: int = 2):
+        self.fn = fn
+        self.depth = depth
+        self._q: queue.Queue = queue.Queue(maxsize=depth)
+        self._next = 0
+        self._thread: threading.Thread | None = None
+
+    def start(self, start_step: int = 0) -> None:
+        self._next = start_step
+        self._stop = False
+
+        def work():
+            s = start_step
+            while not self._stop:
+                self._q.put((s, self.fn(s)))
+                s += 1
+
+        self._thread = threading.Thread(target=work, daemon=True)
+        self._thread.start()
+
+    def __call__(self, step: int) -> dict:
+        if self._thread is None:
+            return self.fn(step)
+        while True:
+            s, batch = self._q.get()
+            if s == step:
+                return batch
+            # restart/seek: fall back to direct synthesis
+            if s > step:
+                return self.fn(step)
+
+    def stop(self):
+        self._stop = True

@@ -1,0 +1,1 @@
+from .engine import GASGraph, build_gas_graph, pagerank, CommStats  # noqa: F401

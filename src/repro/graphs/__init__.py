@@ -1,0 +1,9 @@
+from .generators import (  # noqa: F401
+    rmat_graph,
+    powerlaw_graph,
+    erdos_renyi_graph,
+    toy_graph_fig3,
+    graph_skewness,
+)
+from .sampler import NeighborSampler, build_csr  # noqa: F401
+from .datasets import cora_like, ogbn_products_like, molecule_batch  # noqa: F401

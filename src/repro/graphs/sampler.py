@@ -1,0 +1,125 @@
+"""Neighbor sampling for large-graph minibatch GNN training (minibatch_lg).
+
+A real fanout sampler (GraphSAGE-style, e.g. 15-10): seed nodes →
+uniformly sample up to ``fanout[h]`` neighbors per hop from a CSR adjacency,
+emitting a padded subgraph with fixed shapes so the jitted train step never
+recompiles.  Runs on host (numpy) and feeds the device pipeline — the same
+split production GNN systems use (sampler on CPU, model on accelerator).
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import numpy as np
+
+__all__ = ["CSRGraph", "build_csr", "SampledSubgraph", "NeighborSampler"]
+
+
+class CSRGraph(NamedTuple):
+    indptr: np.ndarray  # (V+1,)
+    indices: np.ndarray  # (E,)
+    n_vertices: int
+
+
+def build_csr(src: np.ndarray, dst: np.ndarray, n_vertices: int,
+              symmetrize: bool = True) -> CSRGraph:
+    if symmetrize:
+        s = np.concatenate([src, dst])
+        d = np.concatenate([dst, src])
+    else:
+        s, d = src, dst
+    order = np.argsort(s, kind="stable")
+    s, d = s[order], d[order]
+    indptr = np.zeros(n_vertices + 1, np.int64)
+    np.add.at(indptr, s + 1, 1)
+    indptr = np.cumsum(indptr)
+    return CSRGraph(indptr=indptr, indices=d.astype(np.int32), n_vertices=n_vertices)
+
+
+class SampledSubgraph(NamedTuple):
+    """Fixed-shape padded subgraph for one minibatch."""
+
+    nodes: np.ndarray  # (max_nodes,) global node ids (padded with 0)
+    node_mask: np.ndarray  # (max_nodes,) bool
+    edge_src: np.ndarray  # (max_edges,) local indices into `nodes`
+    edge_dst: np.ndarray  # (max_edges,)
+    edge_mask: np.ndarray  # (max_edges,) bool
+    seed_count: int  # seeds occupy nodes[:seed_count]
+
+
+class NeighborSampler:
+    """Uniform fanout sampler with fixed padded output shapes."""
+
+    def __init__(self, graph: CSRGraph, fanouts: tuple[int, ...], batch_nodes: int,
+                 seed: int = 0):
+        self.graph = graph
+        self.fanouts = tuple(fanouts)
+        self.batch_nodes = batch_nodes
+        self.rng = np.random.default_rng(seed)
+        # fixed budget: seeds + seeds*f1 + seeds*f1*f2 + ...
+        n = batch_nodes
+        self.max_nodes = batch_nodes
+        self.max_edges = 0
+        for f in self.fanouts:
+            e = n * f
+            self.max_edges += e
+            n = e
+            self.max_nodes += e
+
+    def sample(self, seeds: np.ndarray | None = None) -> SampledSubgraph:
+        g = self.graph
+        if seeds is None:
+            seeds = self.rng.choice(g.n_vertices, size=self.batch_nodes, replace=False)
+        seeds = np.asarray(seeds, np.int64)
+
+        nodes: list[np.ndarray] = [seeds]
+        local_of: dict[int, int] = {int(v): i for i, v in enumerate(seeds)}
+        e_src: list[int] = []
+        e_dst: list[int] = []
+        frontier = seeds
+        for f in self.fanouts:
+            deg = g.indptr[frontier + 1] - g.indptr[frontier]
+            next_frontier = []
+            for v, dv in zip(frontier, deg):
+                if dv == 0:
+                    continue
+                start = g.indptr[v]
+                take = min(f, int(dv))
+                picks = self.rng.choice(int(dv), size=take, replace=False)
+                nbrs = g.indices[start + picks]
+                lv = local_of[int(v)]
+                for nb in nbrs:
+                    nbi = int(nb)
+                    li = local_of.get(nbi)
+                    if li is None:
+                        li = len(local_of)
+                        local_of[nbi] = li
+                        next_frontier.append(nbi)
+                    # message flows neighbor → center
+                    e_src.append(li)
+                    e_dst.append(lv)
+            frontier = np.asarray(next_frontier, np.int64)
+            if frontier.size:
+                nodes.append(frontier)
+            if frontier.size == 0:
+                break
+
+        all_nodes = np.concatenate(nodes) if len(nodes) > 1 else nodes[0]
+        n_real = all_nodes.size
+        n_edges = len(e_src)
+        out_nodes = np.zeros(self.max_nodes, np.int32)
+        out_nodes[:n_real] = all_nodes[: self.max_nodes]
+        node_mask = np.zeros(self.max_nodes, bool)
+        node_mask[: min(n_real, self.max_nodes)] = True
+        es = np.zeros(self.max_edges, np.int32)
+        ed = np.zeros(self.max_edges, np.int32)
+        emask = np.zeros(self.max_edges, bool)
+        ne = min(n_edges, self.max_edges)
+        es[:ne] = np.asarray(e_src[:ne], np.int32)
+        ed[:ne] = np.asarray(e_dst[:ne], np.int32)
+        emask[:ne] = True
+        return SampledSubgraph(
+            nodes=out_nodes, node_mask=node_mask, edge_src=es, edge_dst=ed,
+            edge_mask=emask, seed_count=self.batch_nodes,
+        )

@@ -1,0 +1,5 @@
+"""Pallas TPU kernels (pl.pallas_call + BlockSpec) for the hot paths.
+
+Each subpackage: kernel.py (the Pallas kernel), ops.py (jit wrapper with
+interpret-mode fallback on CPU), ref.py (pure-jnp oracle for tests).
+"""

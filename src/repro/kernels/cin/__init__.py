@@ -1,0 +1,2 @@
+from .ops import cin_layer_kernel  # noqa: F401
+from .ref import cin_layer_ref  # noqa: F401

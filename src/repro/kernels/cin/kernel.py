@@ -1,0 +1,61 @@
+"""Pallas TPU kernel for the xDeepFM CIN layer.
+
+CIN step: ``out[b, h', d] = Σ_{h,m} W[h·m, h'] · xk[b,h,d] · x0[b,m,d]``.
+
+TPU adaptation: grid over (batch tiles × embed-dim columns).  Per step the
+(bt, Hk) × (bt, m) outer product along one embed column is flattened to a
+(bt, Hk·m) matrix and contracted with W on the **MXU** — the op becomes a
+dense GEMM per embedding column, which is exactly how the original 1×1-conv
+formulation maps to a systolic array.  Blocks: xk (bt, Hk, 1), x0 (bt, m, 1),
+W (Hk·m, H') resident, out (bt, H', 1).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = ["cin_layer_tpu"]
+
+
+def _cin_kernel(xk_ref, x0_ref, w_ref, o_ref):
+    xk = xk_ref[..., 0].astype(jnp.float32)  # (bt, Hk)
+    x0 = x0_ref[..., 0].astype(jnp.float32)  # (bt, m)
+    z = xk[:, :, None] * x0[:, None, :]  # (bt, Hk, m)
+    bt = z.shape[0]
+    zf = z.reshape(bt, -1)  # (bt, Hk·m)
+    out = jax.lax.dot_general(
+        zf, w_ref[...].astype(jnp.float32), (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )  # (bt, H')
+    o_ref[...] = out[..., None].astype(o_ref.dtype)
+
+
+def cin_layer_tpu(xk, x0, w, *, batch_block=256, interpret=None):
+    """xk: (B, Hk, D); x0: (B, m, D); w: (Hk·m, H') → (B, H', D)."""
+    if interpret is None:
+        interpret = jax.default_backend() == "cpu"
+    B, Hk, D = xk.shape
+    m = x0.shape[1]
+    Hn = w.shape[1]
+    pad = (-B) % batch_block
+    if pad:
+        xk = jnp.pad(xk, ((0, pad), (0, 0), (0, 0)))
+        x0 = jnp.pad(x0, ((0, pad), (0, 0), (0, 0)))
+    nb = xk.shape[0] // batch_block
+    out = pl.pallas_call(
+        _cin_kernel,
+        grid=(nb, D),
+        in_specs=[
+            pl.BlockSpec((batch_block, Hk, 1), lambda b, d: (b, 0, d)),
+            pl.BlockSpec((batch_block, m, 1), lambda b, d: (b, 0, d)),
+            pl.BlockSpec((Hk * m, Hn), lambda b, d: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((batch_block, Hn, 1), lambda b, d: (b, 0, d)),
+        out_shape=jax.ShapeDtypeStruct((nb * batch_block, Hn, D), xk.dtype),
+        interpret=interpret,
+    )(xk, x0, w)
+    return out[:B]

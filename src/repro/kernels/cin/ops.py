@@ -1,0 +1,14 @@
+"""Jit wrapper for the CIN Pallas kernel."""
+
+from functools import partial
+
+import jax
+
+from .kernel import cin_layer_tpu
+
+__all__ = ["cin_layer_kernel"]
+
+
+@partial(jax.jit, static_argnames=("batch_block", "interpret"))
+def cin_layer_kernel(xk, x0, w, *, batch_block=256, interpret=None):
+    return cin_layer_tpu(xk, x0, w, batch_block=batch_block, interpret=interpret)

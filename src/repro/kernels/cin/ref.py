@@ -1,0 +1,7 @@
+"""Oracle: the jnp CIN layer from the model (identical math)."""
+
+from ...models.recsys import _cin_layer
+
+
+def cin_layer_ref(xk, x0, w):
+    return _cin_layer(xk, x0, w)

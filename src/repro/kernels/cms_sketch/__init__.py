@@ -1,0 +1,1 @@
+from .ops import cms_update_kernel, cms_query_kernel  # noqa: F401

@@ -1,0 +1,126 @@
+"""Pallas TPU kernel for batched count-min-sketch update / query.
+
+The paper's §4.4 hot loop: every streamed edge posts its cluster-pair key
+into a (d × w) sketch.  TPU adaptation: per key block, the per-row column
+histogram is built with a **one-hot compare against a column iota** and
+reduced on the VPU — no scatter (TPU-hostile) anywhere:
+
+    update:  table[r] += Σ_n  (cols[r, n] == iota_w)
+    query:   est[n]    = min_r Σ_w table[r] · (cols[r, n] == iota_w)
+
+Grid: key blocks; the (d, w) table block is revisited every step
+(accumulator output).  Hashing is the same uint32 avalanche as
+``repro.core.cms`` (bit-exact — tests compare against it).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = ["cms_update_tpu", "cms_query_tpu"]
+
+# plain ints: jnp constants at module scope would be captured closures,
+# which pallas kernels reject — cast at use instead
+_GOLDEN = 0x9E3779B1
+_MIX1 = 0x85EBCA6B
+_MIX2 = 0xC2B2AE35
+
+
+def _avalanche(h):
+    h = h ^ (h >> 16)
+    h = h * jnp.uint32(_MIX1)
+    h = h ^ (h >> 13)
+    h = h * jnp.uint32(_MIX2)
+    h = h ^ (h >> 16)
+    return h
+
+
+def _cols(keys, seeds, width):
+    """(n,) keys × (d,) seeds → (d, n) int32 columns."""
+    h = _avalanche(keys[None, :] ^ seeds[:, None] * jnp.uint32(_GOLDEN))
+    return (h % jnp.uint32(width)).astype(jnp.int32)
+
+
+def _update_kernel(keys_ref, counts_ref, seeds_ref, table_ref, *, width, n_blocks):
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _init():
+        table_ref[...] = jnp.zeros_like(table_ref)
+
+    keys = keys_ref[...]
+    counts = counts_ref[...].astype(jnp.uint32)
+    seeds = seeds_ref[...]
+    cols = _cols(keys, seeds, width)  # (d, n)
+    iota = jax.lax.broadcasted_iota(jnp.int32, (width,), 0)
+    # histogram per row: (d, w) += Σ_n onehot(cols) · counts
+    onehot = (cols[:, :, None] == iota[None, None, :]).astype(jnp.uint32)
+    table_ref[...] += jnp.sum(onehot * counts[None, :, None], axis=1)
+
+
+def _query_kernel(keys_ref, seeds_ref, table_ref, out_ref, *, width):
+    keys = keys_ref[...]
+    seeds = seeds_ref[...]
+    cols = _cols(keys, seeds, width)  # (d, n)
+    iota = jax.lax.broadcasted_iota(jnp.int32, (width,), 0)
+    onehot = (cols[:, :, None] == iota[None, None, :]).astype(jnp.uint32)
+    vals = jnp.sum(onehot * table_ref[...][:, None, :], axis=2)  # (d, n)
+    out_ref[...] = jnp.min(vals, axis=0)
+
+
+def cms_update_tpu(keys, seeds, width, depth, counts=None, *, block=1024,
+                   interpret=None):
+    """keys: (N,) uint32 → (depth, width) uint32 table."""
+    if interpret is None:
+        interpret = jax.default_backend() == "cpu"
+    n = keys.shape[0]
+    if counts is None:
+        counts = jnp.ones((n,), jnp.uint32)
+    pad = (-n) % block
+    if pad:
+        keys = jnp.pad(keys, (0, pad))
+        counts = jnp.pad(counts, (0, pad))
+    n_blocks = keys.shape[0] // block
+    kernel = functools.partial(_update_kernel, width=width, n_blocks=n_blocks)
+    return pl.pallas_call(
+        kernel,
+        grid=(n_blocks,),
+        in_specs=[
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((depth,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((depth, width), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((depth, width), jnp.uint32),
+        interpret=interpret,
+    )(keys, counts, seeds)
+
+
+def cms_query_tpu(table, keys, seeds, *, block=1024, interpret=None):
+    """Point queries: (N,) keys → (N,) uint32 min-estimates."""
+    if interpret is None:
+        interpret = jax.default_backend() == "cpu"
+    depth, width = table.shape
+    n = keys.shape[0]
+    pad = (-n) % block
+    if pad:
+        keys = jnp.pad(keys, (0, pad))
+    n_blocks = keys.shape[0] // block
+    kernel = functools.partial(_query_kernel, width=width)
+    out = pl.pallas_call(
+        kernel,
+        grid=(n_blocks,),
+        in_specs=[
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((depth,), lambda i: (0,)),
+            pl.BlockSpec((depth, width), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((block,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((n_blocks * block,), jnp.uint32),
+        interpret=interpret,
+    )(keys, seeds, table)
+    return out[:n]

@@ -1,0 +1,17 @@
+"""Drop-in CMSketch ops backed by the Pallas kernel."""
+
+from __future__ import annotations
+
+from ...core.cms import CMSketch
+from .kernel import cms_query_tpu, cms_update_tpu
+
+__all__ = ["cms_update_kernel", "cms_query_kernel"]
+
+
+def cms_update_kernel(sketch: CMSketch, keys, counts=None) -> CMSketch:
+    delta = cms_update_tpu(keys, sketch.seeds, sketch.width, sketch.depth, counts)
+    return CMSketch(table=sketch.table + delta, seeds=sketch.seeds)
+
+
+def cms_query_kernel(sketch: CMSketch, keys):
+    return cms_query_tpu(sketch.table, keys, sketch.seeds)

@@ -1,0 +1,17 @@
+"""Oracle: repro.core.cms is the reference implementation (same hashing)."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from ...core.cms import CMSketch, cms_query, cms_update
+
+
+def update_ref(keys, seeds, width, depth, counts=None):
+    sk = CMSketch(table=jnp.zeros((depth, width), jnp.uint32), seeds=seeds)
+    sk = cms_update(sk, keys, counts)
+    return sk.table
+
+
+def query_ref(table, keys, seeds):
+    return cms_query(CMSketch(table=table, seeds=seeds), keys)

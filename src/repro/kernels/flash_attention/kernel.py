@@ -1,0 +1,126 @@
+"""Pallas TPU flash-attention kernel (forward).
+
+Grid: (batch·kv_head, q_blocks, kv_blocks) — the kv axis is innermost, so
+the output block is revisited across kv steps and the online-softmax
+running state lives in VMEM scratch (the canonical TPU flash layout).
+
+BlockSpecs tile everything into VMEM:
+  q:   (1, block_q, G·hd)     — one (batch, kv-head) group's q block
+  k/v: (1, block_k, hd)
+  out: (1, block_q, G·hd)
+
+MXU alignment: block_q/block_k multiples of 128 (the wrapper pads), hd is
+128 for every assigned LM arch.  Masking (causal / sliding window /
+padding) is computed from block-relative iotas — no mask tensor is ever
+materialized in HBM.
+
+Backward uses the custom-VJP recompute path of
+``repro.models.attention`` (same math); the kernel accelerates the
+forward hot loop.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["flash_attention_fwd"]
+
+_NEG = -1e30
+
+
+def _fa_kernel(qpos_ref, kpos_ref, q_ref, k_ref, v_ref, o_ref,
+               m_ref, l_ref, acc_ref, *, causal, window, block_q, block_k,
+               n_kv_blocks, scale):
+    kv_i = pl.program_id(2)
+
+    @pl.when(kv_i == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, _NEG)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0]  # (block_q, G*hd)
+    k = k_ref[0]  # (block_k, hd)
+    v = v_ref[0]
+    hd = k.shape[-1]
+    g = q.shape[-1] // hd
+    qh = (q.reshape(block_q * g, hd) * scale).astype(q.dtype)
+    s = jax.lax.dot_general(
+        qh, k, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )  # (block_q*g, block_k)
+
+    qp = qpos_ref[0]  # (block_q,)
+    kp = kpos_ref[0]  # (block_k,)
+    qp = jnp.repeat(qp, g)  # (block_q*g,) — rows grouped per query
+    dp = qp[:, None] - kp[None, :]
+    ok = kp[None, :] >= 0
+    if causal:
+        ok = ok & (dp >= 0)
+    if window is not None:
+        ok = ok & (dp < window)
+    s = jnp.where(ok, s, _NEG)
+
+    m_prev = m_ref[...]
+    l_prev = l_ref[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+    p = jnp.exp(s - m_new)
+    corr = jnp.exp(m_prev - m_new)
+    l_new = l_prev * corr + jnp.sum(p, axis=-1, keepdims=True)
+    pv = jax.lax.dot_general(
+        p.astype(v.dtype), v, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )  # (block_q*g, hd)
+    acc_ref[...] = acc_ref[...] * corr + pv
+    m_ref[...] = m_new
+    l_ref[...] = l_new
+
+    @pl.when(kv_i == n_kv_blocks - 1)
+    def _finalize():
+        out = acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0] = out.reshape(block_q, g * hd).astype(o_ref.dtype)
+
+
+def flash_attention_fwd(q, k, v, q_pos, kv_pos, *, causal=True, window=None,
+                        block_q=128, block_k=128, interpret=False):
+    """q: (BK, S, G·hd) grouped per (batch × kv-head); k/v: (BK, T, hd).
+
+    The ops.py wrapper folds (B, H, KV) into this layout and unfolds the
+    result.  S % block_q == 0 and T % block_k == 0 (wrapper pads).
+    """
+    BK, S, Ghd = q.shape
+    T, hd = k.shape[1], k.shape[2]
+    g = Ghd // hd
+    n_q = S // block_q
+    n_kv = T // block_k
+    scale = hd ** -0.5
+
+    kernel = functools.partial(
+        _fa_kernel, causal=causal, window=window, block_q=block_q,
+        block_k=block_k, n_kv_blocks=n_kv, scale=scale,
+    )
+    grid = (BK, n_q, n_kv)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, block_q), lambda b, i, j: (b, i)),  # q_pos
+            pl.BlockSpec((1, block_k), lambda b, i, j: (b, j)),  # kv_pos
+            pl.BlockSpec((1, block_q, Ghd), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((1, block_k, hd), lambda b, i, j: (b, j, 0)),
+            pl.BlockSpec((1, block_k, hd), lambda b, i, j: (b, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, Ghd), lambda b, i, j: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((BK, S, Ghd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q * g, 1), jnp.float32),   # running max m
+            pltpu.VMEM((block_q * g, 1), jnp.float32),   # running denom l
+            pltpu.VMEM((block_q * g, hd), jnp.float32),  # output accumulator
+        ],
+        interpret=interpret,
+    )(q_pos, kv_pos, q, k, v)

@@ -1,0 +1,58 @@
+"""Jit wrapper: model layout (B, S, H, hd) ↔ kernel layout (B·KV, S, G·hd).
+
+On CPU (this container) ``interpret=True`` executes the kernel body in
+Python for validation; on TPU the same call compiles to Mosaic.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import flash_attention_fwd
+
+__all__ = ["flash_attention_tpu"]
+
+
+def _is_cpu() -> bool:
+    return jax.default_backend() == "cpu"
+
+
+@partial(jax.jit, static_argnames=("causal", "window", "block_q", "block_k",
+                                   "interpret"))
+def flash_attention_tpu(q, k, v, q_pos, kv_pos, *, causal=True, window=None,
+                        block_q=128, block_k=128, interpret=None):
+    """q: (B, S, H, hd); k/v: (B, T, KV, hd); positions (B, S)/(B, T)."""
+    if interpret is None:
+        interpret = _is_cpu()
+    B, S, H, hd = q.shape
+    T, KV = k.shape[1], k.shape[2]
+    G = H // KV
+    # fold (B, KV) and group the G q-heads per kv head
+    qk = q.reshape(B, S, KV, G, hd).transpose(0, 2, 1, 3, 4).reshape(
+        B * KV, S, G * hd)
+    kk = k.transpose(0, 2, 1, 3).reshape(B * KV, T, hd)
+    vk = v.transpose(0, 2, 1, 3).reshape(B * KV, T, hd)
+    qp = jnp.repeat(q_pos, KV, axis=0).reshape(B * KV, S) if q_pos.shape[0] == B \
+        else q_pos
+    kp = jnp.repeat(kv_pos, KV, axis=0).reshape(B * KV, T) if kv_pos.shape[0] == B \
+        else kv_pos
+    # pad to block multiples
+    pads = (-S) % block_q
+    padt = (-T) % block_k
+    if pads:
+        qk = jnp.pad(qk, ((0, 0), (0, pads), (0, 0)))
+        qp = jnp.pad(qp, ((0, 0), (0, pads)), constant_values=-(2**30))
+    if padt:
+        kk = jnp.pad(kk, ((0, 0), (0, padt), (0, 0)))
+        vk = jnp.pad(vk, ((0, 0), (0, padt), (0, 0)))
+        kp = jnp.pad(kp, ((0, 0), (0, padt)), constant_values=-(2**30))
+    out = flash_attention_fwd(
+        qk, kk, vk, qp, kp, causal=causal, window=window,
+        block_q=block_q, block_k=block_k, interpret=interpret,
+    )
+    out = out[:, :S]
+    return out.reshape(B, KV, S, G, hd).transpose(0, 2, 1, 3, 4).reshape(
+        B, S, H, hd)

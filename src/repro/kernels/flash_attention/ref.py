@@ -1,0 +1,26 @@
+"""Pure-jnp oracle for the flash-attention kernel: direct softmax attention."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def attention_ref(q, k, v, q_pos, kv_pos, *, causal=True, window=None):
+    """q: (BK, S, G·hd); k/v: (BK, T, hd) — same grouped layout as the kernel."""
+    BK, S, Ghd = q.shape
+    T, hd = k.shape[1], k.shape[2]
+    g = Ghd // hd
+    qh = q.reshape(BK, S * g, hd).astype(jnp.float32) * (hd ** -0.5)
+    s = jnp.einsum("bqh,bth->bqt", qh, k.astype(jnp.float32))
+    qp = jnp.repeat(q_pos, g, axis=1)  # (BK, S*g)
+    dp = qp[:, :, None] - kv_pos[:, None, :]
+    ok = kv_pos[:, None, :] >= 0
+    if causal:
+        ok = ok & (dp >= 0)
+    if window is not None:
+        ok = ok & (dp < window)
+    s = jnp.where(ok, s, -1e30)
+    p = jnp.exp(s - jnp.max(s, axis=-1, keepdims=True))
+    p = p / jnp.maximum(jnp.sum(p, axis=-1, keepdims=True), 1e-30)
+    out = jnp.einsum("bqt,bth->bqh", p, v.astype(jnp.float32))
+    return out.reshape(BK, S, Ghd).astype(q.dtype)

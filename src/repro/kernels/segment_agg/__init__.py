@@ -1,0 +1,2 @@
+from .ops import segment_aggregate  # noqa: F401
+from .ref import segment_agg_ref  # noqa: F401

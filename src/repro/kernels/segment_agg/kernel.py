@@ -1,0 +1,73 @@
+"""Pallas TPU kernel: fused gather → weight → segment-sum (GNN aggregation).
+
+The message-passing primitive ``out[dst] += w_e · x[src]`` with edges
+**pre-sorted by destination** (CSR order — the data pipeline emits this).
+TPU adaptation (taxonomy §GNN / GE-SpMM): no scatter — each grid step owns
+one *destination-row tile* and reduces its own edge bucket:
+
+  grid step t:
+    edges [t·eb, (t+1)·eb) — a fixed-size bucket whose dst rows all fall in
+    [t·rb, (t+1)·rb)  (host-side bucketing pads with masked edges);
+    gather x[src] rows one edge at a time (dynamic scalar VMEM indexing),
+    accumulate into a (rb, d) VMEM scratch via a local one-hot reduce,
+    write the tile once.
+
+The feature table block must fit VMEM, so ops.py tiles the feature dim and
+falls back to ``jax.ops.segment_sum`` above the VMEM node budget (the
+fallback *is* the oracle).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = ["segment_agg_tpu"]
+
+
+def _seg_kernel(src_ref, dstloc_ref, w_ref, x_ref, o_ref, *, edge_block,
+                row_block, d):
+    # gather per edge; accumulate with one-hot reduce over the local rows
+    rows = jax.lax.broadcasted_iota(jnp.int32, (row_block,), 0)
+    acc = jnp.zeros((row_block, d), jnp.float32)
+
+    def body(j, acc):
+        s = src_ref[j]
+        dl = dstloc_ref[j]
+        wj = w_ref[j]
+        xrow = x_ref[s, :].astype(jnp.float32) * wj
+        onehot = (rows == dl).astype(jnp.float32)  # dl < 0 ⇒ no row matches
+        return acc + onehot[:, None] * xrow[None, :]
+
+    acc = jax.lax.fori_loop(0, edge_block, body, acc)
+    o_ref[...] = acc.astype(o_ref.dtype)
+
+
+def segment_agg_tpu(x, src, dst_local, w, n_rows, *, edge_block, row_block,
+                    interpret=None):
+    """x: (V, d) feature table (fits one VMEM block); src: (E,) int32;
+    dst_local: (E,) int32 — dst − tile_base, or −1 for padding;
+    w: (E,) f32 edge weights.  E = n_tiles·edge_block, n_rows = n_tiles·row_block.
+    """
+    if interpret is None:
+        interpret = jax.default_backend() == "cpu"
+    V, d = x.shape
+    n_tiles = n_rows // row_block
+    kernel = functools.partial(_seg_kernel, edge_block=edge_block,
+                               row_block=row_block, d=d)
+    return pl.pallas_call(
+        kernel,
+        grid=(n_tiles,),
+        in_specs=[
+            pl.BlockSpec((edge_block,), lambda t: (t,)),
+            pl.BlockSpec((edge_block,), lambda t: (t,)),
+            pl.BlockSpec((edge_block,), lambda t: (t,)),
+            pl.BlockSpec((V, d), lambda t: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((row_block, d), lambda t: (t, 0)),
+        out_shape=jax.ShapeDtypeStruct((n_rows, d), x.dtype),
+        interpret=interpret,
+    )(src, dst_local, w, x)

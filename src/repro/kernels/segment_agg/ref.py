@@ -1,0 +1,15 @@
+"""Oracle: plain gather + segment_sum."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def segment_agg_ref(x, src, dst, w, n_rows):
+    """out[dst] += w · x[src]; dst < 0 rows are dropped (padding)."""
+    msg = x[src].astype(jnp.float32) * w[:, None]
+    msg = jnp.where((dst >= 0)[:, None], msg, 0.0)
+    return jax.ops.segment_sum(
+        msg, jnp.maximum(dst, 0), num_segments=n_rows
+    ).astype(x.dtype)

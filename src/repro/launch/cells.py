@@ -1,0 +1,604 @@
+"""Cell construction: (architecture × input shape) → lowerable step.
+
+A *cell* bundles everything the dry-run / smoke tests / trainers need:
+
+- ``step_fn``      — the jittable step (train_step or serve_step);
+- ``state_shape``  / ``batch_shape`` — abstract ShapeDtypeStructs (no
+  allocation; the dry-run lowers directly from these);
+- ``state_axes``   / ``batch_axes`` — logical sharding axes per leaf,
+  resolved against the active mesh by repro.sharding;
+- ``rules``        — per-cell logical→mesh overrides (e.g. long_500k maps
+  the rolling KV window over every axis, batch=1 cells unmap "batch");
+- ``init_state`` / ``make_batch`` — concrete constructors for smoke tests
+  and the example trainers;
+- ``model_flops`` — analytic FLOPs per step for §Roofline.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from functools import partial
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..configs import ArchSpec, get_arch
+from ..models import gnn as G
+from ..models import lm as LM
+from ..models import recsys as R
+from ..optim import AdamWConfig, adamw_update, init_state as opt_init, make_train_step
+from ..sharding import DEFAULT_RULES
+
+__all__ = ["Cell", "build_cell", "SMOKE_OVERRIDES"]
+
+f32, bf16, i32 = jnp.float32, jnp.bfloat16, jnp.int32
+
+
+@dataclasses.dataclass
+class Cell:
+    arch: str
+    shape: str
+    kind: str
+    step_fn: Callable
+    state_shape: Any  # pytree of ShapeDtypeStruct or None (serve cells)
+    batch_shape: tuple  # positional args after state
+    state_axes: Any
+    batch_axes: tuple
+    rules: dict
+    init_state: Callable[[jax.Array], Any]
+    make_batch: Callable[[jax.Array], tuple]
+    model_flops: float
+    donate: tuple = ()
+    out_axes: Any = None  # logical sharding for outputs (None ⇒ XLA's choice)
+    attn_block: Any = None  # (q_chunk, kv_chunk) for VMEM-adjusted memory
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def _axes_like(tree, fn):
+    """Map (path, leaf) → logical axes tuple over a pytree."""
+    return jax.tree_util.tree_map_with_path(fn, tree)
+
+
+def _path_str(path) -> str:
+    return "/".join(
+        str(getattr(p, "key", getattr(p, "idx", p))) for p in path
+    )
+
+
+# ---------------------------------------------------------------------------
+# logical axes per family
+# ---------------------------------------------------------------------------
+
+
+def _lm_param_axes(path, leaf):
+    p = _path_str(path)
+    nd = len(leaf.shape)
+    if "embed" in p:
+        return ("mlp", "fsdp")
+    if "lm_head" in p:
+        return ("fsdp", "mlp")
+    if any(k in p for k in ("wq", "wk", "wv")):
+        return (None, "fsdp", "mlp")
+    if "wo" in p:
+        return (None, "mlp", "fsdp")
+    if any(k in p for k in ("bq", "bk", "bv")):
+        return (None, "mlp")
+    if "router" in p:
+        return (None, "fsdp", None)
+    if any(k in p for k in ("w_gate", "w_up")):
+        return (None, "expert", "fsdp", "mlp") if nd == 4 else (None, "fsdp", "mlp")
+    if "w_down" in p:
+        return (None, "expert", "mlp", "fsdp") if nd == 4 else (None, "mlp", "fsdp")
+    return (None,) * nd
+
+
+def _rec_param_axes(path, leaf):
+    p = _path_str(path)
+    nd = len(leaf.shape)
+    if "tables" in p and nd == 2:
+        return ("rows", None)
+    return (None,) * nd
+
+
+def _replicated_axes(path, leaf):
+    return (None,) * len(leaf.shape)
+
+
+def _state_axes(params_axes):
+    """TrainState(params, mu, nu, step) axes from a params axes tree."""
+    from ..optim.adamw import TrainState
+
+    return TrainState(params=params_axes, mu=params_axes, nu=params_axes, step=())
+
+
+# ---------------------------------------------------------------------------
+# LM cells
+# ---------------------------------------------------------------------------
+
+
+def _lm_cell(arch: ArchSpec, shape_name: str, shp: dict, cfg: LM.LMConfig) -> Cell:
+    S, B = shp["seq"], shp["batch"]
+    opt = AdamWConfig()
+    kind = shp["kind"]
+    n_tok = B * S
+    attn_block = (min(cfg.attn_chunk // 2, max(S, 8)),
+                  min(cfg.attn_chunk, max(S, 8)), cfg.d_head)
+
+    if kind == "lm_train":
+        step = make_train_step(LM.loss_fn, cfg, opt)
+        params_s = jax.eval_shape(lambda: LM.init_params(cfg, jax.random.PRNGKey(0)))
+        state_s = jax.eval_shape(lambda: opt_init_from(params_s))
+        batch_s = ({"tokens": _sds((B, S), i32), "targets": _sds((B, S), i32)},)
+        p_axes = _axes_like(params_s, _lm_param_axes)
+        batch_axes = ({"tokens": ("batch", "seq"), "targets": ("batch", "seq")},)
+        # tokens fully sharded: batch over (data, model), sequence over pod —
+        # the remat stash is structurally 512-way sharded (DESIGN.md §5)
+        train_rules = {"batch": ("data", "model"), "seq": ("pod",)}
+
+        def init_state(key):
+            return opt_init(LM.init_params(cfg, key))
+
+        def make_batch(key):
+            t = jax.random.randint(key, (B, S), 0, cfg.vocab, dtype=i32)
+            return ({"tokens": t, "targets": jnp.roll(t, -1, axis=1)},)
+
+        return Cell(
+            arch=arch.name, shape=shape_name, kind=kind, step_fn=step,
+            state_shape=state_s, batch_shape=batch_s,
+            state_axes=_state_axes(p_axes), batch_axes=batch_axes,
+            rules=train_rules, init_state=init_state, make_batch=make_batch,
+            model_flops=LM.model_flops(cfg, n_tok, train=True),
+            donate=(0,), attn_block=attn_block,
+        )
+
+    params_s = jax.eval_shape(lambda: LM.init_params(cfg, jax.random.PRNGKey(0)))
+    p_axes = _axes_like(params_s, _lm_param_axes)
+    serve_rules = {"fsdp": ()}  # serving: TP only, no per-layer weight gather
+
+    if kind == "lm_prefill":
+        def step(params, tokens):
+            return LM.prefill(params, tokens, cfg, max_seq=S)
+
+        batch_s = (_sds((B, S), i32),)
+        batch_axes = (("batch", None),)
+
+        def init_state(key):
+            return LM.init_params(cfg, key)
+
+        def make_batch(key):
+            return (jax.random.randint(key, (B, S), 0, cfg.vocab, dtype=i32),)
+
+        W = min(S, cfg.sliding_window) if cfg.sliding_window else S
+        cache_out_axes = {
+            "k": (None, "batch", "kv_seq", None, None),
+            "v": (None, "batch", "kv_seq", None, None),
+            "pos": (None, "batch", "kv_seq"),
+        }
+        return Cell(
+            arch=arch.name, shape=shape_name, kind=kind, step_fn=step,
+            state_shape=params_s, batch_shape=batch_s, state_axes=p_axes,
+            batch_axes=batch_axes, rules={**serve_rules, "kv_seq": ("model",)},
+            init_state=init_state, make_batch=make_batch,
+            model_flops=LM.model_flops(cfg, n_tok, train=False),
+            out_axes=(("batch", None), cache_out_axes),
+            attn_block=attn_block,
+        )
+
+    # decode: one token against a seq_len cache (rolling window under SWA)
+    W = min(S, cfg.sliding_window) if cfg.sliding_window else S
+    L, KV, hd = cfg.n_layers, cfg.n_kv_heads, cfg.d_head
+
+    def step(params, cache, tokens, pos):
+        return LM.decode_step(params, cache, tokens, pos, cfg)
+
+    cache_s = {
+        "k": _sds((L, B, W, KV, hd), cfg.dtype),
+        "v": _sds((L, B, W, KV, hd), cfg.dtype),
+        "pos": _sds((L, B, W), i32),
+    }
+    batch_s = (cache_s, _sds((B,), i32), _sds((B,), i32))
+    cache_axes = {
+        "k": (None, "batch", "kv_seq", None, None),
+        "v": (None, "batch", "kv_seq", None, None),
+        "pos": (None, "batch", "kv_seq"),
+    }
+    batch_axes = (cache_axes, ("batch",), ("batch",))
+    rules = dict(serve_rules)
+    rules["kv_seq"] = ("model",)
+    if B == 1:  # long_500k: latency cell — spread the window over everything
+        rules["batch"] = ()
+        rules["kv_seq"] = ("pod", "data", "model")
+
+    def init_state(key):
+        return LM.init_params(cfg, key)
+
+    def make_batch(key):
+        cache = LM.init_cache(cfg, B, S)
+        # pretend the cache is fully prefilled
+        pos0 = jnp.broadcast_to(jnp.arange(W, dtype=i32), (L, B, W))
+        cache["pos"] = pos0 + (S - W)
+        toks = jax.random.randint(key, (B,), 0, cfg.vocab, dtype=i32)
+        return (cache, toks, jnp.full((B,), S, i32))
+
+    return Cell(
+        arch=arch.name, shape=shape_name, kind=kind, step_fn=step,
+        state_shape=params_s, batch_shape=batch_s, state_axes=p_axes,
+        batch_axes=batch_axes, rules=rules, init_state=init_state,
+        make_batch=make_batch,
+        model_flops=LM.model_flops(cfg, B, train=False),
+        donate=(1,),
+    )
+
+
+def opt_init_from(params_shapes):
+    """eval_shape-compatible TrainState construction."""
+    from ..optim.adamw import TrainState
+
+    zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params_shapes)
+    return TrainState(params=jax.tree.map(lambda p: jnp.zeros(p.shape, p.dtype),
+                                          params_shapes),
+                      mu=zeros, nu=zeros, step=jnp.int32(0))
+
+
+# ---------------------------------------------------------------------------
+# GNN cells
+# ---------------------------------------------------------------------------
+
+_GNN_FNS = {
+    "gcn-cora": (G.gcn_init, G.gcn_loss),
+    "schnet": (G.schnet_init, G.schnet_loss),
+    "egnn": (G.egnn_init, G.egnn_loss),
+    "dimenet": (G.dimenet_init, G.dimenet_loss),
+}
+
+
+def _pad512(n: int) -> int:
+    """Explicit in_shardings need exact divisibility — pad counts to the
+    512-chip lcm (padding is masked; the data pipeline pads identically)."""
+    return -(-n // 512) * 512
+
+
+def _gnn_batch_spec(arch: ArchSpec, shp: dict, cfg) -> tuple[dict, dict]:
+    """(abstract batch, logical axes) for one GNN shape."""
+    kind = shp["kind"]
+    name = arch.name
+    if kind == "gnn_full":
+        V = _pad512(shp["n_nodes"])
+        E = _pad512(shp["n_edges"] // 2)  # assigned counts are directed
+        b: dict[str, Any] = {
+            "edge_src": _sds((E,), i32), "edge_dst": _sds((E,), i32),
+            "edge_mask": _sds((E,), f32), "node_mask": _sds((V,), f32),
+        }
+        a: dict[str, Any] = {"edge_src": ("edges",), "edge_dst": ("edges",),
+                             "edge_mask": ("edges",), "node_mask": ("nodes",)}
+        if name == "gcn-cora":
+            b["feats"] = _sds((V, shp["d_feat"]), f32)
+            b["labels"] = _sds((V,), i32)
+            b["label_mask"] = _sds((V,), f32)
+            a |= {"feats": ("nodes", None), "labels": ("nodes",),
+                  "label_mask": ("nodes",)}
+        else:
+            b["species"] = _sds((V,), i32)
+            b["positions"] = _sds((V, 3), f32)
+            b["targets"] = _sds((1,), f32)
+            a |= {"species": ("nodes",), "positions": ("nodes", None),
+                  "targets": (None,)}
+            if name == "dimenet":
+                T = 2 * E
+                b |= {"tri_kj": _sds((T,), i32), "tri_ji": _sds((T,), i32),
+                      "tri_mask": _sds((T,), f32)}
+                a |= {"tri_kj": ("edges",), "tri_ji": ("edges",),
+                      "tri_mask": ("edges",)}
+        return b, a
+    if kind == "gnn_minibatch":
+        seeds, fan = shp["batch_nodes"], shp["fanout"]
+        n = seeds
+        max_nodes, max_edges = seeds, 0
+        for f in fan:
+            n *= f
+            max_edges += n
+            max_nodes += n
+        max_nodes = _pad512(max_nodes)
+        max_edges = _pad512(max_edges)
+        b = {
+            "edge_src": _sds((max_edges,), i32), "edge_dst": _sds((max_edges,), i32),
+            "edge_mask": _sds((max_edges,), f32), "node_mask": _sds((max_nodes,), f32),
+        }
+        a = {"edge_src": ("edges",), "edge_dst": ("edges",),
+             "edge_mask": ("edges",), "node_mask": ("nodes",)}
+        if name == "gcn-cora":
+            b |= {"feats": _sds((max_nodes, shp["d_feat"]), f32),
+                  "labels": _sds((max_nodes,), i32),
+                  "label_mask": _sds((max_nodes,), f32)}
+            a |= {"feats": ("nodes", None), "labels": ("nodes",),
+                  "label_mask": ("nodes",)}
+        else:
+            b |= {"species": _sds((max_nodes,), i32),
+                  "positions": _sds((max_nodes, 3), f32),
+                  "targets": _sds((1,), f32)}
+            a |= {"species": ("nodes",), "positions": ("nodes", None),
+                  "targets": (None,)}
+            if name == "dimenet":
+                T = 2 * max_edges
+                b |= {"tri_kj": _sds((T,), i32), "tri_ji": _sds((T,), i32),
+                      "tri_mask": _sds((T,), f32)}
+                a |= {"tri_kj": ("edges",), "tri_ji": ("edges",),
+                      "tri_mask": ("edges",)}
+        return b, a
+    # molecule: batched small graphs, flattened with graph_idx
+    Bm, N, Em = shp["batch"], shp["n_nodes"], shp["n_edges"]
+    V, E = _pad512(Bm * N), _pad512(Bm * Em)
+    b = {
+        "edge_src": _sds((E,), i32), "edge_dst": _sds((E,), i32),
+        "edge_mask": _sds((E,), f32), "node_mask": _sds((V,), f32),
+        "graph_idx": _sds((V,), i32), "n_graphs": Bm,
+    }
+    a = {"edge_src": ("edges",), "edge_dst": ("edges",),
+         "edge_mask": ("edges",), "node_mask": ("nodes",),
+         "graph_idx": ("nodes",), "n_graphs": None}
+    if name == "gcn-cora":
+        b |= {"feats": _sds((V, cfg.d_feat), f32), "labels": _sds((Bm,), f32)}
+        a |= {"feats": ("nodes", None), "labels": (None,)}
+    else:
+        b |= {"species": _sds((V,), i32), "positions": _sds((V, 3), f32),
+              "targets": _sds((Bm,), f32)}
+        a |= {"species": ("nodes",), "positions": ("nodes", None),
+              "targets": (None,)}
+        if name == "dimenet":
+            T = 4 * E
+            b |= {"tri_kj": _sds((T,), i32), "tri_ji": _sds((T,), i32),
+                  "tri_mask": _sds((T,), f32)}
+            a |= {"tri_kj": ("edges",), "tri_ji": ("edges",), "tri_mask": ("edges",)}
+    return b, a
+
+
+def _gnn_flops(arch: ArchSpec, shp: dict, cfg) -> float:
+    """Analytic per-step training FLOPs (fwd+bwd ≈ 3× fwd matmuls)."""
+    kind = shp["kind"]
+    if kind == "gnn_full":
+        V, E = shp["n_nodes"], shp["n_edges"] // 2
+    elif kind == "gnn_minibatch":
+        seeds, fan = shp["batch_nodes"], shp["fanout"]
+        n, E, V = seeds, 0, seeds
+        for f in fan:
+            n *= f
+            E += n
+            V += n
+    else:
+        V = shp["batch"] * shp["n_nodes"]
+        E = shp["batch"] * shp["n_edges"]
+    name = arch.name
+    if name == "gcn-cora":
+        d_in = shp.get("d_feat", 16)
+        fwd = 2 * V * d_in * cfg.d_hidden + 2 * V * cfg.d_hidden * cfg.n_classes + 4 * E * cfg.d_hidden
+    elif name == "schnet":
+        d = cfg.d_hidden
+        fwd = cfg.n_interactions * (2 * E * cfg.n_rbf * d + 2 * E * d * d + 4 * V * d * d) + 2 * E * cfg.n_rbf
+    elif name == "egnn":
+        d = cfg.d_hidden
+        fwd = cfg.n_layers * (2 * E * (2 * d + 1) * d + 2 * E * d * d + 4 * V * d * d)
+    else:  # dimenet
+        d = cfg.d_hidden
+        T = (4 if kind == "gnn_molecule" else 2) * E
+        fwd = cfg.n_blocks * (
+            2 * E * d * d  # w_src
+            + T * cfg.n_bilinear * d * d * 2  # bilinear einsum
+            + 4 * E * d * d  # post mlp
+        ) + 2 * E * cfg.n_radial * d
+    return 3.0 * fwd
+
+
+def _gnn_cell(arch: ArchSpec, shape_name: str, shp: dict, cfg) -> Cell:
+    init_fn, loss = _GNN_FNS[arch.name]
+    opt = AdamWConfig()
+    kind = shp["kind"]
+
+    if arch.name == "gcn-cora":
+        # first-layer width is a dataset property: follow the shape's d_feat
+        d_feat = shp.get("d_feat", cfg.d_feat)
+        if kind == "gnn_molecule":
+            d_feat = cfg.d_feat
+        cfg = dataclasses.replace(cfg, d_feat=d_feat)
+
+    if arch.name == "gcn-cora" and kind == "gnn_molecule":
+        # graph-level regression head over pooled node outputs
+        def loss(params, batch, cfg):  # noqa: F811
+            out = G.gcn_forward(params, batch["feats"], batch["edge_src"],
+                                batch["edge_dst"], batch["feats"].shape[0], cfg,
+                                batch.get("edge_mask"))
+            if "node_mask" in batch:
+                out = out * batch["node_mask"][:, None]
+            pooled = jax.ops.segment_sum(out, batch["graph_idx"],
+                                         num_segments=batch["n_graphs"])
+            pred = jnp.mean(pooled, axis=-1)
+            return jnp.mean(jnp.square(pred - batch["labels"])), {}
+
+    step = make_train_step(loss, cfg, opt)
+    params_s = jax.eval_shape(lambda: init_fn(cfg, jax.random.PRNGKey(0)))
+    state_s = jax.eval_shape(lambda: opt_init_from(params_s))
+    p_axes = _axes_like(params_s, _replicated_axes)
+    batch, axes = _gnn_batch_spec(arch, shp, cfg)
+    static = {k: v for k, v in batch.items() if not hasattr(v, "shape")}
+    batch_arrs = {k: v for k, v in batch.items() if hasattr(v, "shape")}
+    arr_axes = {k: axes[k] for k in batch_arrs}
+
+    def step_wrapped(state, b):
+        return step(state, {**b, **static})
+
+    def init_state(key):
+        return opt_init(init_fn(cfg, key))
+
+    def make_batch(key):
+        ks = jax.random.split(key, 8)
+        out = {}
+        for i, (k, sds) in enumerate(sorted(batch_arrs.items())):
+            if sds.dtype == i32:
+                n_nodes = batch_arrs.get("node_mask", batch_arrs["edge_src"]).shape[0]
+                hi = {"edge_src": n_nodes, "edge_dst": n_nodes,
+                      "species": 10, "labels": 4,
+                      "graph_idx": static.get("n_graphs", 1)}.get(k, 4)
+                if k.startswith("tri_"):
+                    hi = batch_arrs["edge_src"].shape[0]
+                out[k] = jax.random.randint(ks[i % 8], sds.shape, 0, max(hi, 1),
+                                            dtype=i32)
+            else:
+                out[k] = jax.random.normal(ks[i % 8], sds.shape, dtype=sds.dtype)
+        for k in ("edge_mask", "node_mask", "label_mask", "tri_mask"):
+            if k in out:
+                out[k] = jnp.ones_like(out[k])
+        return (out,)
+
+    return Cell(
+        arch=arch.name, shape=shape_name, kind=kind, step_fn=step_wrapped,
+        state_shape=state_s, batch_shape=(batch_arrs,),
+        state_axes=_state_axes(p_axes), batch_axes=(arr_axes,),
+        rules={}, init_state=init_state, make_batch=make_batch,
+        model_flops=_gnn_flops(arch, shp, cfg), donate=(0,),
+    )
+
+
+# ---------------------------------------------------------------------------
+# RecSys cells
+# ---------------------------------------------------------------------------
+
+
+def _rec_cell(arch: ArchSpec, shape_name: str, shp: dict, cfg) -> Cell:
+    opt = AdamWConfig()
+    kind = shp["kind"]
+    B = shp["batch"]
+    params_s = jax.eval_shape(lambda: R.xdeepfm_init(cfg, jax.random.PRNGKey(0)))
+    p_axes = _axes_like(params_s, _rec_param_axes)
+    vocabs = cfg.vocabs()
+
+    def rand_ids(key, batch):
+        cols = [
+            jax.random.randint(jax.random.fold_in(key, f), (batch, 1), 0, v, dtype=i32)
+            for f, v in enumerate(vocabs)
+        ]
+        return jnp.concatenate(cols, axis=1)
+
+    # analytic flops: CIN dominates
+    m, D = cfg.n_fields, cfg.embed_dim
+    cin_f = 0
+    h_prev = m
+    for h in cfg.cin_layers:
+        cin_f += 2 * B * h_prev * m * D + 2 * B * h_prev * m * h * D
+        h_prev = h
+    mlp_f = 0
+    d_in = m * D
+    for d_out in cfg.mlp_dims:
+        mlp_f += 2 * B * d_in * d_out
+        d_in = d_out
+    fwd = cin_f + mlp_f
+
+    if kind == "rec_train":
+        step = make_train_step(R.xdeepfm_loss, cfg, opt)
+        state_s = jax.eval_shape(lambda: opt_init_from(params_s))
+        batch_s = ({"field_ids": _sds((B, cfg.n_fields), i32),
+                    "labels": _sds((B,), f32)},)
+        batch_axes = ({"field_ids": ("batch", None), "labels": ("batch",)},)
+
+        def init_state(key):
+            return opt_init(R.xdeepfm_init(cfg, key))
+
+        def make_batch(key):
+            k1, k2 = jax.random.split(key)
+            return ({"field_ids": rand_ids(k1, B),
+                     "labels": (jax.random.uniform(k2, (B,)) < 0.3).astype(f32)},)
+
+        return Cell(
+            arch=arch.name, shape=shape_name, kind=kind, step_fn=step,
+            state_shape=state_s, batch_shape=batch_s,
+            state_axes=_state_axes(p_axes), batch_axes=batch_axes, rules={},
+            init_state=init_state, make_batch=make_batch, model_flops=3.0 * fwd,
+            donate=(0,),
+        )
+
+    if kind == "rec_serve":
+        def step(params, ids):
+            return R.xdeepfm_forward(params, ids, cfg)
+
+        batch_s = (_sds((B, cfg.n_fields), i32),)
+        batch_axes = (("batch", None),)
+
+        def init_state(key):
+            return R.xdeepfm_init(cfg, key)
+
+        def make_batch(key):
+            return (rand_ids(key, B),)
+
+        return Cell(
+            arch=arch.name, shape=shape_name, kind=kind, step_fn=step,
+            state_shape=params_s, batch_shape=batch_s, state_axes=p_axes,
+            batch_axes=batch_axes, rules={}, init_state=init_state,
+            make_batch=make_batch, model_flops=fwd,
+        )
+
+    # retrieval: 1 query × n_candidates batched dot + top-k
+    N = shp["n_candidates"]
+
+    def step(params, ids, cand):
+        return R.retrieval_scores(params, ids, cand, cfg, top_k=100)
+
+    batch_s = (_sds((B, cfg.n_fields), i32), _sds((N, cfg.embed_dim), f32))
+    batch_axes = (("batch", None), ("rows", None))
+    rules = {"batch": ()} if B == 1 else {}
+
+    def init_state(key):
+        return R.xdeepfm_init(cfg, key)
+
+    def make_batch(key):
+        k1, k2 = jax.random.split(key)
+        return (rand_ids(k1, B), jax.random.normal(k2, (N, cfg.embed_dim), f32))
+
+    return Cell(
+        arch=arch.name, shape=shape_name, kind=kind, step_fn=step,
+        state_shape=params_s, batch_shape=batch_s, state_axes=p_axes,
+        batch_axes=batch_axes, rules=rules, init_state=init_state,
+        make_batch=make_batch, model_flops=2.0 * B * N * cfg.embed_dim,
+    )
+
+
+# ---------------------------------------------------------------------------
+# public entry
+# ---------------------------------------------------------------------------
+
+SMOKE_OVERRIDES = {
+    "lm_train": dict(seq=64, batch=2),
+    "lm_prefill": dict(seq=64, batch=2),
+    "lm_decode": dict(seq=128, batch=2),
+    "gnn_full": dict(n_nodes=128, n_edges=512, d_feat=32),
+    "gnn_minibatch": dict(n_nodes=512, n_edges=2048, batch_nodes=8,
+                          fanout=(3, 2), d_feat=32),
+    "gnn_molecule": dict(batch=4, n_nodes=8, n_edges=12),
+    "rec_train": dict(batch=16),
+    "rec_serve": dict(batch=16),
+    "rec_retrieval": dict(batch=1, n_candidates=512),
+}
+
+
+def build_cell(arch_name: str, shape_name: str, smoke: bool = False) -> Cell:
+    arch = get_arch(arch_name)
+    if shape_name in arch.skips:
+        raise ValueError(
+            f"{arch_name} × {shape_name} is a documented skip: {arch.skips[shape_name]}"
+        )
+    shp = dict(arch.shapes[shape_name])
+    cfg = arch.smoke_config if smoke else arch.config
+    if smoke:
+        shp.update({k: v for k, v in SMOKE_OVERRIDES[shp["kind"]].items() if k in shp
+                    or k in ("seq", "batch", "n_nodes", "n_edges", "d_feat",
+                             "batch_nodes", "fanout", "n_candidates")})
+        if arch.family == "gnn" and arch.name == "gcn-cora":
+            shp["d_feat"] = cfg.d_feat
+    if arch.family == "lm":
+        return _lm_cell(arch, shape_name, shp, cfg)
+    if arch.family == "gnn":
+        return _gnn_cell(arch, shape_name, shp, cfg)
+    return _rec_cell(arch, shape_name, shp, cfg)

@@ -1,0 +1,150 @@
+import os
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    + os.environ.get("XLA_FLAGS", "")
+)
+
+"""Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell.
+
+For each cell this proves, without hardware:
+- the sharding config is coherent (SPMD partitioner accepts it);
+- it fits (``compiled.memory_analysis()`` per-device bytes);
+- the cost terms for §Roofline (``cost_analysis()`` + collective bytes
+  parsed from the optimized HLO, with while-body trip-count correction for
+  the scanned layer stack — see repro/roofline).
+
+Usage:
+  python -m repro.launch.dryrun --arch llama3-8b --shape train_4k --mesh single
+  python -m repro.launch.dryrun --all --out results/dryrun.json
+"""
+
+import argparse
+import json
+import time
+import traceback
+from pathlib import Path
+
+import jax
+
+from ..configs import REGISTRY
+from ..roofline.analysis import analyze_compiled
+from ..sharding import AxisRules, DEFAULT_RULES, use_rules
+from .cells import build_cell
+from .mesh import make_production_mesh
+
+
+def lower_cell(cell, mesh, rules_map=None):
+    """Lower + compile one cell on ``mesh``; returns (lowered, compiled)."""
+    from jax.sharding import NamedSharding
+
+    mapping = dict(DEFAULT_RULES)
+    mapping.update(cell.rules)
+    if rules_map:
+        mapping.update(rules_map)
+    rules = AxisRules(mesh, mapping)
+
+    def shard(axes_tree):
+        return jax.tree.map(
+            lambda axes: NamedSharding(mesh, rules.resolve(*axes)),
+            axes_tree,
+            is_leaf=lambda x: isinstance(x, tuple)
+            and all(isinstance(a, (str, type(None))) for a in x),
+        )
+
+    in_shardings = (shard(cell.state_axes), *[shard(a) for a in cell.batch_axes])
+    out_shardings = shard(cell.out_axes) if cell.out_axes is not None else None
+    with use_rules(mesh, mapping):
+        jitted = jax.jit(cell.step_fn, in_shardings=in_shardings,
+                         out_shardings=out_shardings,
+                         donate_argnums=cell.donate or ())
+        lowered = jitted.lower(cell.state_shape, *cell.batch_shape)
+        compiled = lowered.compile()
+    return lowered, compiled
+
+
+def run_cell(arch: str, shape: str, multi_pod: bool, rules_map=None,
+             verbose: bool = True) -> dict:
+    t0 = time.time()
+    cell = build_cell(arch, shape)
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    lowered, compiled = lower_cell(cell, mesh, rules_map)
+    mem = compiled.memory_analysis()
+    result = analyze_compiled(cell, lowered, compiled, mesh)
+    result.update(
+        arch=arch, shape=shape,
+        mesh="2x16x16" if multi_pod else "16x16",
+        compile_s=round(time.time() - t0, 1),
+        bytes_per_device=int(
+            mem.argument_size_in_bytes + mem.output_size_in_bytes
+            + mem.temp_size_in_bytes - mem.alias_size_in_bytes
+        ),
+        argument_bytes=int(mem.argument_size_in_bytes),
+        temp_bytes=int(mem.temp_size_in_bytes),
+        ok=True,
+    )
+    if verbose:
+        print(f"[dryrun] {arch} × {shape} × {result['mesh']}: "
+              f"{result['bytes_per_device']/2**30:.2f} GiB/dev, "
+              f"compute {result['t_compute']*1e3:.2f} ms, "
+              f"memory {result['t_memory']*1e3:.2f} ms, "
+              f"collective {result['t_collective']*1e3:.2f} ms "
+              f"→ {result['bottleneck']} ({result['compile_s']}s compile)",
+              flush=True)
+    return result
+
+
+def iter_cells():
+    for arch_name, arch in REGISTRY.items():
+        for shape_name in arch.shapes:
+            if shape_name in arch.skips:
+                yield arch_name, shape_name, arch.skips[shape_name]
+            else:
+                yield arch_name, shape_name, None
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    ap.add_argument("--mesh", choices=["single", "multi", "both"], default="both")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default="results/dryrun.json")
+    args = ap.parse_args()
+
+    meshes = {"single": [False], "multi": [True], "both": [False, True]}[args.mesh]
+    results = []
+    out_path = Path(args.out)
+    out_path.parent.mkdir(parents=True, exist_ok=True)
+    if out_path.exists():
+        results = json.loads(out_path.read_text())
+    done = {(r["arch"], r["shape"], r["mesh"]) for r in results}
+
+    cells = (
+        list(iter_cells()) if args.all else [(args.arch, args.shape, None)]
+    )
+    for arch, shape, skip in cells:
+        for multi in meshes:
+            mesh_name = "2x16x16" if multi else "16x16"
+            if (arch, shape, mesh_name) in done:
+                continue
+            if skip:
+                results.append(dict(arch=arch, shape=shape, mesh=mesh_name,
+                                    ok=True, skipped=skip))
+                print(f"[dryrun] {arch} × {shape}: SKIP ({skip})", flush=True)
+                continue
+            try:
+                results.append(run_cell(arch, shape, multi))
+            except Exception as e:  # noqa: BLE001 — record and continue
+                traceback.print_exc()
+                results.append(dict(arch=arch, shape=shape, mesh=mesh_name,
+                                    ok=False, error=f"{type(e).__name__}: {e}"))
+            out_path.write_text(json.dumps(results, indent=1))
+
+    n_ok = sum(r["ok"] for r in results)
+    print(f"[dryrun] {n_ok}/{len(results)} cells OK → {out_path}")
+    if n_ok < len(results):
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,33 @@
+"""Production mesh definitions (required by the multi-pod dry-run).
+
+``make_production_mesh`` is a FUNCTION (not a module constant) so importing
+this module never touches jax device state — the dry-run sets
+``XLA_FLAGS=--xla_force_host_platform_device_count=512`` before first jax
+init, and everything else (smoke tests, benches) sees the real device
+count.
+"""
+
+from __future__ import annotations
+
+import jax
+
+__all__ = ["make_production_mesh", "make_test_mesh"]
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """Single pod: 16×16 = 256 chips (data, model).
+    Multi-pod: 2×16×16 = 512 chips (pod, data, model)."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_test_mesh(n_devices: int | None = None):
+    """Small mesh over whatever devices exist (CI / unit tests)."""
+    n = n_devices or len(jax.devices())
+    model = 1
+    for m in (4, 2):
+        if n % m == 0 and n >= m:
+            model = m
+            break
+    return jax.make_mesh((n // model, model), ("data", "model"))

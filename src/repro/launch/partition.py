@@ -1,0 +1,61 @@
+"""Partitioning driver: the paper's system as a CLI.
+
+  python -m repro.launch.partition --graph rmat:16 --k 32 --partitioner s5p
+  python -m repro.launch.partition --graph community:4000 --k 8 --compare
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+from ..core import replication_factor, load_balance, gas_comm_bytes
+from ..core.baselines import PARTITIONERS
+from ..graphs import rmat_graph, powerlaw_graph, toy_graph_fig3
+from ..graphs.generators import community_graph
+
+
+def load_graph(spec: str, seed: int = 0):
+    kind, _, arg = spec.partition(":")
+    if kind == "rmat":
+        return rmat_graph(int(arg or 14), edge_factor=8, seed=seed)
+    if kind == "powerlaw":
+        return powerlaw_graph(int(arg or 10000), seed=seed)
+    if kind == "community":
+        return community_graph(int(arg or 4000), seed=seed)
+    if kind == "toy":
+        return toy_graph_fig3()
+    raise ValueError(f"unknown graph spec {spec!r}")
+
+
+def run(graph: str, k: int, partitioner: str = "s5p", seed: int = 0,
+        compare: bool = False):
+    src, dst, n = load_graph(graph, seed)
+    names = list(PARTITIONERS) if compare else [partitioner]
+    rows = []
+    for name in names:
+        t0 = time.time()
+        parts = PARTITIONERS[name](src, dst, n, k, seed)
+        dt = time.time() - t0
+        rf = replication_factor(src, dst, parts, n_vertices=n, k=k)
+        bal = load_balance(parts, k=k)
+        comm = gas_comm_bytes(src, dst, parts, n_vertices=n, k=k)
+        rows.append((name, rf, bal, comm, dt))
+        print(f"{name:10s} RF={rf:7.3f} balance={bal:5.2f} "
+              f"gas_comm={comm/1e6:8.2f} MB/iter  {dt:6.1f}s")
+    return rows
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--graph", default="community:4000")
+    ap.add_argument("--k", type=int, default=8)
+    ap.add_argument("--partitioner", default="s5p", choices=list(PARTITIONERS))
+    ap.add_argument("--compare", action="store_true")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+    run(args.graph, args.k, args.partitioner, args.seed, args.compare)
+
+
+if __name__ == "__main__":
+    main()

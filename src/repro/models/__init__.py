@@ -1,0 +1,1 @@
+from . import lm, gnn, recsys  # noqa: F401

@@ -1,0 +1,225 @@
+"""Flash attention in pure jnp with a custom VJP (recompute backward).
+
+The forward scans KV in blocks with online softmax (never materializing
+S×T scores); the backward follows the FlashAttention-2 recipe — save only
+(out, lse), recompute per-block scores, accumulate dq/dk/dv blockwise.
+Without the custom VJP, JAX's scan AD would stash every block's
+probabilities (O(S·T) residuals ⇒ tens of GiB per device at 4k–32k).
+
+Supports causal masking, sliding windows (Mixtral), GQA head groups, and
+arbitrary per-token positions (rolling decode caches).  This is also the
+numerical oracle for ``repro.kernels.flash_attention`` (same dataflow the
+Pallas kernel implements with BlockSpec VMEM tiles).
+
+Shapes: q (B, S, H, hd); k/v (B, T, KV, hd); H = KV·G.
+Positions: q_pos (B, S); kv_pos (B, T); kv_pos < 0 ⇒ masked (padding).
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["flash_attention", "decode_attention"]
+
+_NEG = -1e30
+
+
+def _mask(q_pos_blk, kv_pos_blk, causal, window):
+    """(Bq, Sq) × (B, Tc) → (B, Sq, Tc) bool."""
+    dp = q_pos_blk[:, :, None] - kv_pos_blk[:, None, :]
+    ok = kv_pos_blk[:, None, :] >= 0
+    if causal:
+        ok = ok & (dp >= 0)
+    if window is not None:
+        ok = ok & (dp < window)
+    return ok
+
+
+def _fwd_qblock(qb, k, v, qp, kvp, causal, window, kv_chunk):
+    """One q block against all kv chunks.  qb: (B, Sq, KV, G, hd)."""
+    B, Sq, KV, G, hd = qb.shape
+    T = k.shape[1]
+    nkv = T // kv_chunk
+    kc = k.reshape(B, nkv, kv_chunk, KV, hd)
+    vc = v.reshape(B, nkv, kv_chunk, KV, hd)
+    pc = kvp.reshape(B, nkv, kv_chunk)
+
+    def body(carry, blk):
+        m, l, acc = carry
+        kb, vb, pb = blk
+        s = jnp.einsum("bskgh,btkh->bkgst", qb, kb,
+                       preferred_element_type=jnp.float32)
+        ok = _mask(qp, pb, causal, window)  # (B, Sq, Tc)
+        s = jnp.where(ok[:, None, None, :, :], s, _NEG)
+        new_m = jnp.maximum(m, jnp.max(s, axis=-1))
+        p = jnp.exp(s - new_m[..., None])
+        corr = jnp.exp(m - new_m)
+        l = l * corr + jnp.sum(p, axis=-1)
+        pv = jnp.einsum("bkgst,btkh->bkgsh", p.astype(vb.dtype), vb,
+                        preferred_element_type=jnp.float32)
+        acc = acc * corr[..., None] + pv
+        return (new_m, l, acc), ()
+
+    m0 = jnp.full((B, KV, G, Sq), _NEG, jnp.float32)
+    l0 = jnp.zeros((B, KV, G, Sq), jnp.float32)
+    a0 = jnp.zeros((B, KV, G, Sq, hd), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(
+        body, (m0, l0, a0),
+        (kc.transpose(1, 0, 2, 3, 4), vc.transpose(1, 0, 2, 3, 4),
+         pc.transpose(1, 0, 2)),
+    )
+    out = acc / jnp.maximum(l, 1e-30)[..., None]  # (B,KV,G,Sq,hd)
+    lse = m + jnp.log(jnp.maximum(l, 1e-30))  # (B,KV,G,Sq)
+    return out, lse
+
+
+def _flash_fwd(q, k, v, q_pos, kv_pos, causal, window, q_chunk, kv_chunk):
+    B, S, H, hd = q.shape
+    KV = k.shape[2]
+    G = H // KV
+    scale = hd ** -0.5
+    # pad T to kv_chunk
+    T = k.shape[1]
+    padt = (-T) % kv_chunk
+    if padt:
+        k = jnp.pad(k, ((0, 0), (0, padt), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, padt), (0, 0), (0, 0)))
+        kv_pos = jnp.pad(kv_pos, ((0, 0), (0, padt)), constant_values=-(2**30))
+    # pad S to q_chunk
+    pads = (-S) % q_chunk
+    if pads:
+        q = jnp.pad(q, ((0, 0), (0, pads), (0, 0), (0, 0)))
+        q_pos = jnp.pad(q_pos, ((0, 0), (0, pads)), constant_values=0)
+    Sp = q.shape[1]
+    nq = Sp // q_chunk
+    qg = (q.astype(jnp.float32) * scale).astype(q.dtype)
+    qg = qg.reshape(B, nq, q_chunk, KV, G, hd)
+    qp = q_pos.reshape(B, nq, q_chunk)
+
+    def qstep(_, blk):
+        qb, qpb = blk
+        out, lse = _fwd_qblock(qb, k, v, qpb, kv_pos, causal, window, kv_chunk)
+        return (), (out, lse)
+
+    _, (out, lse) = jax.lax.scan(
+        qstep, (), (qg.transpose(1, 0, 2, 3, 4, 5), qp.transpose(1, 0, 2))
+    )
+    # out: (nq, B, KV, G, qc, hd) → (B, S, H, hd)
+    out = out.transpose(1, 0, 4, 2, 3, 5).reshape(B, Sp, H, hd)[:, :S]
+    lse = lse.transpose(1, 0, 4, 2, 3).reshape(B, Sp, KV, G)[:, :S]
+    return out.astype(q.dtype), lse
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(5, 6, 7, 8))
+def flash_attention(q, k, v, q_pos, kv_pos, causal=True, window=None,
+                    q_chunk=512, kv_chunk=1024):
+    out, _ = _flash_fwd(q, k, v, q_pos, kv_pos, causal, window, q_chunk, kv_chunk)
+    return out
+
+
+def _fa_fwd(q, k, v, q_pos, kv_pos, causal, window, q_chunk, kv_chunk):
+    out, lse = _flash_fwd(q, k, v, q_pos, kv_pos, causal, window, q_chunk, kv_chunk)
+    return out, (q, k, v, q_pos, kv_pos, out, lse)
+
+
+def _fa_bwd(causal, window, q_chunk, kv_chunk, res, g):
+    q, k, v, q_pos, kv_pos, out, lse = res
+    B, S, H, hd = q.shape
+    T, KV = k.shape[1], k.shape[2]
+    G = H // KV
+    scale = hd ** -0.5
+    # delta_i = Σ_h do_i · o_i  (per query, per head)
+    delta = jnp.sum(g.astype(jnp.float32) * out.astype(jnp.float32), axis=-1)
+    delta = delta.reshape(B, S, KV, G)
+
+    padt = (-T) % kv_chunk
+    if padt:
+        k = jnp.pad(k, ((0, 0), (0, padt), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, padt), (0, 0), (0, 0)))
+        kv_pos = jnp.pad(kv_pos, ((0, 0), (0, padt)), constant_values=-(2**30))
+    pads = (-S) % q_chunk
+    if pads:
+        pad4 = ((0, 0), (0, pads), (0, 0), (0, 0))
+        q = jnp.pad(q, pad4)
+        g = jnp.pad(g, pad4)
+        lse = jnp.pad(lse, ((0, 0), (0, pads), (0, 0), (0, 0)),
+                      constant_values=1.0)
+        delta = jnp.pad(delta, ((0, 0), (0, pads), (0, 0), (0, 0)))
+        q_pos = jnp.pad(q_pos, ((0, 0), (0, pads)), constant_values=-(2**30))
+    Sp, Tp = q.shape[1], k.shape[1]
+    nq, nkv = Sp // q_chunk, Tp // kv_chunk
+
+    qs = q.reshape(B, nq, q_chunk, KV, G, hd).transpose(1, 0, 2, 3, 4, 5)
+    gs = g.reshape(B, nq, q_chunk, KV, G, hd).transpose(1, 0, 2, 3, 4, 5)
+    lses = lse.reshape(B, nq, q_chunk, KV, G).transpose(1, 0, 2, 3, 4)
+    deltas = delta.reshape(B, nq, q_chunk, KV, G).transpose(1, 0, 2, 3, 4)
+    qps = q_pos.reshape(B, nq, q_chunk).transpose(1, 0, 2)
+    kc = k.reshape(B, nkv, kv_chunk, KV, hd)
+    vc = v.reshape(B, nkv, kv_chunk, KV, hd)
+    pc = kv_pos.reshape(B, nkv, kv_chunk)
+
+    def qstep(carry, blk):
+        dk, dv = carry  # (B, Tp, KV, hd) fp32
+        qb, gb, lseb, db, qpb = blk
+
+        def kvstep(dq_acc, j):
+            kb = jax.lax.dynamic_slice_in_dim(kc, j, 1, axis=1)[:, 0]
+            vb = jax.lax.dynamic_slice_in_dim(vc, j, 1, axis=1)[:, 0]
+            pb = jax.lax.dynamic_slice_in_dim(pc, j, 1, axis=1)[:, 0]
+            s = jnp.einsum("bskgh,btkh->bkgst", qb, kb,
+                           preferred_element_type=jnp.float32) * scale
+            ok = _mask(qpb, pb, causal, window)
+            s = jnp.where(ok[:, None, None, :, :], s, _NEG)
+            p = jnp.exp(s - lseb.transpose(0, 2, 3, 1)[..., None])  # (B,KV,G,Sq,Tc)
+            dp = jnp.einsum("bskgh,btkh->bkgst", gb, vb,
+                            preferred_element_type=jnp.float32)
+            ds = p * (dp - db.transpose(0, 2, 3, 1)[..., None]) * scale
+            dqb = jnp.einsum("bkgst,btkh->bskgh", ds.astype(kb.dtype), kb,
+                             preferred_element_type=jnp.float32)
+            dkb = jnp.einsum("bkgst,bskgh->btkh", ds.astype(qb.dtype), qb,
+                             preferred_element_type=jnp.float32)
+            dvb = jnp.einsum("bkgst,bskgh->btkh", p.astype(gb.dtype), gb,
+                             preferred_element_type=jnp.float32)
+            return dq_acc + dqb, (dkb, dvb, j)
+
+        dq0 = jnp.zeros(qb.shape, jnp.float32)
+        dq, (dks, dvs, _) = jax.lax.scan(kvstep, dq0, jnp.arange(nkv))
+        # scatter kv-chunk grads back
+        dk = dk + dks.transpose(1, 0, 2, 3, 4).reshape(B, Tp, KV, hd)
+        dv = dv + dvs.transpose(1, 0, 2, 3, 4).reshape(B, Tp, KV, hd)
+        return (dk, dv), dq
+
+    dk0 = jnp.zeros((B, Tp, KV, hd), jnp.float32)
+    dv0 = jnp.zeros((B, Tp, KV, hd), jnp.float32)
+    (dk, dv), dqs = jax.lax.scan(qstep, (dk0, dv0),
+                                 (qs, gs, lses, deltas, qps))
+    dq = dqs.transpose(1, 0, 2, 3, 4, 5).reshape(B, Sp, H, hd)[:, :S]
+    dk = dk[:, :T].astype(k.dtype)
+    dv = dv[:, :T].astype(v.dtype)
+    return dq.astype(q.dtype), dk, dv, None, None
+
+
+flash_attention.defvjp(_fa_fwd, _fa_bwd)
+
+
+def decode_attention(q, k, v, q_pos, kv_pos, *, causal=True, window=None):
+    """Single-query attention against a (possibly rolling) cache.
+
+    q: (B, 1, H, hd); k/v: (B, T, KV, hd); direct einsum — the (B, H, T)
+    score tensor is small at decode shapes, and a T-sharded cache turns the
+    softmax into a flash-decoding split-K reduction under SPMD.
+    """
+    B, S, H, hd = q.shape
+    KV = k.shape[2]
+    G = H // KV
+    qg = q.reshape(B, S, KV, G, hd) * (hd ** -0.5)
+    s = jnp.einsum("bskgh,btkh->bkgst", qg, k, preferred_element_type=jnp.float32)
+    ok = _mask(q_pos, kv_pos, causal, window)
+    s = jnp.where(ok[:, None, None, :, :], s, _NEG)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgst,btkh->bskgh", p.astype(v.dtype), v,
+                     preferred_element_type=jnp.float32)
+    return out.reshape(B, S, H, hd).astype(q.dtype)

@@ -1,0 +1,52 @@
+"""Shared layer primitives (pure-jnp; parameters are plain pytrees)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["dense_init", "rms_norm", "layer_norm", "swish", "gelu", "softmax_xent"]
+
+
+def dense_init(key, shape, scale: float | None = None, dtype=jnp.float32):
+    """Truncated-normal fan-in init (matches common LM inits)."""
+    fan_in = shape[0] if len(shape) >= 2 else 1
+    if scale is None:
+        scale = 1.0 / (fan_in ** 0.5)
+    return (jax.random.truncated_normal(key, -2.0, 2.0, shape) * scale).astype(dtype)
+
+
+def rms_norm(x, weight, eps: float = 1e-6):
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    x = x * jax.lax.rsqrt(var + eps)
+    return (x * weight).astype(dtype)
+
+
+def layer_norm(x, weight, bias, eps: float = 1e-5):
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    x = (x - mu) * jax.lax.rsqrt(var + eps)
+    return (x * weight + bias).astype(dtype)
+
+
+def swish(x):
+    return x * jax.nn.sigmoid(x)
+
+
+gelu = jax.nn.gelu
+
+
+def softmax_xent(logits, labels, mask=None):
+    """Mean CE over valid positions; numerically-stable fp32 reduction."""
+    logits = logits.astype(jnp.float32)
+    lse = jax.scipy.special.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = lse - gold
+    if mask is not None:
+        nll = nll * mask
+        return jnp.sum(nll) / jnp.maximum(jnp.sum(mask), 1.0)
+    return jnp.mean(nll)

@@ -1,0 +1,443 @@
+"""Decoder-only LM family: Qwen2.5 / Llama-3 / Qwen3 (dense) + Mixtral (MoE).
+
+One implementation parameterized by :class:`LMConfig` covers all five
+assigned architectures:
+
+- GQA attention with RoPE, optional QKV bias (Qwen2.5), optional qk-norm
+  (Qwen3), optional sliding-window attention (Mixtral);
+- SwiGLU dense MLP or top-2 MoE (Mixtral) with sort-based capacity dispatch;
+- layers stacked and scanned (``lax.scan``) with per-layer remat — compile
+  time and HLO size stay O(1) in depth;
+- attention is **blocked** (online-softmax over KV chunks, flash-attention
+  dataflow in pure jnp) so 32k-sequence cells never materialize S×S scores.
+  The Pallas TPU kernel (``repro.kernels.flash_attention``) implements the
+  same contract for the hot path; ``use_flash_kernel`` switches it on.
+
+Sharding: logical-axis annotations only (see repro/sharding.py) — the same
+model code runs single-device tests and the 512-chip dry-run.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from ..sharding import constrain
+from .attention import decode_attention, flash_attention
+from .common import dense_init, rms_norm, softmax_xent
+
+__all__ = ["LMConfig", "init_params", "forward", "loss_fn", "init_cache",
+           "prefill", "decode_step", "count_params", "model_flops"]
+
+
+@dataclasses.dataclass(frozen=True)
+class LMConfig:
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_head: int
+    d_ff: int
+    vocab: int
+    qkv_bias: bool = False
+    qk_norm: bool = False
+    rope_theta: float = 1e6
+    sliding_window: int | None = None  # SWA width (Mixtral)
+    onehot_embed: bool = True  # vocab-sharded lookup as a contraction (§Perf)
+    n_experts: int = 0  # 0 ⇒ dense MLP
+    top_k: int = 2
+    capacity_factor: float = 1.25
+    dtype: Any = jnp.bfloat16
+    attn_chunk: int = 1024  # KV block for the online-softmax scan
+    remat: bool = True
+    use_flash_kernel: bool = False
+
+    @property
+    def is_moe(self) -> bool:
+        return self.n_experts > 0
+
+
+# ---------------------------------------------------------------------------
+# parameters
+# ---------------------------------------------------------------------------
+
+
+def init_params(cfg: LMConfig, key) -> dict:
+    L, D, H, KV, hd, F, V = (cfg.n_layers, cfg.d_model, cfg.n_heads,
+                             cfg.n_kv_heads, cfg.d_head, cfg.d_ff, cfg.vocab)
+    ks = jax.random.split(key, 16)
+    dt = cfg.dtype
+
+    def w(key, *shape, scale=None):
+        return dense_init(key, shape, scale=scale, dtype=dt)
+
+    attn = {
+        "wq": w(ks[0], L, D, H * hd),
+        "wk": w(ks[1], L, D, KV * hd),
+        "wv": w(ks[2], L, D, KV * hd),
+        "wo": w(ks[3], L, H * hd, D),
+    }
+    if cfg.qkv_bias:
+        attn["bq"] = jnp.zeros((L, H * hd), dt)
+        attn["bk"] = jnp.zeros((L, KV * hd), dt)
+        attn["bv"] = jnp.zeros((L, KV * hd), dt)
+    if cfg.qk_norm:
+        attn["q_norm"] = jnp.ones((L, hd), dt)
+        attn["k_norm"] = jnp.ones((L, hd), dt)
+
+    if cfg.is_moe:
+        E = cfg.n_experts
+        mlp = {
+            "router": w(ks[4], L, D, E, scale=0.02),
+            "w_gate": w(ks[5], L, E, D, F),
+            "w_up": w(ks[6], L, E, D, F),
+            "w_down": w(ks[7], L, E, F, D),
+        }
+    else:
+        mlp = {
+            "w_gate": w(ks[5], L, D, F),
+            "w_up": w(ks[6], L, D, F),
+            "w_down": w(ks[7], L, F, D),
+        }
+
+    return {
+        "embed": w(ks[8], V, D, scale=0.02),
+        "layers": {
+            "attn": attn,
+            "mlp": mlp,
+            "ln1": jnp.ones((L, D), dt),
+            "ln2": jnp.ones((L, D), dt),
+        },
+        "final_norm": jnp.ones((D,), dt),
+        "lm_head": w(ks[9], D, V, scale=0.02),
+    }
+
+
+def count_params(cfg: LMConfig) -> int:
+    L, D, H, KV, hd, F, V = (cfg.n_layers, cfg.d_model, cfg.n_heads,
+                             cfg.n_kv_heads, cfg.d_head, cfg.d_ff, cfg.vocab)
+    attn = L * (D * H * hd + 2 * D * KV * hd + H * hd * D)
+    if cfg.is_moe:
+        mlp = L * (D * cfg.n_experts + cfg.n_experts * 3 * D * F)
+    else:
+        mlp = L * 3 * D * F
+    return attn + mlp + 2 * V * D + L * 2 * D + D
+
+
+def active_params(cfg: LMConfig) -> int:
+    """Per-token active parameters (MoE counts top_k experts only)."""
+    if not cfg.is_moe:
+        return count_params(cfg)
+    L, D, F = cfg.n_layers, cfg.d_model, cfg.d_ff
+    total = count_params(cfg)
+    moe_all = L * cfg.n_experts * 3 * D * F
+    moe_act = L * cfg.top_k * 3 * D * F
+    return total - moe_all + moe_act
+
+
+def model_flops(cfg: LMConfig, n_tokens: int, train: bool = True) -> float:
+    """6·N_active·D (train) or 2·N_active·D (inference) + attention term."""
+    n = active_params(cfg)
+    mult = 6.0 if train else 2.0
+    return mult * n * n_tokens
+
+
+# ---------------------------------------------------------------------------
+# rotary embedding
+# ---------------------------------------------------------------------------
+
+
+def _rope(x, positions, theta):
+    """x: (B, S, H, hd); positions: (B, S)."""
+    hd = x.shape[-1]
+    half = hd // 2
+    freqs = 1.0 / (theta ** (jnp.arange(half, dtype=jnp.float32) / half))
+    ang = positions[..., :, None].astype(jnp.float32) * freqs  # (B, S, half)
+    cos = jnp.cos(ang)[..., None, :]  # (B, S, 1, half) — broadcast over heads
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# MoE (sort-based capacity dispatch — Mixtral top-2)
+# ---------------------------------------------------------------------------
+
+
+def _moe_block(x_bsd, mp, cfg: LMConfig):
+    """x_bsd: (B, S, D).  Returns (B, S, D), aux load-balance loss.
+
+    **Group-limited** sort-based dispatch: each batch row is its own
+    dispatch group (rows are sharded over (data, model), so the argsort,
+    capacity ranking, and (E, cap, D) dispatch buffers are all
+    device-local — a global dispatch would replicate an O(T·D) buffer on
+    every chip).  Within a group, tokens are ranked per expert; each
+    expert serves up to C = cf·top_k·S/E of the row's tokens (overflow
+    dropped — GShard/Mixtral-style).  Expert weights carry the
+    ("expert", "fsdp", "mlp") layout — EP when the expert axis divides
+    the mesh, TP otherwise.
+    """
+    from ..sharding import logical_spec
+
+    spec = logical_spec("batch")
+    axes = spec[0] if len(spec) and spec[0] else None
+    out, aux = jax.vmap(
+        lambda xr: _moe_dispatch_group(xr, mp, cfg), spmd_axis_name=axes
+    )(x_bsd)
+    return out, jnp.mean(aux)
+
+
+def _moe_dispatch_group(x_flat, mp, cfg: LMConfig):
+    """One dispatch group: x_flat (T, D) → (T, D), aux."""
+    T, D = x_flat.shape
+    E, K = cfg.n_experts, cfg.top_k
+    F = cfg.d_ff
+    cap = int(cfg.capacity_factor * K * T / E)
+    cap = max(8, min(cap, T))
+
+    logits = jnp.einsum("td,de->te", x_flat, mp["router"].astype(x_flat.dtype))
+    probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+    gate_w, gate_e = jax.lax.top_k(probs, K)  # (T, K)
+    gate_w = gate_w / jnp.sum(gate_w, axis=-1, keepdims=True)
+
+    # aux load-balance loss (Switch): E · Σ_e f_e · p_e
+    me = jnp.mean(probs, axis=0)
+    ce = jnp.mean(
+        jnp.sum(jax.nn.one_hot(gate_e, E, dtype=jnp.float32), axis=1), axis=0
+    ) / K
+    aux = E * jnp.sum(me * ce)
+
+    # rank tokens within each expert by (expert, arrival) sort
+    flat_e = gate_e.reshape(-1)  # (T·K,)
+    flat_t = jnp.repeat(jnp.arange(T, dtype=jnp.int32), K)
+    flat_w = gate_w.reshape(-1)
+    order = jnp.argsort(flat_e, stable=True)
+    e_sorted = flat_e[order]
+    # position within expert = index − start(expert)
+    idx = jnp.arange(T * K, dtype=jnp.int32)
+    starts = jnp.searchsorted(e_sorted, jnp.arange(E, dtype=jnp.int32))
+    pos_in_e = idx - starts[e_sorted]
+    keep = pos_in_e < cap
+    slot = jnp.where(keep, e_sorted * cap + pos_in_e, E * cap)  # sink slot
+    # dispatch: (E·cap + 1, D).  Every big intermediate is pinned to the
+    # vmapped group axis (vmap spmd_axis_name prepends the batch mesh axes)
+    # so the SPMD partitioner can never replicate the dispatch buffers.
+    gathered = constrain(x_flat[flat_t[order]], None, None)
+    buf = jnp.zeros((E * cap + 1, D), x_flat.dtype)
+    buf = buf.at[slot].set(gathered)
+    xe = buf[: E * cap].reshape(E, cap, D)
+    xe = constrain(xe, None, None, None)
+    # grouped expert GEMMs
+    g = jnp.einsum("ecd,edf->ecf", xe, mp["w_gate"])
+    u = jnp.einsum("ecd,edf->ecf", xe, mp["w_up"])
+    h = jax.nn.silu(g) * u
+    h = constrain(h, None, None, None)
+    ye = jnp.einsum("ecf,efd->ecd", h, mp["w_down"])
+    ye = constrain(ye, None, None, None)
+    # combine: weighted scatter-add back to tokens
+    yflat = ye.reshape(E * cap, D)
+    contrib = jnp.where(keep[:, None], yflat[jnp.minimum(slot, E * cap - 1)], 0.0)
+    contrib = constrain(contrib, None, None)
+    out = jnp.zeros((T, D), x_flat.dtype)
+    out = out.at[flat_t[order]].add(contrib * flat_w[order][:, None].astype(x_flat.dtype))
+    out = constrain(out, None, None)
+    return out, aux
+
+
+# ---------------------------------------------------------------------------
+# transformer layer + scan
+# ---------------------------------------------------------------------------
+
+
+def _attention_block(x, ap, cfg: LMConfig, positions, cache=None, layer_cache=None):
+    """Full-seq path when ``layer_cache`` is None; else one-token decode."""
+    B, S, D = x.shape
+    H, KV, hd = cfg.n_heads, cfg.n_kv_heads, cfg.d_head
+    q = jnp.einsum("bsd,dh->bsh", x, ap["wq"])
+    k = jnp.einsum("bsd,dh->bsh", x, ap["wk"])
+    v = jnp.einsum("bsd,dh->bsh", x, ap["wv"])
+    if cfg.qkv_bias:
+        q = q + ap["bq"]
+        k = k + ap["bk"]
+        v = v + ap["bv"]
+    q = q.reshape(B, S, H, hd)
+    k = k.reshape(B, S, KV, hd)
+    v = v.reshape(B, S, KV, hd)
+    if cfg.qk_norm:
+        q = rms_norm(q, ap["q_norm"])
+        k = rms_norm(k, ap["k_norm"])
+    q = _rope(q, positions, cfg.rope_theta)
+    k = _rope(k, positions, cfg.rope_theta)
+    q = constrain(q, "batch", "seq", "heads", None)
+    k = constrain(k, "batch", "seq", None, None)
+
+    if layer_cache is None:
+        out = flash_attention(
+            q, k, v, positions, positions,
+            True, cfg.sliding_window,
+            min(cfg.attn_chunk // 2, max(S, 8)), min(cfg.attn_chunk, max(S, 8)),
+        )
+        # prefill stacks these per layer — pin the cache to the kv_seq
+        # layout so the (L, B, S, KV, hd) stack is model-axis sharded
+        # (unused+DCE'd in the training path)
+        new_cache = (constrain(k, "batch", "kv_seq", None, None),
+                     constrain(v, "batch", "kv_seq", None, None))
+    else:
+        ck, cv, cpos = layer_cache  # (B, Smax, KV, hd) ×2, (B, Smax)
+        # rolling write for SWA caches; plain append otherwise
+        Smax = ck.shape[1]
+        wpos = positions[:, 0] % Smax  # (B,)
+        bidx = jnp.arange(B)
+        ck = ck.at[bidx, wpos].set(k[:, 0])
+        cv = cv.at[bidx, wpos].set(v[:, 0])
+        cpos = cpos.at[bidx, wpos].set(positions[:, 0])
+        ck = constrain(ck, "batch", "kv_seq", None, None)
+        cv = constrain(cv, "batch", "kv_seq", None, None)
+        out = decode_attention(
+            q, ck, cv, positions, cpos,
+            causal=True, window=cfg.sliding_window,
+        )
+        new_cache = (ck, cv, cpos)
+
+    out = out.reshape(B, S, H * hd)
+    out = jnp.einsum("bsh,hd->bsd", out, ap["wo"])
+    return constrain(out, "batch", "seq", None), new_cache
+
+
+def _layer(x, lp, cfg: LMConfig, positions, layer_cache=None):
+    h, new_cache = _attention_block(
+        rms_norm(x, lp["ln1"]), lp["attn"], cfg, positions, layer_cache=layer_cache
+    )
+    x = x + h
+    y = rms_norm(x, lp["ln2"])
+    if cfg.is_moe:
+        out, aux = _moe_block(y, lp["mlp"], cfg)
+    else:
+        g = jnp.einsum("bsd,df->bsf", y, lp["mlp"]["w_gate"])
+        u = jnp.einsum("bsd,df->bsf", y, lp["mlp"]["w_up"])
+        hmid = jax.nn.silu(g) * u
+        hmid = constrain(hmid, "batch", "seq", "mlp")
+        out = jnp.einsum("bsf,fd->bsd", hmid, lp["mlp"]["w_down"])
+        aux = jnp.float32(0.0)
+    x = x + constrain(out, "batch", "seq", None)
+    return x, aux, new_cache
+
+
+def _embed(params, tokens, cfg: LMConfig):
+    """Token embedding.  The one-hot contraction keeps the vocab-sharded
+    table local (each shard contracts its vocab slice + psum) — a plain
+    gather makes the SPMD partitioner replicate the table AND its f32
+    gradient on every chip (§Perf hillclimb 1, confirmed ~10× whale)."""
+    if not cfg.onehot_embed:
+        return params["embed"].astype(cfg.dtype)[tokens]
+    onehot = jax.nn.one_hot(tokens, cfg.vocab, dtype=cfg.dtype)
+    return jnp.einsum("bsv,vd->bsd", onehot, params["embed"].astype(cfg.dtype))
+
+
+def forward(params, tokens, cfg: LMConfig, positions=None):
+    """Training/prefill forward: (B, S) → logits (B, S, V), aux, kv caches."""
+    B, S = tokens.shape
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+    x = _embed(params, tokens, cfg)
+    # Train cells map "batch" to (data, model) and "seq" to pod — tokens are
+    # fully sharded over all 512 chips, so the per-layer remat stash (the
+    # scan carry saved for backward) is structurally 512-way sharded.
+    x = constrain(x, "batch", "seq", None)
+
+    def body(carry, lp):
+        x, aux = carry
+        x, a, _ = _layer(x, lp, cfg, positions)
+        x = constrain(x, "batch", "seq", None)
+        return (x, aux + a), ()
+
+    body_fn = jax.checkpoint(body) if cfg.remat else body
+    (x, aux), _ = jax.lax.scan(body_fn, (x, jnp.float32(0.0)), params["layers"])
+    x = rms_norm(x, params["final_norm"])
+    logits = jnp.einsum("bsd,dv->bsv", x, params["lm_head"])
+    logits = constrain(logits, "batch", "seq", "mlp")
+    return logits, aux / cfg.n_layers
+
+
+def loss_fn(params, batch, cfg: LMConfig):
+    tokens, targets = batch["tokens"], batch["targets"]
+    logits, aux = forward(params, tokens, cfg)
+    loss = softmax_xent(logits, targets)
+    return loss + 0.01 * aux, {"xent": loss, "aux": aux}
+
+
+# ---------------------------------------------------------------------------
+# serving: prefill + single-token decode with (rolling) KV cache
+# ---------------------------------------------------------------------------
+
+
+def init_cache(cfg: LMConfig, batch: int, max_seq: int) -> dict:
+    """SWA models roll within a window-sized cache."""
+    S = min(max_seq, cfg.sliding_window) if cfg.sliding_window else max_seq
+    L, KV, hd = cfg.n_layers, cfg.n_kv_heads, cfg.d_head
+    return {
+        "k": jnp.zeros((L, batch, S, KV, hd), cfg.dtype),
+        "v": jnp.zeros((L, batch, S, KV, hd), cfg.dtype),
+        "pos": jnp.full((L, batch, S), -1, jnp.int32),
+    }
+
+
+def prefill(params, tokens, cfg: LMConfig, max_seq: int):
+    """Forward the prompt, returning last-position logits + a filled cache."""
+    B, S = tokens.shape
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+    x = params["embed"].astype(cfg.dtype)[tokens]
+    x = constrain(x, "batch", None, None)
+    caches_k, caches_v = [], []
+
+    def body(carry, lp):
+        x = carry
+        x, _, cache = _layer(x, lp, cfg, positions)
+        return x, cache
+
+    body_fn = jax.checkpoint(body) if cfg.remat else body
+    x, (ks, vs) = jax.lax.scan(body_fn, x, params["layers"])
+    x = rms_norm(x, params["final_norm"])
+    logits = jnp.einsum("bd,dv->bv", x[:, -1], params["lm_head"])
+    # pack the trailing window into the rolling cache layout
+    cache = init_cache(cfg, B, max_seq)
+    W = cache["k"].shape[2]
+    take = min(W, S)
+    sl = slice(S - take, S)
+    if take == W and (S - take) % W == 0:
+        # scatter-free fast path: slot i holds position S−W+i exactly
+        cache["k"] = ks[:, :, sl]
+        cache["v"] = vs[:, :, sl]
+        cache["pos"] = jnp.broadcast_to(positions[None, :, sl],
+                                        (cfg.n_layers, B, W)).astype(jnp.int32)
+        return logits, cache
+    idx = positions[:, sl] % W  # (B, take)
+    bidx = jnp.arange(B)[:, None]
+    cache["k"] = cache["k"].at[:, bidx, idx].set(ks[:, :, sl])
+    cache["v"] = cache["v"].at[:, bidx, idx].set(vs[:, :, sl])
+    cache["pos"] = cache["pos"].at[:, bidx, idx].set(positions[:, sl])
+    return logits, cache
+
+
+def decode_step(params, cache, tokens, pos, cfg: LMConfig):
+    """One decode step: tokens (B,), pos (B,) → logits (B, V), new cache."""
+    B = tokens.shape[0]
+    positions = pos[:, None]  # (B, 1)
+    x = params["embed"].astype(cfg.dtype)[tokens[:, None]]  # B tokens: gather is cheap
+
+    def body(x, layer):
+        lp, ck, cv, cpos = layer
+        x, _, new_cache = _layer(x, lp, cfg, positions, layer_cache=(ck, cv, cpos))
+        return x, new_cache
+
+    x, (ck, cv, cpos) = jax.lax.scan(
+        body, x, (params["layers"], cache["k"], cache["v"], cache["pos"])
+    )
+    x = rms_norm(x, params["final_norm"])
+    logits = jnp.einsum("bd,dv->bv", x[:, 0], params["lm_head"])
+    return logits, {"k": ck, "v": cv, "pos": cpos}

@@ -1,0 +1,3 @@
+from .adamw import AdamWConfig, TrainState, init_state, adamw_update, make_train_step  # noqa: F401
+from .schedules import cosine_schedule, linear_warmup  # noqa: F401
+from .grad_compress import topk_compress_update, int8_compress  # noqa: F401

@@ -1,0 +1,23 @@
+"""LR schedules as step → multiplier functions (composable with AdamWConfig)."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+__all__ = ["linear_warmup", "cosine_schedule"]
+
+
+def linear_warmup(warmup_steps: int):
+    def f(step):
+        return jnp.minimum(step.astype(jnp.float32) / max(warmup_steps, 1), 1.0)
+    return f
+
+
+def cosine_schedule(warmup_steps: int, total_steps: int, final_frac: float = 0.1):
+    def f(step):
+        s = step.astype(jnp.float32)
+        warm = jnp.minimum(s / max(warmup_steps, 1), 1.0)
+        prog = jnp.clip((s - warmup_steps) / max(total_steps - warmup_steps, 1), 0.0, 1.0)
+        cos = final_frac + (1.0 - final_frac) * 0.5 * (1.0 + jnp.cos(jnp.pi * prog))
+        return warm * cos
+    return f

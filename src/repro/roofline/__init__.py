@@ -1,0 +1,1 @@
+from .analysis import analyze_compiled, parse_hlo_costs, HW  # noqa: F401

@@ -1,0 +1,401 @@
+"""Three-term roofline from a compiled dry-run artifact.
+
+    compute    = HLO_FLOPs / peak_FLOP/s          (per chip)
+    memory     = HLO_bytes / HBM_bw               (per chip)
+    collective = collective_bytes / link_bw       (per chip)
+
+Hardware model: TPU v5e — 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s ICI
+per link (constants from the brief).
+
+Why not just ``compiled.cost_analysis()``: XLA reports a ``while`` body
+**once**, so a scanned 48-layer transformer under-counts ~48×.  This
+module parses the optimized (scheduled) HLO text into its computation
+graph and accumulates flops / HBM bytes / collective bytes
+**hierarchically**, multiplying each while body by its trip count
+(recovered from the loop condition's comparison constant).
+
+Scheduled HLO prints operand *names* without inline types, so a module-
+wide symbol table (instruction name → shape) is built first.
+
+Accounting rules:
+- flops: ``dot`` instructions — 2 × |out| × contracted size (including
+  dots inside fusions);
+- HBM bytes: operand + result sizes of top-level instructions in
+  non-fused computations (the fusion boundary is XLA's HBM-traffic unit);
+- collective bytes: operand sizes of all-gather / all-reduce /
+  reduce-scatter / all-to-all / collective-permute (+ async ``-start``).
+All sizes are post-SPMD per-device (the HLO module is the per-device
+program), matching the brief's per-chip denominators.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Any
+
+__all__ = ["HW", "V5E", "parse_hlo_costs", "analyze_compiled"]
+
+
+@dataclasses.dataclass(frozen=True)
+class HW:
+    peak_flops: float = 197e12  # bf16 per chip
+    hbm_bw: float = 819e9  # bytes/s per chip
+    ici_bw: float = 50e9  # bytes/s per link
+
+
+V5E = HW()
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 0.5, "u4": 0.5, "s8": 1, "u8": 1, "f8e4m3fn": 1,
+    "f8e5m2": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16, "token": 0, "opaque": 0,
+}
+
+_SHAPE_RE = re.compile(r"\b([a-z]\w*)\[([0-9,]*)\]")
+_COLLECTIVES = (
+    "all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+    "collective-permute",
+)
+_NAME_RE = re.compile(r"%([\w.\-]+)")
+_OP_RE = re.compile(r"\s*([\w\-]+)\(")
+_SKIP_BYTES_OPS = {
+    "parameter", "constant", "tuple", "get-tuple-element", "bitcast",
+    "after-all", "partition-id", "replica-id", "iota", "while",
+    "conditional", "call",
+}
+
+
+def _type_bytes(type_text: str) -> float:
+    """Total bytes of a (possibly tuple) HLO type string."""
+    return sum(
+        _shape_prod(dims) * _DTYPE_BYTES.get(dt, 0)
+        for dt, dims in _SHAPE_RE.findall(type_text)
+    )
+
+
+def _shape_prod(dims: str) -> float:
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n
+
+
+def _balanced_parens(s: str, start: int) -> tuple[str, int]:
+    """s[start] == '(' → (contents, index past the closing paren)."""
+    depth = 0
+    for i in range(start, len(s)):
+        if s[i] == "(":
+            depth += 1
+        elif s[i] == ")":
+            depth -= 1
+            if depth == 0:
+                return s[start + 1:i], i + 1
+    return s[start + 1:], len(s)
+
+
+def _parse_instr(line: str):
+    """'  [ROOT] %name = TYPE opcode(operands), attrs' → parts or None.
+
+    TYPE may be a parenthesized tuple containing spaces (while/tuple ops).
+    """
+    eq = line.find(" = ")
+    if eq < 0 or not line.startswith(" "):
+        return None
+    name = line[:eq].strip()
+    if name.startswith("ROOT"):
+        name = name[4:].strip()
+    name = name.lstrip("%")
+    rest = line[eq + 3:]
+    if not rest:
+        return None
+    if rest[0] == "(":  # tuple type
+        type_text, pos = _balanced_parens(rest, 0)
+        type_text = "(" + type_text + ")"
+    else:
+        sp = rest.find(" ")
+        if sp < 0:
+            return None
+        type_text, pos = rest[:sp], sp
+    mo = _OP_RE.match(rest, pos)
+    if not mo:
+        return None
+    op = mo.group(1)
+    operands, after = _balanced_parens(rest, mo.end() - 1)
+    attrs = rest[after:]
+    return name, type_text, op, operands, attrs
+
+
+def parse_hlo_costs(hlo: str, attn_block: tuple[int, int] | None = None
+                    ) -> dict[str, float]:
+    """Loop-aware flops / HBM bytes / collective bytes from optimized HLO.
+
+    ``attn_block=(q_chunk, kv_chunk)``: additionally report
+    ``hbm_bytes_vmem_adj`` — the memory term with attention score-block
+    buffers excluded (any instruction whose result's trailing dims are the
+    (q, kv) block).  XLA-CPU materializes those tiles through HBM-visible
+    fusions; the Pallas TPU flash kernel (kernels/flash_attention) keeps
+    them in VMEM, so the adjusted number is the TPU-faithful model
+    (both are reported; EXPERIMENTS.md §Roofline states which is which).
+    """
+    # ---- pass 0: split computations & build the symbol table ----
+    comps: dict[str, list[str]] = {}
+    entry: str | None = None
+    cur: str | None = None
+    symbols: dict[str, str] = {}  # instr name → result type text
+    for line in hlo.splitlines():
+        if line and not line[0].isspace() and line.rstrip().endswith("{"):
+            m = re.match(r"^(ENTRY\s+)?%?([\w.\-]+)", line)
+            if m:
+                cur = m.group(2)
+                comps[cur] = []
+                if m.group(1):
+                    entry = cur
+            continue
+        if line.startswith("}"):
+            cur = None
+            continue
+        if cur is None:
+            continue
+        comps[cur].append(line)
+        im = _parse_instr(line)
+        if im:
+            symbols[im[0]] = im[1]
+
+    if entry is None or not comps:
+        return {"flops": 0.0, "hbm_bytes": 0.0, "hbm_bytes_vmem_adj": 0.0,
+                "collective_bytes": 0.0, "max_trip": 1.0, "n_collectives": 0}
+
+    # ---- which computations are fusion/reducer bodies (bytes internal) ----
+    fused: set[str] = set()
+    for lines in comps.values():
+        for ln in lines:
+            for m in re.finditer(r"(?:calls|to_apply)=%?([\w.\-]+)", ln):
+                fused.add(m.group(1))
+
+    # Per fused computation: traffic multiplier per parameter index.  A
+    # "wide" loop-invariant parameter that is only *sliced/gathered* inside
+    # the fusion contributes its slice sizes, not its full size — otherwise
+    # stacked scan weights would be charged L× per step.
+    fusion_param_traffic: dict[str, dict[int, float]] = {}
+    for fname in fused:
+        lines = comps.get(fname, ())
+        pname_to_idx: dict[str, int] = {}
+        for ln in lines:
+            im = _parse_instr(ln)
+            if im and im[2] == "parameter":
+                mi = re.match(r"\s*(\d+)", im[3]) or re.search(r"parameter\((\d+)\)", ln)
+                idx = int(mi.group(1)) if mi else len(pname_to_idx)
+                pname_to_idx[im[0]] = idx
+        traffic: dict[int, float] = {}
+        consumers: dict[str, list[tuple[str, str]]] = {p: [] for p in pname_to_idx}
+        for ln in lines:
+            im = _parse_instr(ln)
+            if not im:
+                continue
+            nm, rt, op, operands, _ = im
+            for p in _NAME_RE.findall(operands):
+                if p in consumers:
+                    consumers[p].append((op, rt))
+        for p, idx in pname_to_idx.items():
+            uses = consumers.get(p, [])
+            full = _type_bytes(symbols.get(p, ""))
+            if uses and all(op in ("dynamic-slice", "slice", "gather")
+                            for op, _ in uses):
+                traffic[idx] = sum(_type_bytes(rt) for _, rt in uses)
+            else:
+                traffic[idx] = full
+        fusion_param_traffic[fname] = traffic
+
+    def trip_count(cond_name: str) -> float:
+        best = 1.0
+        for ln in comps.get(cond_name, ()):
+            for m in re.finditer(r"constant\((\d+)\)", ln):
+                best = max(best, float(m.group(1)))
+        return best
+
+    # ---- per-computation local costs + call edges ----
+    def _is_attn_block(type_text: str) -> bool:
+        """Flash-attention VMEM-resident tiles: score blocks (…, qc, kvc)
+        and the online-softmax accumulator / p·v blocks (…, qc, hd).  The
+        Pallas kernel holds both in VMEM scratch; XLA-CPU routes them
+        through HBM-visible buffers."""
+        if attn_block is None:
+            return False
+        qc, kc, hd = attn_block
+        shapes = _SHAPE_RE.findall(type_text)
+        if not shapes:
+            return False
+        dims = [int(d) for d in shapes[0][1].split(",") if d]
+        return (len(dims) >= 4 and dims[-2] in (qc, kc)
+                and dims[-1] in (qc, kc, hd))
+
+    local: dict[str, dict[str, float]] = {}
+    calls: dict[str, list[tuple[str, float]]] = {}
+    n_coll = 0
+    for name, lines in comps.items():
+        flops = hbm = coll = 0.0
+        hbm_adj = 0.0
+        edges: list[tuple[str, float]] = []
+        count_bytes = name not in fused
+        for ln in lines:
+            im = _parse_instr(ln)
+            if not im:
+                continue
+            _, result_t, op, operands, attrs = im
+            operand_names = _NAME_RE.findall(operands)
+            if op == "fusion":
+                mf0 = re.search(r"calls=%?([\w.\-]+)", attrs)
+                tmap = fusion_param_traffic.get(mf0.group(1), {}) if mf0 else {}
+                operand_bytes = sum(
+                    tmap.get(i, _type_bytes(symbols.get(nm, "")))
+                    for i, nm in enumerate(operand_names)
+                )
+            elif op in ("dynamic-slice", "slice"):
+                operand_bytes = 0.0  # traffic ≈ result
+            elif op == "dynamic-update-slice":
+                # in-place: traffic ≈ update operand (+ indices, negligible)
+                operand_bytes = (
+                    _type_bytes(symbols.get(operand_names[1], ""))
+                    if len(operand_names) > 1 else 0.0
+                )
+            elif op == "gather":
+                operand_bytes = sum(  # rows touched ≈ result; indices read
+                    _type_bytes(symbols.get(nm, "")) for nm in operand_names[1:]
+                )
+            elif op == "scatter":
+                operand_bytes = 2.0 * sum(
+                    _type_bytes(symbols.get(nm, "")) for nm in operand_names[1:]
+                )
+            else:
+                operand_bytes = sum(
+                    _type_bytes(symbols.get(nm, "")) for nm in operand_names
+                )
+            if op == "dot":
+                out = 0.0
+                mm = _SHAPE_RE.findall(result_t)
+                if mm:
+                    out = _shape_prod(mm[0][1])
+                contracted = 1.0
+                mc = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", attrs)
+                if mc and operand_names:
+                    lhs_t = symbols.get(operand_names[0], "")
+                    lm = _SHAPE_RE.findall(lhs_t)
+                    if lm:
+                        lhs_dims = [int(d) for d in lm[0][1].split(",") if d]
+                        for i in mc.group(1).split(","):
+                            if i and int(i) < len(lhs_dims):
+                                contracted *= lhs_dims[int(i)]
+                flops += 2.0 * out * contracted
+            if op == "while":
+                mb = re.search(r"body=%?([\w.\-]+)", attrs)
+                mc2 = re.search(r"condition=%?([\w.\-]+)", attrs)
+                if mb:
+                    t = trip_count(mc2.group(1)) if mc2 else 1.0
+                    edges.append((mb.group(1), t))
+            elif op == "fusion":
+                mf = re.search(r"calls=%?([\w.\-]+)", attrs)
+                if mf:
+                    edges.append((mf.group(1), 1.0))
+            elif op == "call":
+                mf = re.search(r"to_apply=%?([\w.\-]+)", attrs)
+                if mf:
+                    edges.append((mf.group(1), 1.0))
+            elif op == "conditional":
+                for mf in re.finditer(r"(?:branch_computations=\{([^}]*)\}|"
+                                      r"(?:true|false)_computation=%?([\w.\-]+))",
+                                      attrs):
+                    blob = mf.group(1) or mf.group(2) or ""
+                    for nm in _NAME_RE.findall(blob) or re.findall(r"[\w.\-]+", blob):
+                        edges.append((nm, 1.0))
+            if any(op.startswith(c) for c in _COLLECTIVES):
+                if not op.endswith("-done"):
+                    coll += operand_bytes
+                    n_coll += 1
+            if (count_bytes and op not in _SKIP_BYTES_OPS
+                    and not op.endswith("-done") and not op.endswith("-start")):
+                result_bytes = (
+                    0.0 if op in ("dynamic-update-slice", "scatter")
+                    else _type_bytes(result_t)
+                )
+                hbm += result_bytes + operand_bytes
+                # VMEM-adjusted: drop attention score-block buffers
+                attn_bytes = sum(
+                    _type_bytes(symbols.get(nm, "")) for nm in operand_names
+                    if _is_attn_block(symbols.get(nm, ""))
+                )
+                adj_result = 0.0 if _is_attn_block(result_t) else result_bytes
+                hbm_adj += adj_result + max(operand_bytes - attn_bytes, 0.0)
+        local[name] = {"flops": flops, "hbm": hbm, "coll": coll,
+                       "hbm_adj": hbm_adj}
+        calls[name] = edges
+
+    memo: dict[str, dict[str, float]] = {}
+
+    def total(name: str, depth: int = 0) -> dict[str, float]:
+        if name in memo:
+            return memo[name]
+        if name not in local or depth > 128:
+            return {"flops": 0.0, "hbm": 0.0, "coll": 0.0, "hbm_adj": 0.0}
+        memo[name] = {"flops": 0.0, "hbm": 0.0, "coll": 0.0, "hbm_adj": 0.0}
+        acc = dict(local[name])
+        for callee, mult in calls.get(name, ()):
+            sub = total(callee, depth + 1)
+            acc["flops"] += mult * sub["flops"]
+            acc["hbm"] += mult * sub["hbm"]
+            acc["coll"] += mult * sub["coll"]
+            acc["hbm_adj"] += mult * sub["hbm_adj"]
+        memo[name] = acc
+        return acc
+
+    t = total(entry)
+    max_trip = max(
+        [m for edges in calls.values() for _, m in edges] + [1.0]
+    )
+    return {
+        "flops": t["flops"],
+        "hbm_bytes": t["hbm"],
+        "hbm_bytes_vmem_adj": t["hbm_adj"],
+        "collective_bytes": t["coll"],
+        "max_trip": max_trip,
+        "n_collectives": n_coll,
+    }
+
+
+def analyze_compiled(cell, lowered, compiled, mesh, hw: HW = V5E) -> dict[str, Any]:
+    """Roofline terms for one dry-run cell (per-chip convention)."""
+    n_chips = mesh.devices.size
+    hlo = compiled.as_text()
+    attn_block = getattr(cell, "attn_block", None)
+    costs = parse_hlo_costs(hlo, attn_block=attn_block)
+    ca = compiled.cost_analysis() or {}
+    raw_flops = float(ca.get("flops", 0.0))
+    flops_dev = costs["flops"]
+    hbm_dev = costs["hbm_bytes"]
+    coll_dev = costs["collective_bytes"]
+    t_compute = flops_dev / hw.peak_flops
+    t_memory = hbm_dev / hw.hbm_bw
+    t_collective = coll_dev / hw.ici_bw
+    terms = {"compute": t_compute, "memory": t_memory, "collective": t_collective}
+    bottleneck = max(terms, key=terms.get)
+    model_flops = float(cell.model_flops)
+    hlo_total = flops_dev * n_chips
+    return {
+        "n_chips": int(n_chips),
+        "hlo_flops_per_device": flops_dev,
+        "hlo_flops_raw_costanalysis": raw_flops,
+        "hbm_bytes_per_device": hbm_dev,
+        "collective_bytes_per_device": coll_dev,
+        "n_collectives": costs["n_collectives"],
+        "t_compute": t_compute,
+        "t_memory": t_memory,
+        "t_memory_vmem_adj": costs.get("hbm_bytes_vmem_adj", costs["hbm_bytes"]) / hw.hbm_bw,
+        "t_collective": t_collective,
+        "bottleneck": bottleneck,
+        "model_flops": model_flops,
+        "useful_flops_ratio": model_flops / hlo_total if hlo_total else 0.0,
+        "roofline_fraction": t_compute / max(max(terms.values()), 1e-30),
+        "max_while_trip": costs["max_trip"],
+    }

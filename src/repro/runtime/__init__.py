@@ -1,0 +1,3 @@
+from .fault import FaultTolerantLoop, FaultInjector  # noqa: F401
+from .straggler import StragglerMonitor  # noqa: F401
+from .elastic import ElasticController  # noqa: F401

@@ -1,0 +1,45 @@
+"""Elastic scaling: grow/shrink the worker set without losing the run.
+
+The elastic flow on resize (node failure or capacity change):
+  1. quiesce + checkpoint (host arrays — mesh-independent by design);
+  2. build the new mesh;
+  3. **re-partition with S5P** when the job is graph-shaped — the paper's
+     one-pass streaming property makes re-partitioning O(|E|) with O(|V|)
+     memory, which is why a streaming partitioner is the right choice for
+     elastic graph systems (DESIGN.md §5);
+  4. reshard the checkpoint onto the new mesh and resume.
+"""
+
+from __future__ import annotations
+
+from typing import Callable
+
+import jax
+
+from ..checkpoint import CheckpointManager
+from ..checkpoint.reshard import reshard_state
+
+__all__ = ["ElasticController"]
+
+
+class ElasticController:
+    def __init__(self, manager: CheckpointManager,
+                 make_mesh: Callable[[int], object],
+                 make_shardings: Callable[[object], object] | None = None,
+                 repartition: Callable[[int], object] | None = None):
+        self.manager = manager
+        self.make_mesh = make_mesh
+        self.make_shardings = make_shardings
+        self.repartition = repartition
+
+    def resize(self, state, step: int, new_size: int):
+        """Checkpoint → new mesh → (optional S5P re-partition) → reshard."""
+        self.manager.save(step, state)
+        self.manager.wait()
+        mesh = self.make_mesh(new_size)
+        host_state, step = self.manager.restore(like=state)
+        shardings = self.make_shardings(mesh) if self.make_shardings else None
+        new_state = (reshard_state(host_state, shardings)
+                     if shardings is not None else jax.device_put(host_state))
+        parts = self.repartition(new_size) if self.repartition else None
+        return new_state, mesh, parts, step

@@ -1,0 +1,62 @@
+"""Straggler detection and mitigation.
+
+Per-shard step-time EMAs; a shard whose EMA exceeds ``threshold ×`` the
+fleet median is flagged.  Mitigation hooks:
+
+- **data rebalance**: hand back a fraction of the straggler's stream range
+  (for the S5P partitioner this is a *local* fix — Algorithm 3's load
+  vector caps the receiving partitions, so quality bounds survive);
+- **checkpoint-and-exclude**: at persistent stragglers the elastic
+  controller (elastic.py) reshapes the mesh without the slow host.
+"""
+
+from __future__ import annotations
+
+from collections import defaultdict
+
+import numpy as np
+
+__all__ = ["StragglerMonitor"]
+
+
+class StragglerMonitor:
+    def __init__(self, n_shards: int = 1, ema: float = 0.9,
+                 threshold: float = 1.5):
+        self.n_shards = n_shards
+        self.ema = ema
+        self.threshold = threshold
+        self.times: dict[int, float] = defaultdict(float)
+        self.history: list[tuple[int, float]] = []
+
+    def record(self, step: int, dt: float, shard: int = 0) -> None:
+        prev = self.times[shard]
+        self.times[shard] = dt if prev == 0 else self.ema * prev + (1 - self.ema) * dt
+        self.history.append((step, dt))
+
+    def stragglers(self) -> list[int]:
+        if not self.times:
+            return []
+        vals = np.array([self.times[s] for s in range(self.n_shards)])
+        med = np.median(vals[vals > 0]) if (vals > 0).any() else 0.0
+        if med == 0:
+            return []
+        return [s for s in range(self.n_shards) if self.times[s] > self.threshold * med]
+
+    def rebalance_plan(self, shard_ranges: list[tuple[int, int]],
+                       give_frac: float = 0.25):
+        """Move ``give_frac`` of each straggler's stream range to the
+        fastest shard.  Returns the new ranges (edges are stream offsets —
+        a pure metadata move, no data reshuffle needed for re-streaming)."""
+        slow = set(self.stragglers())
+        if not slow or not self.times:
+            return shard_ranges
+        fastest = min(range(self.n_shards), key=lambda s: self.times[s] or 1e9)
+        out = list(shard_ranges)
+        for s in slow:
+            lo, hi = out[s]
+            cut = int((hi - lo) * give_frac)
+            out[s] = (lo, hi - cut)
+            flo, fhi = out[fastest]
+            # fastest absorbs the tail range (contiguity not required)
+            out[fastest] = (flo, fhi + cut)
+        return out

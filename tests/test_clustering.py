@@ -1,0 +1,62 @@
+"""Algorithm 1: the jitted scan must be bit-identical to the paper listing."""
+
+import numpy as np
+import pytest
+
+from proptest import cases, random_graph
+from repro.core import cluster_stream, compute_degrees, reference_cluster_python
+from repro.core.clustering import compact_clusters
+from repro.graphs import toy_graph_fig3
+
+
+@pytest.mark.parametrize("seed", list(cases(12)))
+def test_scan_matches_reference(seed):
+    src, dst, n, label = random_graph(seed)
+    if len(src) == 0:
+        return
+    rng = np.random.default_rng(seed)
+    xi = int(rng.integers(1, 8))
+    kappa = int(rng.integers(4, 2 * len(src) + 4))
+    ref = reference_cluster_python(list(zip(src.tolist(), dst.tolist())), n, xi, kappa)
+    st = cluster_stream(src, dst, n, xi=xi, kappa=kappa, chunk_size=max(len(src), 1))
+    assert np.array_equal(np.asarray(st.v2c_h), ref["v2c_h"].astype(np.int32)), label
+    assert np.array_equal(np.asarray(st.v2c_t), ref["v2c_t"].astype(np.int32)), label
+    assert np.array_equal(np.asarray(st.ld), ref["ld"].astype(np.int32))
+    assert int(st.next_h) == ref["next_h"]
+    assert int(st.next_t) == ref["next_t"]
+
+
+@pytest.mark.parametrize("seed", list(cases(4, 100)))
+def test_chunked_equals_unchunked(seed):
+    src, dst, n, _ = random_graph(seed)
+    if len(src) < 8:
+        return
+    st1 = cluster_stream(src, dst, n, xi=3, kappa=50, chunk_size=len(src))
+    st2 = cluster_stream(src, dst, n, xi=3, kappa=50, chunk_size=7)
+    assert np.array_equal(np.asarray(st1.v2c_h), np.asarray(st2.v2c_h))
+    assert np.array_equal(np.asarray(st1.v2c_t), np.asarray(st2.v2c_t))
+
+
+def test_toy_graph_head_tail_split():
+    """Paper Fig. 3/ξ: head vertices are exactly the high-degree ones."""
+    src, dst, n = toy_graph_fig3()
+    deg = compute_degrees(src, dst, n)
+    xi = 2 * len(src) // n  # β=1 ⇒ ξ = avg degree = 2
+    st = cluster_stream(src, dst, n, xi=xi, kappa=9)
+    res = compact_clusters(st, deg, xi)
+    head_vertices = set(np.nonzero(np.asarray(deg) > xi)[0].tolist())
+    assert head_vertices == {0, 1, 2, 3, 6}
+    # every head vertex has a head cluster; tail-only vertices don't
+    v2ch = np.asarray(res.v2c_h)
+    assert all(v2ch[v] >= 0 for v in head_vertices)
+    assert all(v2ch[v] < 0 for v in range(n) if v not in head_vertices)
+    assert res.n_head >= 1
+
+
+def test_streaming_memory_contract():
+    """Carry is O(|V|): arrays sized V / V+1 only."""
+    src, dst, n = toy_graph_fig3()
+    st = cluster_stream(src, dst, n, xi=2, kappa=9)
+    assert st.v2c_h.shape == (n,)
+    assert st.vol_h.shape == (n + 1,)
+    assert st.ld.shape == (n,)

@@ -1,0 +1,59 @@
+"""Count-min sketch: one-sided error, ε-bound, mergeability, pair keys."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from proptest import cases
+from repro.core.cms import (
+    cms_merge, cms_query, cms_update, make_sketch, pair_key, suggest_params,
+)
+
+
+def test_suggested_params_match_paper():
+    w, d = suggest_params(0.1, 0.01)
+    assert w == 28 and d == 5  # ⌈e/0.1⌉, ⌈ln 100⌉
+
+
+@pytest.mark.parametrize("seed", list(cases(6)))
+def test_one_sided_error(seed):
+    """CMS never under-counts, and over-counts ≤ ε·N w.h.p."""
+    rng = np.random.default_rng(seed)
+    n_keys = 200
+    keys = rng.integers(0, 2**31, n_keys).astype(np.uint32)
+    counts = rng.integers(1, 20, n_keys).astype(np.uint32)
+    sk = make_sketch(256, 5, seed=seed)
+    sk = cms_update(sk, jnp.asarray(keys), jnp.asarray(counts))
+    est = np.asarray(cms_query(sk, jnp.asarray(keys)))
+    # aggregate exact counts per distinct key (collisions in draw possible)
+    exact = {}
+    for k, c in zip(keys.tolist(), counts.tolist()):
+        exact[k] = exact.get(k, 0) + c
+    truth = np.array([exact[k] for k in keys.tolist()])
+    assert np.all(est >= truth), "CMS must never under-count"
+    total = counts.sum()
+    eps = np.e / 256
+    viol = np.mean(est - truth > eps * total)
+    assert viol < 0.05
+
+
+def test_mergeable():
+    """merge(update(A), update(B)) == update(A ++ B) — the psum property."""
+    keys = jnp.arange(100, dtype=jnp.uint32) * 7919
+    sk0 = make_sketch(64, 4, seed=3)
+    a = cms_update(sk0, keys[:50])
+    b = cms_update(sk0, keys[50:])
+    merged = cms_merge(a, b)
+    direct = cms_update(sk0, keys)
+    assert jnp.all(merged.table == direct.table)
+
+
+def test_pair_key_symmetric():
+    a = jnp.array([3, 9, 100], jnp.int32)
+    b = jnp.array([9, 3, 100], jnp.int32)
+    assert jnp.all(pair_key(a, b) == pair_key(b, a))
+    # distinct pairs should (almost surely) hash apart
+    k1 = pair_key(jnp.array([1]), jnp.array([2]))
+    k2 = pair_key(jnp.array([1]), jnp.array([3]))
+    assert int(k1[0]) != int(k2[0])

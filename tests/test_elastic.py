@@ -1,0 +1,61 @@
+"""Elastic controller + label propagation on the GAS engine."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import CheckpointManager
+from repro.core import S5PConfig, s5p_partition
+from repro.gas import build_gas_graph
+from repro.gas.engine import label_propagation
+from repro.graphs.generators import community_graph
+from repro.optim import AdamWConfig, adamw_update, init_state
+from repro.runtime import ElasticController
+
+
+def test_elastic_resize_preserves_state(tmp_path):
+    cfg = AdamWConfig(lr=0.1, weight_decay=0.0)
+    state = init_state({"w": jnp.arange(4.0)})
+    for _ in range(3):
+        state = adamw_update(state, {"w": jnp.ones(4)}, cfg)
+    manager = CheckpointManager(tmp_path, keep=2, async_write=False)
+    calls = []
+    controller = ElasticController(
+        manager,
+        make_mesh=lambda n: jax.make_mesh((1,), ("data",)),
+        repartition=lambda k: calls.append(k) or k,
+    )
+    new_state, mesh, parts, step = controller.resize(state, 3, 7)
+    assert calls == [7]
+    np.testing.assert_array_equal(np.asarray(new_state.params["w"]),
+                                  np.asarray(state.params["w"]))
+    np.testing.assert_array_equal(np.asarray(new_state.mu["w"]),
+                                  np.asarray(state.mu["w"]))
+    assert step == 3
+
+
+def test_label_propagation_components():
+    """Two disjoint communities → two final labels, any partitioning."""
+    rng = np.random.default_rng(0)
+    # two cliques of 20, no cross edges
+    edges = []
+    for base in (0, 20):
+        for i in range(20):
+            for j in range(i + 1, 20):
+                if rng.random() < 0.4:
+                    edges.append((base + i, base + j))
+    # ensure connectivity with a path
+    for base in (0, 20):
+        for i in range(19):
+            edges.append((base + i, base + i + 1))
+    src = np.array([e[0] for e in edges], np.int32)
+    dst = np.array([e[1] for e in edges], np.int32)
+    n = 40
+    parts = s5p_partition(src, dst, n, S5PConfig(k=4)).parts
+    g = build_gas_graph(src, dst, parts, n, 4)
+    labels, stats = label_propagation(g, iterations=25)
+    labels = np.asarray(labels)
+    assert len(set(labels[:20].tolist())) == 1
+    assert len(set(labels[20:].tolist())) == 1
+    assert labels[0] != labels[20]
+    assert stats.total_bytes() > 0

@@ -1,0 +1,77 @@
+"""Stackelberg game: equilibrium, potential descent, PoA sanity."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from proptest import cases
+from repro.core.game import (
+    GameInputs, best_response_gap, compute_delta, init_assignment, run_game,
+    social_welfare, _cluster_degrees,
+)
+
+
+def _random_inputs(seed, n_clusters=40, k=4, n_head=8):
+    rng = np.random.default_rng(seed)
+    sizes = rng.integers(1, 50, n_clusters).astype(np.float32)
+    n_pairs = n_clusters * 3
+    a = rng.integers(0, n_clusters, n_pairs)
+    b = rng.integers(0, n_clusters, n_pairs)
+    keep = a != b
+    a, b = np.minimum(a, b)[keep], np.maximum(a, b)[keep]
+    w = rng.integers(1, 10, a.size).astype(np.float32)
+    return GameInputs(
+        sizes=jnp.asarray(sizes), pair_a=jnp.asarray(a, jnp.int32),
+        pair_b=jnp.asarray(b, jnp.int32), pair_w=jnp.asarray(w),
+        n_head=n_head, k=k,
+    ), n_clusters
+
+
+@pytest.mark.parametrize("seed", list(cases(6)))
+def test_converged_game_is_nash(seed):
+    inputs, C = _random_inputs(seed)
+    res = run_game(inputs, C, batch_size=1, max_rounds=200, accept_prob=1.0)
+    assert bool(res.converged)
+    gap = float(best_response_gap(inputs, res.assignment, C))
+    assert gap <= 1e-4, f"equilibrium violated: gap={gap}"
+
+
+@pytest.mark.parametrize("seed", list(cases(4, 50)))
+def test_batched_game_converges_and_is_nash(seed):
+    inputs, C = _random_inputs(seed, n_clusters=60)
+    res = run_game(inputs, C, batch_size=16, max_rounds=300, accept_prob=0.7)
+    assert bool(res.converged)
+    gap = float(best_response_gap(inputs, res.assignment, C))
+    assert gap <= 1e-4
+
+
+def test_game_reduces_social_welfare():
+    inputs, C = _random_inputs(0)
+    degs = _cluster_degrees(inputs, C)
+    delta = compute_delta(inputs.sizes, degs, inputs.k)
+    init = jnp.asarray(init_assignment(np.asarray(inputs.sizes), inputs.k))
+    s0 = float(social_welfare(inputs, init, delta))
+    res = run_game(inputs, C, batch_size=1, max_rounds=200, accept_prob=1.0)
+    s1 = float(social_welfare(inputs, res.assignment, delta))
+    assert s1 <= s0 + 1e-5
+
+
+def test_leaders_move_first():
+    """With one round budget, only a full leader+follower sweep happens —
+    sanity that the two-stage structure is wired (no crash, legal output)."""
+    inputs, C = _random_inputs(1)
+    res = run_game(inputs, C, batch_size=8, max_rounds=1)
+    assign = np.asarray(res.assignment)
+    assert assign.shape == (C,)
+    assert assign.min() >= 0 and assign.max() < inputs.k
+
+
+def test_delta_in_paper_range():
+    """Eq. (11): 1/Σ|c| ≤ δ ≤ k·Σ(F+|c|)/(Σ|c|)²."""
+    inputs, C = _random_inputs(2)
+    degs = _cluster_degrees(inputs, C)
+    delta = float(compute_delta(inputs.sizes, degs, inputs.k))
+    total = float(jnp.sum(inputs.sizes))
+    lo = 1.0 / total
+    hi = inputs.k * float(jnp.sum(degs + inputs.sizes)) / total**2
+    assert lo <= delta <= hi + 1e-9

@@ -1,0 +1,82 @@
+"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps in interpret mode."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.cms import cms_query, cms_update, make_sketch
+from repro.kernels.cin import cin_layer_kernel, cin_layer_ref
+from repro.kernels.cms_sketch import cms_query_kernel, cms_update_kernel
+from repro.kernels.flash_attention import attention_ref, flash_attention_tpu
+from repro.kernels.segment_agg import segment_agg_ref, segment_aggregate
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("shape", [
+    (1, 128, 4, 2, 64),   # small GQA
+    (2, 256, 8, 8, 64),   # MHA (G=1)
+    (1, 200, 6, 2, 32),   # ragged (padding path)
+])
+@pytest.mark.parametrize("window", [None, 64])
+def test_flash_kernel_sweep(shape, dtype, window):
+    B, S, H, KV, hd = shape
+    ks = jax.random.split(jax.random.PRNGKey(hash((shape, window)) % 2**31), 3)
+    q = jax.random.normal(ks[0], (B, S, H, hd)).astype(dtype)
+    k = jax.random.normal(ks[1], (B, S, KV, hd)).astype(dtype)
+    v = jax.random.normal(ks[2], (B, S, KV, hd)).astype(dtype)
+    pos = jnp.broadcast_to(jnp.arange(S), (B, S))
+    out = flash_attention_tpu(q, k, v, pos, pos, causal=True, window=window,
+                              block_q=64, block_k=64)
+    G = H // KV
+    qk = q.reshape(B, S, KV, G, hd).transpose(0, 2, 1, 3, 4).reshape(B * KV, S, G * hd)
+    kk = k.transpose(0, 2, 1, 3).reshape(B * KV, S, hd)
+    vk = v.transpose(0, 2, 1, 3).reshape(B * KV, S, hd)
+    pp = jnp.repeat(pos, KV, axis=0)
+    ref = attention_ref(qk, kk, vk, pp, pp, causal=True, window=window)
+    ref = ref.reshape(B, KV, S, G, hd).transpose(0, 2, 1, 3, 4).reshape(B, S, H, hd)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 2e-5
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(ref, np.float32), atol=tol)
+
+
+@pytest.mark.parametrize("width,depth,n", [(64, 4, 1000), (256, 5, 5000),
+                                           (32, 3, 100)])
+def test_cms_kernel_bit_exact(width, depth, n):
+    sk = make_sketch(width, depth, seed=width)
+    keys = jax.random.randint(jax.random.PRNGKey(n), (n,), 0, 2**31 - 1
+                              ).astype(jnp.uint32)
+    ref = cms_update(sk, keys)
+    out = cms_update_kernel(sk, keys)
+    assert jnp.all(ref.table == out.table)
+    q = keys[: min(n, 500)]
+    assert jnp.all(cms_query(ref, q) == cms_query_kernel(out, q))
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("V,E,d", [(200, 1000, 32), (513, 4097, 64), (64, 100, 16)])
+def test_segment_agg_sweep(V, E, d, dtype):
+    ks = jax.random.split(jax.random.PRNGKey(V + E), 4)
+    x = jax.random.normal(ks[0], (V, d)).astype(dtype)
+    src = jax.random.randint(ks[1], (E,), 0, V, dtype=jnp.int32)
+    dst = jax.random.randint(ks[2], (E,), 0, V, dtype=jnp.int32)
+    w = jax.random.uniform(ks[3], (E,))
+    out = segment_aggregate(x, src, dst, w, V)
+    ref = segment_agg_ref(x, src, dst, w, V)
+    tol = 1e-1 if dtype == jnp.bfloat16 else 1e-4
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32), atol=tol)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("B,Hk,m,D,Hn", [(64, 10, 6, 8, 12), (300, 39, 39, 10, 200)])
+def test_cin_kernel_sweep(B, Hk, m, D, Hn, dtype):
+    ks = jax.random.split(jax.random.PRNGKey(B), 3)
+    xk = jax.random.normal(ks[0], (B, Hk, D)).astype(dtype)
+    x0 = jax.random.normal(ks[1], (B, m, D)).astype(dtype)
+    w = (jax.random.normal(ks[2], (Hk * m, Hn)) * 0.1).astype(dtype)
+    out = cin_layer_kernel(xk, x0, w, batch_block=64)
+    ref = cin_layer_ref(xk, x0, w)
+    tol = 1e-1 if dtype == jnp.bfloat16 else 1e-4
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32), atol=tol, rtol=1e-2)

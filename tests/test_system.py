@@ -1,0 +1,76 @@
+"""End-to-end behaviour: partition → GAS deploy → comm win (the paper's
+full pipeline), plus sampler and postprocess invariants."""
+
+import numpy as np
+import pytest
+
+from proptest import cases, random_graph
+from repro.core import S5PConfig, s5p_partition, gas_comm_bytes
+from repro.core.baselines import hash_partition, dbh_partition
+from repro.gas import build_gas_graph, pagerank
+from repro.graphs import build_csr, NeighborSampler
+from repro.graphs.generators import community_graph
+
+
+def test_end_to_end_partition_then_pagerank():
+    """The paper's deployment story (§6.6): S5P → PowerGraph-style engine →
+    lower comm than hash/DBH at equal PageRank results."""
+    src, dst, n = community_graph(1500, n_communities=24, avg_degree=8, seed=11)
+    k = 8
+    results = {}
+    values = {}
+    for name, parts in (
+        ("hash", hash_partition(src, dst, n, k)),
+        ("dbh", dbh_partition(src, dst, n, k)),
+        ("s5p", s5p_partition(src, dst, n, S5PConfig(k=k)).parts),
+    ):
+        g = build_gas_graph(src, dst, parts, n, k)
+        vals, stats = pagerank(g, iterations=5)
+        results[name] = stats.total_bytes()
+        values[name] = np.asarray(vals)
+    # same answer regardless of partitioning
+    np.testing.assert_allclose(values["s5p"], values["hash"], rtol=1e-4)
+    # S5P communicates least (the paper's Fig. 11 claim)
+    assert results["s5p"] < results["hash"]
+    assert results["s5p"] < results["dbh"]
+
+
+@pytest.mark.parametrize("seed", list(cases(3)))
+def test_neighbor_sampler_valid(seed):
+    src, dst, n, _ = random_graph(seed)
+    if len(src) < 20:
+        return
+    csr = build_csr(src, dst, n)
+    sampler = NeighborSampler(csr, fanouts=(3, 2), batch_nodes=4, seed=seed)
+    sub = sampler.sample()
+    n_real_edges = int(sub.edge_mask.sum())
+    # every sampled edge exists in the symmetrized graph
+    edge_set = set()
+    for u, v in zip(src.tolist(), dst.tolist()):
+        edge_set.add((u, v))
+        edge_set.add((v, u))
+    for i in range(n_real_edges):
+        gu = int(sub.nodes[sub.edge_src[i]])
+        gv = int(sub.nodes[sub.edge_dst[i]])
+        assert (gu, gv) in edge_set
+    # fanout budget respected
+    assert n_real_edges <= 4 * 3 + 4 * 3 * 2
+    assert sub.nodes.shape[0] == sampler.max_nodes
+
+
+def test_postprocess_respects_capacity():
+    from repro.core.postprocess import assign_edges_stream
+    import jax.numpy as jnp
+
+    rng = np.random.default_rng(0)
+    E, k, C = 1000, 4, 10
+    src = jnp.asarray(rng.integers(0, 100, E), jnp.int32)
+    dst = jnp.asarray(rng.integers(100, 200, E), jnp.int32)
+    cu = jnp.asarray(rng.integers(0, C, E), jnp.int32)
+    cv = jnp.asarray(rng.integers(0, C, E), jnp.int32)
+    c2p = jnp.asarray(rng.integers(0, k, C), jnp.int32)
+    is_head = jnp.asarray(rng.random(E) < 0.3)
+    L = int(np.ceil(E / k))
+    parts, load = assign_edges_stream(src, dst, is_head, cu, cv, c2p, k, L)
+    assert int(jnp.max(load)) <= L + 1
+    assert int(jnp.sum(load)) == E
