@@ -10,10 +10,63 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from repro.graphs import rmat_graph
 from repro.kernels.flash_attention import flash_attention_tpu
+from repro.kernels.stream_scan import hdrf_chunk, hdrf_init, stream_scan_tpu
 from repro.models.attention import flash_attention
+from repro.streaming import EdgeStream, run_scan, run_scan_batched
 
 from .common import emit, timed
+
+
+def run_stream_scan(quick: bool = True):
+    """stream_scan: fused Pallas chunk step vs the ``lax.scan`` reference
+    on a ≥1M-edge synthetic R-MAT stream (the paper's G₁-style skew)."""
+    k = 8
+    src, dst, n = rmat_graph(16, edge_factor=17, seed=0, dedup=False)
+    E = len(src)
+    stream = EdgeStream(src, dst, n, chunk_size=1 << 16)
+
+    def ref_full():
+        parts, _ = run_scan(stream, hdrf_init(n, k), hdrf_chunk)
+        return parts.block_until_ready()
+
+    ref_full()  # warm the chunk-scan compile cache
+    _, us = timed(ref_full)
+    emit(f"kernels/stream_scan_ref_hdrf/{E}", us,
+         f"edges_per_s={E / (us / 1e6):.0f}")
+
+    # batched engine: 4 λ-scenarios in one pass (vmapped carry)
+    lams = [0.5, 1.0, 1.5, 4.0]
+    carries = [hdrf_init(n, k, lam) for lam in lams]
+    stacked = jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *carries)
+
+    def ref_batched():
+        parts, _ = run_scan_batched(stream, stacked, hdrf_chunk)
+        return parts.block_until_ready()
+
+    ref_batched()
+    _, usb = timed(ref_batched)
+    emit(f"kernels/stream_scan_ref_hdrf_batched4/{E}", usb,
+         f"scenario_edges_per_s={4 * E / (usb / 1e6):.0f}")
+
+    # Pallas kernel: interpret mode on CPU is correctness-only, so time a
+    # bounded slice of chunks and report per-edge cost on the same graph
+    ek = E if jax.default_backend() == "tpu" else 4096
+    load = jnp.zeros((k,), jnp.int32)
+    rep = jnp.zeros((n, k), jnp.int32)
+    pd = jnp.zeros((n,), jnp.int32)
+
+    def kern():
+        parts, *_ = stream_scan_tpu(src[:ek], dst[:ek], load, rep, pd, 1.1,
+                                    mode="hdrf")
+        return parts.block_until_ready()
+
+    kern()  # warm the kernel compile, like the ref path above
+    _, usk = timed(kern)
+    note = "" if jax.default_backend() == "tpu" else \
+        f"interpret-mode(correctness-only),{ek}/{E}_edges"
+    emit(f"kernels/stream_scan_pallas/{ek}", usk, note)
 
 
 def run(quick: bool = True):
@@ -33,3 +86,5 @@ def run(quick: bool = True):
     _, us2 = timed(lambda: flash_attention_tpu(q, k, v, pos, pos).block_until_ready())
     emit("kernels/flash_attention_pallas_interp/512", us2,
          "interpret-mode(correctness-only)")
+
+    run_stream_scan(quick)

@@ -26,16 +26,16 @@ they double as the paper's Fig. 7 ablations (CLUGP-style == S5P with
 from __future__ import annotations
 
 import math
-from functools import partial
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from . import clustering as _cl
-from . import game as _game
 from . import postprocess as _post
 from .s5p import S5PConfig, s5p_partition
+from ..kernels import stream_scan as _scan
+from ..streaming import EdgeStream, run_scan, run_scan_batched
 
 __all__ = [
     "hash_partition",
@@ -43,6 +43,8 @@ __all__ = [
     "grid_partition",
     "greedy_partition",
     "hdrf_partition",
+    "hdrf_partition_batched",
+    "grid_partition_multi_seed",
     "two_ps_partition",
     "clugp_partition",
     "PARTITIONERS",
@@ -80,106 +82,94 @@ def _grid_dims(k: int) -> tuple[int, int]:
     return r, k // r
 
 
-def grid_partition(src, dst, n_vertices, k, seed=0):
-    """Grid/constrained candidate partitioning, sequential least-loaded pick."""
-    r, c = _grid_dims(k)
+def _as_stream(src, dst, n_vertices, stream, chunk_size):
+    if stream is not None:
+        return stream
+    from ..streaming.stream import DEFAULT_CHUNK
+
+    return EdgeStream(src, dst, n_vertices, chunk_size=chunk_size or DEFAULT_CHUNK)
+
+
+def _grid_rowcol(n_vertices, k, c, seed):
     cell = (_hash32(jnp.arange(n_vertices, dtype=jnp.int32), seed) % jnp.uint32(k)).astype(
         jnp.int32
     )
-    row = cell // c
-    col = cell % c
+    return cell // c, cell % c
 
-    @partial(jax.jit, static_argnames=())
-    def run(src, dst, row, col):
-        def step(load, e):
-            u, v = e
-            # candidate set: grid intersection of u's row/col with v's —
-            # cells (row_u, col_v) and (row_v, col_u); degenerate → own cell
-            cand1 = row[u] * c + col[v]
-            cand2 = row[v] * c + col[u]
-            pick = jnp.where(load[cand1] <= load[cand2], cand1, cand2)
-            valid = u != v
-            load = load.at[pick].add(jnp.where(valid, 1, 0))
-            return load, jnp.where(valid, pick, -1)
 
-        return jax.lax.scan(step, jnp.zeros((k,), jnp.int32), (src, dst))
+def grid_partition(src, dst, n_vertices, k, seed=0, *, stream=None, chunk_size=None):
+    """Grid/constrained candidate partitioning, sequential least-loaded pick.
 
-    _, parts = run(src, dst, row, col)
+    Candidate set: grid intersection of u's row/col with v's — cells
+    (row_u, col_v) and (row_v, col_u); degenerate → own cell.
+    """
+    _, c = _grid_dims(k)
+    row, col = _grid_rowcol(n_vertices, k, c, seed)
+    st = _as_stream(src, dst, n_vertices, stream, chunk_size)
+    parts, _ = run_scan(st, _scan.grid_init(k, row, col, c), _scan.grid_chunk)
     return parts
 
 
-def greedy_partition(src, dst, n_vertices, k, seed=0):
+def grid_partition_multi_seed(src, dst, n_vertices, k, seeds, *, stream=None,
+                              chunk_size=None):
+    """Vmapped multi-seed grid: one compiled engine, |seeds| scenarios.
+
+    Returns (len(seeds), E) parts — each row identical to
+    ``grid_partition(..., seed=s)``.
+    """
+    _, c = _grid_dims(k)
+    carries = [_scan.grid_init(k, *_grid_rowcol(n_vertices, k, c, s), c) for s in seeds]
+    stacked = jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *carries)
+    st = _as_stream(src, dst, n_vertices, stream, chunk_size)
+    parts, _ = run_scan_batched(st, stacked, _scan.grid_chunk)
+    return parts
+
+
+def greedy_partition(src, dst, n_vertices, k, seed=0, *, stream=None,
+                     chunk_size=None, use_kernel=None):
     """PowerGraph Greedy: 4-case replica-aware assignment."""
-
-    @partial(jax.jit, static_argnames=())
-    def run(src, dst):
-        inf = jnp.int32(2**30)
-
-        def step(carry, e):
-            load, rep = carry  # rep: (V, k) bool replica bitmap
-            u, v = e
-            au = rep[u]
-            av = rep[v]
-            both = au & av
-            either = au | av
-            case1 = jnp.any(both)
-            case2 = jnp.any(au) & jnp.any(av)
-            case3 = jnp.any(either)
-            # candidate mask per case; case4 = all partitions
-            mask = jnp.where(
-                case1, both, jnp.where(case2, either, jnp.where(case3, either, True))
-            )
-            score = jnp.where(mask, load, inf)
-            pick = jnp.argmin(score).astype(jnp.int32)
-            valid = u != v
-            load = load.at[pick].add(jnp.where(valid, 1, 0))
-            rep = rep.at[u, pick].max(valid)
-            rep = rep.at[v, pick].max(valid)
-            return (load, rep), jnp.where(valid, pick, -1)
-
-        init = (jnp.zeros((k,), jnp.int32), jnp.zeros((n_vertices, k), jnp.bool_))
-        (_, _), parts = jax.lax.scan(step, init, (src, dst))
-        return parts
-
-    return run(src, dst)
+    st = _as_stream(src, dst, n_vertices, stream, chunk_size)
+    chunk_fn = _scan.make_chunk_fn("greedy", use_kernel=use_kernel)
+    parts, _ = run_scan(st, _scan.greedy_init(n_vertices, k), chunk_fn)
+    return parts
 
 
-def hdrf_partition(src, dst, n_vertices, k, seed=0, lam: float = 1.1, eps: float = 1e-3):
+def hdrf_partition(src, dst, n_vertices, k, seed=0, lam: float = 1.1, *,
+                   stream=None, chunk_size=None, use_kernel=None):
     """High-Degree Replicated First (partial-degree variant, as published)."""
+    st = _as_stream(src, dst, n_vertices, stream, chunk_size)
+    chunk_fn = _scan.make_chunk_fn("hdrf", use_kernel=use_kernel)
+    parts, _ = run_scan(st, _scan.hdrf_init(n_vertices, k, lam), chunk_fn)
+    return parts
 
-    @partial(jax.jit, static_argnames=())
-    def run(src, dst):
-        def step(carry, e):
-            load, rep, pd = carry
-            u, v = e
-            pd = pd.at[u].add(1)
-            pd = pd.at[v].add(1)
-            du = pd[u].astype(jnp.float32)
-            dv = pd[v].astype(jnp.float32)
-            theta_u = du / (du + dv)
-            theta_v = 1.0 - theta_u
-            g_u = jnp.where(rep[u], 1.0 + (1.0 - theta_u), 0.0)  # (k,)
-            g_v = jnp.where(rep[v], 1.0 + (1.0 - theta_v), 0.0)
-            maxl = jnp.max(load).astype(jnp.float32)
-            minl = jnp.min(load).astype(jnp.float32)
-            bal = (maxl - load.astype(jnp.float32)) / (eps + maxl - minl)
-            score = g_u + g_v + lam * bal
-            pick = jnp.argmax(score).astype(jnp.int32)
-            valid = u != v
-            load = load.at[pick].add(jnp.where(valid, 1, 0))
-            rep = rep.at[u, pick].max(valid)
-            rep = rep.at[v, pick].max(valid)
-            return (load, rep, pd), jnp.where(valid, pick, -1)
 
-        init = (
-            jnp.zeros((k,), jnp.int32),
-            jnp.zeros((n_vertices, k), jnp.bool_),
-            jnp.zeros((n_vertices,), jnp.int32),
-        )
-        (_, _, _), parts = jax.lax.scan(step, init, (src, dst))
-        return parts
+def hdrf_partition_batched(src, dst, n_vertices, ks, lams=None, *,
+                           stream=None, chunk_size=None):
+    """Vmapped multi-scenario HDRF: a batch over partition counts (padded
+    to max(ks), inactive lanes masked out of the argmax) and optionally λ
+    values (``lams[i]`` per scenario; default 1.1 — sweep λ at fixed k by
+    passing ``ks=[k]*len(lams)``).
 
-    return run(src, dst)
+    Returns (B, E) parts where B = len(ks); scenario i uses ``ks[i]``
+    partitions and ``lams[i]``.  One compiled engine serves the whole
+    batch — the multi-k / multi-λ sweep of the paper's Fig. 12 in a
+    single stream pass.
+    """
+    if not ks:
+        raise ValueError("ks must name at least one partition count")
+    if lams is None:
+        lams = [1.1] * len(ks)
+    if len(ks) != len(lams):
+        raise ValueError("ks and lams length mismatch")
+    kmax = max(ks)
+    carries = [
+        _scan.hdrf_init(n_vertices, kmax, lam, k_active=k)
+        for k, lam in zip(ks, lams)
+    ]
+    stacked = jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *carries)
+    st = _as_stream(src, dst, n_vertices, stream, chunk_size)
+    parts, _ = run_scan_batched(st, stacked, _scan.hdrf_chunk)
+    return parts
 
 
 def two_ps_partition(src, dst, n_vertices, k, seed=0):

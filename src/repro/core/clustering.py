@@ -217,27 +217,27 @@ def cluster_stream(
     kappa: int,
     chunk_size: int = 1 << 16,
     global_tail: bool = False,
+    stream=None,
 ) -> ClusterState:
     """Run Algorithm 1 over the whole stream in fixed-size device chunks.
 
     Only the O(|V|) carry persists between chunks — the streaming memory
-    contract.  Degrees are the one-pass global precompute.
+    contract.  Degrees are the one-pass global precompute.  An existing
+    :class:`repro.streaming.EdgeStream` (e.g. with a non-natural ordering)
+    may be passed instead of raw arrays.
     """
-    src = jnp.asarray(src, jnp.int32)
-    dst = jnp.asarray(dst, jnp.int32)
-    degrees = compute_degrees(src, dst, n_vertices)
-    state = init_state(n_vertices)
-    n = src.shape[0]
-    for start in range(0, n, chunk_size):
-        stop = min(start + chunk_size, n)
-        s, d = src[start:stop], dst[start:stop]
-        if s.shape[0] < chunk_size and start > 0:
-            # pad tail chunk with self-loops (no-ops) to reuse the compiled scan
-            pad = chunk_size - s.shape[0]
-            s = jnp.concatenate([s, jnp.zeros((pad,), jnp.int32)])
-            d = jnp.concatenate([d, jnp.zeros((pad,), jnp.int32)])
+    from ..streaming import EdgeStream
+
+    if stream is None:
+        stream = EdgeStream(src, dst, n_vertices, chunk_size=chunk_size)
+    src_j = jnp.asarray(stream.src, jnp.int32)
+    dst_j = jnp.asarray(stream.dst, jnp.int32)
+    degrees = compute_degrees(src_j, dst_j, stream.n_vertices)
+    state = init_state(stream.n_vertices)
+    for ch in stream.chunks():
         state = cluster_chunk(
-            state, s, d, degrees, xi=xi, kappa=kappa, global_tail=global_tail
+            state, ch.src, ch.dst, degrees, xi=xi, kappa=kappa,
+            global_tail=global_tail,
         )
     return state
 

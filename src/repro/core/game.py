@@ -145,9 +145,15 @@ def _run_game_jit(
         # hypothetical |p| if i moved to p: current size + s_i when p ≠ P_i
         hyp = part_sizes[None, :] + sizes[:, None] * (1.0 - onehot)
         cost = dk * sizes[:, None] * hyp + (degs[:, None] - w_ip + sizes[:, None]) * inv_k
-        best = jnp.argmin(cost, axis=1).astype(jnp.int32)
+        # deterministic tie-breaking: the current partition wins cost ties
+        # (no churn between equal-cost strategies), remaining ties go to the
+        # lowest partition id — best responses are a pure function of state
         cur = jnp.take_along_axis(cost, assign[:, None], axis=1)[:, 0]
-        improves = active & (best != assign) & (jnp.min(cost, axis=1) < cur)
+        strictly_better = jnp.min(cost, axis=1) < cur
+        best = jnp.where(
+            strictly_better, jnp.argmin(cost, axis=1).astype(jnp.int32), assign
+        )
+        improves = active & (best != assign) & strictly_better
         lucky = jax.random.uniform(key, (n_clusters,)) < accept_prob
         new_assign = jnp.where(improves & lucky, best, assign)
         wanted = jnp.any(improves)

@@ -68,27 +68,27 @@ def assign_edges_stream(
     max_load: int,
     *,
     chunk_size: int = 1 << 16,
+    stream=None,
 ):
-    """Algorithm 3 over the full stream.  Returns (parts (E,), load (k,))."""
+    """Algorithm 3 over the full stream.  Returns (parts (E,), load (k,)).
+
+    The per-edge attributes (head flag, endpoint clusters) ride along the
+    EdgeStream as extras, so a reordered stream keeps them aligned; parts
+    come back in arrival order either way.
+    """
+    from ..streaming import EdgeStream
+
+    if stream is None:
+        stream = EdgeStream(src, dst, chunk_size=chunk_size)
     load = jnp.zeros((k,), jnp.int32)
     ml = jnp.int32(max_load)
-    n = src.shape[0]
     outs = []
-    for start in range(0, n, chunk_size):
-        stop = min(start + chunk_size, n)
-        sl = slice(start, stop)
-        s, d, h, a, b = src[sl], dst[sl], is_head_edge[sl], cu[sl], cv[sl]
-        if s.shape[0] < chunk_size and start > 0:
-            pad = chunk_size - s.shape[0]
-            z = jnp.zeros((pad,), jnp.int32)
-            s = jnp.concatenate([s, z])
-            d = jnp.concatenate([d, z])  # self-loops ⇒ masked out
-            h = jnp.concatenate([h, jnp.zeros((pad,), h.dtype)])
-            a = jnp.concatenate([a, z])
-            b = jnp.concatenate([b, z])
-        load, parts = _assign_chunk(load, ml, s, d, h, a, b, c2p, k=k)
-        outs.append(parts[: stop - start])
-    return jnp.concatenate(outs), load
+    for ch in stream.chunks(is_head_edge, cu, cv):
+        h, a, b = ch.extras
+        load, parts = _assign_chunk(load, ml, ch.src, ch.dst, h, a, b, c2p, k=k)
+        outs.append(parts[: ch.n_valid])
+    parts = outs[0] if len(outs) == 1 else jnp.concatenate(outs)
+    return stream.scatter_back(parts), load
 
 
 def assign_edges(

@@ -20,7 +20,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-__all__ = ["TokenPipeline", "RecsysPipeline", "Prefetcher"]
+__all__ = ["TokenPipeline", "RecsysPipeline", "EdgeChunkPipeline", "Prefetcher"]
 
 
 class TokenPipeline:
@@ -56,6 +56,31 @@ class RecsysPipeline:
         h = (ids[:, 0] * 2654435761 % 97) / 97.0
         labels = (rng.random(self.batch) < 0.15 + 0.5 * h).astype(np.float32)
         return {"field_ids": jnp.asarray(ids), "labels": jnp.asarray(labels)}
+
+
+class EdgeChunkPipeline:
+    """Step-addressable edge-chunk feed over an :class:`EdgeStream`.
+
+    ``step`` indexes chunks modulo the stream (wrapping = one replay pass
+    per epoch), so the fault-tolerant loop's bitwise-resume contract holds:
+    replaying step s yields the identical chunk.  Compose with
+    :class:`Prefetcher` to overlap host chunking with device scans.
+    """
+
+    def __init__(self, src, dst, n_vertices: int, *, chunk_size: int = 1 << 16,
+                 ordering: str = "natural", seed: int = 0):
+        from ..streaming import EdgeStream
+
+        self.stream = EdgeStream(src, dst, n_vertices, chunk_size=chunk_size,
+                                 ordering=ordering, seed=seed)
+
+    def __call__(self, step: int) -> dict:
+        # chunks are index-addressable — only the requested one is built
+        # (bounded device footprint, the streaming package's contract)
+        nc = self.stream.n_chunks
+        ch = self.stream.chunk_at(step % nc)
+        return {"src": ch.src, "dst": ch.dst, "start": ch.start,
+                "n_valid": ch.n_valid, "epoch": step // nc}
 
 
 class Prefetcher:

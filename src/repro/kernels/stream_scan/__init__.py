@@ -1,0 +1,16 @@
+"""Fused streaming scoring-scan kernel (replica bitmap + score + load).
+
+kernel.py — the Pallas kernel; ops.py — engine-facing dispatch with CPU
+fallback; ref.py — the seed ``lax.scan`` oracles (bit-identical contract).
+"""
+
+from .kernel import stream_scan_tpu  # noqa: F401
+from .ops import kernel_fits, make_chunk_fn  # noqa: F401
+from .ref import (  # noqa: F401
+    greedy_chunk,
+    greedy_init,
+    grid_chunk,
+    grid_init,
+    hdrf_chunk,
+    hdrf_init,
+)

@@ -1,0 +1,148 @@
+"""Pallas TPU kernel: fused streaming scoring scan (one chunk per call).
+
+The hot step shared by the replica-aware streaming partitioners (Greedy,
+HDRF) is, per edge: gather both endpoints' replica-bitmap rows, score the
+k partitions, argmin/argmax-pick, then update the load vector and the two
+bitmap rows.  The ``lax.scan`` path materializes a fresh O(k|V|) carry per
+step for XLA to DCE; here the whole chunk runs as one kernel with the
+bitmap, load vector, and partial degrees resident in VMEM scratch-free
+output buffers and a single sequential ``fori_loop`` over the chunk's
+edges (the scan is inherently serial — the win is fusion, not
+parallelism: one kernel launch, zero carry re-materialization).
+
+Layout: row vectors are (1, k) (lane axis last, TPU-friendly); the
+replica bitmap is (V, k) int32 0/1; partial degrees (V, 1).  The chunk's
+edge ids and the state must fit VMEM — ``ops.py`` gates on a budget and
+falls back to the oracle above it.
+
+State is copied input→output once at kernel start, then updated in place;
+per-edge math mirrors ``ref.py`` expression-for-expression so interpret
+mode is bit-identical to the oracle (asserted by tests/test_streaming.py).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = ["stream_scan_tpu"]
+
+_INF_I32 = 2**30  # python int: jnp constants may not be captured by kernels
+
+
+def _scan_kernel(src_ref, dst_ref, load_in, rep_in, pd_in, lam_ref,
+                 parts_ref, load_ref, rep_ref, pd_ref, *, mode, eps, k):
+    load_ref[...] = load_in[...]
+    rep_ref[...] = rep_in[...]
+    pd_ref[...] = pd_in[...]
+    iota = jax.lax.broadcasted_iota(jnp.int32, (1, k), 1)
+
+    def body(e, _):
+        u = src_ref[e]
+        v = dst_ref[e]
+        valid = u != v
+        load = load_ref[0, :]
+        ru = rep_ref[u, :] > 0
+        rv = rep_ref[v, :] > 0
+        if mode == "hdrf":
+            pd_ref[u, 0] = pd_ref[u, 0] + 1
+            pd_ref[v, 0] = pd_ref[v, 0] + 1
+            du = pd_ref[u, 0].astype(jnp.float32)
+            dv = pd_ref[v, 0].astype(jnp.float32)
+            theta_u = du / (du + dv)
+            theta_v = 1.0 - theta_u
+            g_u = jnp.where(ru, 1.0 + (1.0 - theta_u), 0.0)
+            g_v = jnp.where(rv, 1.0 + (1.0 - theta_v), 0.0)
+            loadf = load.astype(jnp.float32)
+            maxl = jnp.max(loadf)
+            minl = jnp.min(loadf)
+            bal = (maxl - loadf) / (eps + maxl - minl)
+            score = g_u + g_v + lam_ref[0, 0] * bal
+            pick = jnp.argmax(score).astype(jnp.int32)
+        else:  # greedy
+            both = ru & rv
+            either = ru | rv
+            case1 = jnp.any(both)
+            case2 = jnp.any(ru) & jnp.any(rv)
+            case3 = jnp.any(either)
+            mask = jnp.where(
+                case1, both, jnp.where(case2, either, jnp.where(case3, either, True))
+            )
+            score = jnp.where(mask, load, _INF_I32)
+            pick = jnp.argmin(score).astype(jnp.int32)
+        hit = (iota[0, :] == pick) & valid
+        load_ref[0, :] = load + hit.astype(jnp.int32)
+        rep_ref[u, :] = jnp.maximum(rep_ref[u, :], hit.astype(jnp.int32))
+        rep_ref[v, :] = jnp.maximum(rep_ref[v, :], hit.astype(jnp.int32))
+        parts_ref[e] = jnp.where(valid, pick, -1)
+        return 0
+
+    jax.lax.fori_loop(0, src_ref.shape[0], body, 0)
+
+
+@functools.partial(jax.jit, static_argnames=("mode", "eps", "interpret"))
+def _stream_scan_call(src, dst, load, rep, pd, lam, *, mode, eps, interpret):
+    """Jitted pallas_call dispatch — one trace per (shape, mode), so chunked
+    streams reuse the compiled kernel instead of re-tracing per chunk."""
+    E = src.shape[0]
+    V, k = rep.shape
+    kernel = functools.partial(_scan_kernel, mode=mode, eps=eps, k=k)
+    return pl.pallas_call(
+        kernel,
+        grid=(1,),
+        in_specs=[
+            pl.BlockSpec((E,), lambda t: (0,)),
+            pl.BlockSpec((E,), lambda t: (0,)),
+            pl.BlockSpec((1, k), lambda t: (0, 0)),
+            pl.BlockSpec((V, k), lambda t: (0, 0)),
+            pl.BlockSpec((V, 1), lambda t: (0, 0)),
+            pl.BlockSpec((1, 1), lambda t: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((E,), lambda t: (0,)),
+            pl.BlockSpec((1, k), lambda t: (0, 0)),
+            pl.BlockSpec((V, k), lambda t: (0, 0)),
+            pl.BlockSpec((V, 1), lambda t: (0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((E,), jnp.int32),
+            jax.ShapeDtypeStruct((1, k), jnp.int32),
+            jax.ShapeDtypeStruct((V, k), jnp.int32),
+            jax.ShapeDtypeStruct((V, 1), jnp.int32),
+        ],
+        interpret=interpret,
+    )(
+        src,
+        dst,
+        load.reshape(1, k),
+        rep,
+        pd.reshape(V, 1),
+        lam.reshape(1, 1),
+    )
+
+
+def stream_scan_tpu(src, dst, load, rep, pd, lam, *, mode: str,
+                    eps: float = 1e-3, interpret: bool | None = None):
+    """Run one fused scoring-scan chunk.
+
+    src/dst: (E,) int32; load: (k,) int32; rep: (V, k) int32 0/1 bitmap;
+    pd: (V,) int32 partial degrees (ignored for mode="greedy");
+    lam: scalar f32 (HDRF λ).  Returns (parts (E,), load, rep, pd).
+    """
+    if mode not in ("greedy", "hdrf"):
+        raise ValueError(f"unknown mode {mode!r}")
+    if interpret is None:
+        interpret = jax.default_backend() == "cpu"
+    parts, load2, rep2, pd2 = _stream_scan_call(
+        jnp.asarray(src, jnp.int32),
+        jnp.asarray(dst, jnp.int32),
+        jnp.asarray(load, jnp.int32),
+        jnp.asarray(rep, jnp.int32),
+        jnp.asarray(pd, jnp.int32),
+        jnp.asarray(lam, jnp.float32),
+        mode=mode, eps=eps, interpret=interpret,
+    )
+    return parts, load2[0], rep2, pd2[:, 0]

@@ -1,0 +1,65 @@
+"""Dispatch layer: pick the fused Pallas chunk step or the scan oracle.
+
+``make_chunk_fn(mode)`` returns a chunk function with the engine contract
+``(carry, src, dst) -> (carry, parts)``.  On TPU (state within the VMEM
+budget) it runs the fused kernel; on CPU — where Pallas interpret mode is
+correctness-only — it runs the compiled ``lax.scan`` oracle.  Both paths
+produce bit-identical parts (tests/test_streaming.py).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import stream_scan_tpu
+from . import ref as _ref
+
+__all__ = ["make_chunk_fn", "kernel_fits"]
+
+_VMEM_STATE_BUDGET = 8 << 20  # bytes of bitmap+chunk state the kernel may hold
+
+
+def kernel_fits(n_vertices: int, k: int, chunk_size: int) -> bool:
+    state = n_vertices * k * 4 + n_vertices * 4 + 2 * chunk_size * 4
+    return state <= _VMEM_STATE_BUDGET
+
+
+def _greedy_kernel_chunk(carry, src, dst):
+    load, rep = carry
+    if not kernel_fits(rep.shape[0], rep.shape[1], src.shape[0]):
+        return _ref.greedy_chunk(carry, src, dst)  # VMEM-gated fallback
+    parts, load2, rep2, _ = stream_scan_tpu(
+        src, dst, load, rep.astype(jnp.int32),
+        jnp.zeros((rep.shape[0],), jnp.int32), jnp.float32(0.0), mode="greedy",
+    )
+    return (load2, rep2 > 0), parts
+
+
+def _hdrf_kernel_chunk(carry, src, dst):
+    load, rep, pd, lam, kmask = carry
+    if not kernel_fits(rep.shape[0], rep.shape[1], src.shape[0]):
+        return _ref.hdrf_chunk(carry, src, dst)  # VMEM-gated fallback
+    parts, load2, rep2, pd2 = stream_scan_tpu(
+        src, dst, load, rep.astype(jnp.int32), pd, lam, mode="hdrf",
+    )
+    return (load2, rep2 > 0, pd2, lam, kmask), parts
+
+
+def make_chunk_fn(mode: str, *, use_kernel: bool | None = None):
+    """Chunk function for ``streaming.run_scan``.
+
+    ``use_kernel=None`` auto-selects: the fused kernel on TPU, the oracle
+    scan elsewhere (interpret-mode Pallas is orders slower than XLA's
+    compiled scan on CPU).  The kernel path does not implement the padded
+    multi-k mask, so batched multi-k runs must use the oracle.
+    """
+    if use_kernel is None:
+        use_kernel = jax.default_backend() == "tpu"
+    if mode == "greedy":
+        return _greedy_kernel_chunk if use_kernel else _ref.greedy_chunk
+    if mode == "hdrf":
+        return _hdrf_kernel_chunk if use_kernel else _ref.hdrf_chunk
+    if mode == "grid":
+        return _ref.grid_chunk  # O(k) carry — no bitmap, nothing to fuse
+    raise ValueError(f"unknown mode {mode!r}")

@@ -1,0 +1,144 @@
+"""Oracle chunk functions: the seed ``lax.scan`` scoring scans, extracted.
+
+Each function processes one EdgeStream chunk and threads the partitioner
+carry; the per-edge state transitions are the seed implementations of
+``core.baselines`` moved here verbatim, so the refactored partitioners are
+bit-identical to the originals (pinned by the golden hashes in
+``tests/test_streaming.py``).
+
+Carries are plain tuples of arrays so they vmap cleanly: scenario
+parameters that vary across a batch (HDRF λ, the active-partition mask for
+padded multi-k runs) live *inside* the carry, not in the closure — one
+compiled chunk function serves every scenario in a batch.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "greedy_init",
+    "greedy_chunk",
+    "hdrf_init",
+    "hdrf_chunk",
+    "grid_init",
+    "grid_chunk",
+]
+
+_INF_I32 = jnp.int32(2**30)
+_HDRF_EPS = 1e-3
+
+
+# ---------------------------------------------------------------- greedy
+def greedy_init(n_vertices: int, k: int):
+    """(load (k,), rep (V, k) replica bitmap)."""
+    return (
+        jnp.zeros((k,), jnp.int32),
+        jnp.zeros((n_vertices, k), jnp.bool_),
+    )
+
+
+@jax.jit
+def greedy_chunk(carry, src, dst):
+    """PowerGraph Greedy: 4-case replica-aware assignment (one chunk)."""
+
+    def step(carry, e):
+        load, rep = carry
+        u, v = e
+        au = rep[u]
+        av = rep[v]
+        both = au & av
+        either = au | av
+        case1 = jnp.any(both)
+        case2 = jnp.any(au) & jnp.any(av)
+        case3 = jnp.any(either)
+        mask = jnp.where(
+            case1, both, jnp.where(case2, either, jnp.where(case3, either, True))
+        )
+        score = jnp.where(mask, load, _INF_I32)
+        pick = jnp.argmin(score).astype(jnp.int32)
+        valid = u != v
+        load = load.at[pick].add(jnp.where(valid, 1, 0))
+        rep = rep.at[u, pick].max(valid)
+        rep = rep.at[v, pick].max(valid)
+        return (load, rep), jnp.where(valid, pick, -1)
+
+    return jax.lax.scan(step, carry, (src, dst))
+
+
+# ----------------------------------------------------------------- hdrf
+def hdrf_init(n_vertices: int, k: int, lam: float = 1.1, k_active: int | None = None):
+    """(load, rep, pd partial degrees, λ, active-partition mask).
+
+    ``k_active < k`` pads the carry for multi-k batched runs: inactive
+    lanes never win the argmax, so a batch of different partition counts
+    shares one compiled engine at ``k = max(ks)``.
+    """
+    if k_active is None:
+        k_active = k
+    return (
+        jnp.zeros((k,), jnp.int32),
+        jnp.zeros((n_vertices, k), jnp.bool_),
+        jnp.zeros((n_vertices,), jnp.int32),
+        jnp.float32(lam),
+        jnp.arange(k) < k_active,
+    )
+
+
+@jax.jit
+def hdrf_chunk(carry, src, dst):
+    """HDRF (partial-degree variant, as published) over one chunk."""
+
+    def step(carry, e):
+        load, rep, pd, lam, kmask = carry
+        u, v = e
+        pd = pd.at[u].add(1)
+        pd = pd.at[v].add(1)
+        du = pd[u].astype(jnp.float32)
+        dv = pd[v].astype(jnp.float32)
+        theta_u = du / (du + dv)
+        theta_v = 1.0 - theta_u
+        g_u = jnp.where(rep[u], 1.0 + (1.0 - theta_u), 0.0)
+        g_v = jnp.where(rep[v], 1.0 + (1.0 - theta_v), 0.0)
+        loadf = load.astype(jnp.float32)
+        maxl = jnp.max(jnp.where(kmask, loadf, -jnp.inf))
+        minl = jnp.min(jnp.where(kmask, loadf, jnp.inf))
+        bal = (maxl - loadf) / (_HDRF_EPS + maxl - minl)
+        score = jnp.where(kmask, g_u + g_v + lam * bal, -jnp.inf)
+        pick = jnp.argmax(score).astype(jnp.int32)
+        valid = u != v
+        load = load.at[pick].add(jnp.where(valid, 1, 0))
+        rep = rep.at[u, pick].max(valid)
+        rep = rep.at[v, pick].max(valid)
+        return (load, rep, pd, lam, kmask), jnp.where(valid, pick, -1)
+
+    return jax.lax.scan(step, carry, (src, dst))
+
+
+# ----------------------------------------------------------------- grid
+def grid_init(load_k: int, row: jax.Array, col: jax.Array, n_cols: int):
+    """(load, per-vertex hashed row/col, #grid-columns)."""
+    return (
+        jnp.zeros((load_k,), jnp.int32),
+        jnp.asarray(row, jnp.int32),
+        jnp.asarray(col, jnp.int32),
+        jnp.int32(n_cols),
+    )
+
+
+@jax.jit
+def grid_chunk(carry, src, dst):
+    """Grid/constrained candidate partitioning, least-loaded pick."""
+
+    def step(carry, e):
+        load, row, col, c = carry
+        u, v = e
+        cand1 = row[u] * c + col[v]
+        cand2 = row[v] * c + col[u]
+        pick = jnp.where(load[cand1] <= load[cand2], cand1, cand2)
+        valid = u != v
+        load = load.at[pick].add(jnp.where(valid, 1, 0))
+        return (load, row, col, c), jnp.where(valid, pick, -1)
+
+    return jax.lax.scan(step, carry, (src, dst))

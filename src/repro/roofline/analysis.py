@@ -169,9 +169,15 @@ def parse_hlo_costs(hlo: str, attn_block: tuple[int, int] | None = None
                 "collective_bytes": 0.0, "max_trip": 1.0, "n_collectives": 0}
 
     # ---- which computations are fusion/reducer bodies (bytes internal) ----
+    # a `call` target is a real computation (XLA-CPU wraps parallel loop
+    # fusions in one) — its top-level instructions do hit HBM, so only
+    # fusion/reducer referencers mark their callee as byte-internal
     fused: set[str] = set()
     for lines in comps.values():
         for ln in lines:
+            im = _parse_instr(ln)
+            if im and im[2] == "call":
+                continue
             for m in re.finditer(r"(?:calls|to_apply)=%?([\w.\-]+)", ln):
                 fused.add(m.group(1))
 

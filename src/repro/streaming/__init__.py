@@ -1,0 +1,36 @@
+"""Unified edge-stream engine — the repo's single streaming contract.
+
+Paper Fig. 2 runs one edge stream through three passes::
+
+    edge stream ──▶ Alg. 1 clustering ──▶ Alg. 2 Stackelberg game
+                └─▶ Θ statistics pass  └─▶ Alg. 3 edge placement
+
+The seed code had four independent chunking loops (the scan baselines in
+``core.baselines``, ``core.clustering.cluster_stream``, the Θ pass in
+``core.s5p.cluster_statistics``, and ``core.postprocess.assign_edges_stream``).
+This package is the one abstraction they all consume now:
+
+- :class:`EdgeStream` — a chunked, multi-pass-replayable view over an edge
+  list with a bounded device footprint (one chunk at a time) and pluggable
+  arrival orderings (natural / shuffled / dst-sorted / windowed-buffer, the
+  latter after Patwary et al. 2019's window streaming);
+- :func:`run_scan` / :func:`run_scan_batched` — drivers that thread an
+  O(k|V|) carry through per-chunk scan steps (compiled once, replayed per
+  chunk; the batched form vmaps one compiled engine over many scenarios:
+  seeds, HDRF λ values, or padded-k partition counts).
+
+The hot per-chunk scan step (replica-bitmap lookup + score + load update)
+has a fused Pallas kernel in ``repro.kernels.stream_scan`` with the
+``lax.scan`` path as its oracle.
+
+Mapping to the paper: *chunks* realize the bounded-memory stream of §2.1
+(only O(|V| + k + chunk) state is live); *replay* gives the multi-pass
+structure of Fig. 2 (clustering pass, Θ pass, placement pass are three
+replays of one stream); *orderings* model arrival-order robustness (§6.5
+studies stream order sensitivity).
+"""
+
+from .stream import Chunk, EdgeStream  # noqa: F401
+from .engine import run_scan, run_scan_batched  # noqa: F401
+
+__all__ = ["Chunk", "EdgeStream", "run_scan", "run_scan_batched"]

@@ -1,0 +1,63 @@
+"""Scan drivers: thread an O(|V|+k) carry through EdgeStream chunks.
+
+A *chunk function* has signature ``(carry, src, dst, *extras) -> (carry,
+parts)`` and is jitted by its author (module-level, so the compile cache is
+shared across every call with the same chunk shape — the engine never
+recompiles per invocation).  ``repro.kernels.stream_scan.ref`` hosts the
+chunk functions for the scoring baselines; ``cluster_chunk`` and
+``_assign_chunk`` are the other two consumers.
+
+``run_scan_batched`` vmaps one compiled chunk function over a stacked
+carry: many seeds, many HDRF λ values, or many (padded) partition counts
+run as one batched engine over a single pass of the stream.
+"""
+
+from __future__ import annotations
+
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from .stream import EdgeStream
+
+__all__ = ["run_scan", "run_scan_batched"]
+
+
+def run_scan(
+    stream: EdgeStream,
+    carry,
+    chunk_fn: Callable,
+    *extras,
+):
+    """Drive ``chunk_fn`` over every chunk; returns (parts, final_carry).
+
+    ``parts`` is in arrival order (stream-order results are scattered back
+    through the stream's permutation).
+    """
+    outs = []
+    for ch in stream.chunks(*extras):
+        carry, parts = chunk_fn(carry, ch.src, ch.dst, *ch.extras)
+        outs.append(parts[: ch.n_valid])
+    parts = outs[0] if len(outs) == 1 else jnp.concatenate(outs)
+    return stream.scatter_back(parts), carry
+
+
+def run_scan_batched(
+    stream: EdgeStream,
+    carries,
+    chunk_fn: Callable,
+    *extras,
+):
+    """Batched ``run_scan``: ``carries`` is a pytree with a leading batch
+    axis (one entry per scenario — seed, λ, padded-k mask, …).  The chunk
+    function is vmapped over the carry only; the stream is read once and
+    broadcast.  Returns (parts (B, E), final carries)."""
+    n_extra = len(extras)
+    vfn = jax.vmap(chunk_fn, in_axes=(0, None, None) + (None,) * n_extra)
+    outs = []
+    for ch in stream.chunks(*extras):
+        carries, parts = vfn(carries, ch.src, ch.dst, *ch.extras)
+        outs.append(parts[..., : ch.n_valid])
+    parts = outs[0] if len(outs) == 1 else jnp.concatenate(outs, axis=-1)
+    return stream.scatter_back(parts), carries

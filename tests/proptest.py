@@ -23,19 +23,21 @@ def random_graph(seed: int):
     """Deterministic diverse graph draw: (src, dst, n_vertices, label)."""
     rng = np.random.default_rng(seed)
     kind = seed % 6
+    # sizes are deliberately modest: structural diversity, not scale, is
+    # what exercises the invariants — scale lives in benchmarks/ (slow)
     if kind == 0:
-        n = int(rng.integers(50, 400))
-        return (*powerlaw_graph(n, avg_degree=float(rng.uniform(3, 10)),
+        n = int(rng.integers(50, 220))
+        return (*powerlaw_graph(n, avg_degree=float(rng.uniform(3, 8)),
                                 rho=float(rng.uniform(1.8, 2.8)), seed=seed), "powerlaw")
     if kind == 1:
-        n = int(rng.integers(100, 500))
+        n = int(rng.integers(80, 260))
         return (*community_graph(n, n_communities=int(rng.integers(2, 16)),
                                  avg_degree=6.0, seed=seed), "community")
     if kind == 2:
-        n = int(rng.integers(50, 300))
+        n = int(rng.integers(50, 160))
         return (*erdos_renyi_graph(n, avg_degree=5.0, seed=seed), "uniform")
     if kind == 3:  # star: one extreme hub (max skew)
-        n = int(rng.integers(20, 100))
+        n = int(rng.integers(20, 80))
         src = np.zeros(n - 1, np.int32)
         dst = np.arange(1, n, dtype=np.int32)
         return src, dst, n, "star"

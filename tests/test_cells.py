@@ -12,8 +12,17 @@ CELLS = [
     (a.name, s) for a in REGISTRY.values() for s in a.shapes if s not in a.skips
 ]
 
+# multi-second compiles on CPU; still smoked in the `-m slow` CI lane
+_SLOW_ARCHS = {"qwen2.5-14b", "qwen3-14b", "mixtral-8x7b", "mixtral-8x22b",
+               "xdeepfm", "schnet", "dimenet"}
 
-@pytest.mark.parametrize("arch,shape", CELLS, ids=[f"{a}-{s}" for a, s in CELLS])
+
+@pytest.mark.parametrize(
+    "arch,shape",
+    [pytest.param(a, s, marks=[pytest.mark.slow] if a in _SLOW_ARCHS else [])
+     for a, s in CELLS],
+    ids=[f"{a}-{s}" for a, s in CELLS],
+)
 def test_cell_smoke(arch, shape):
     cell = build_cell(arch, shape, smoke=True)
     key = jax.random.PRNGKey(0)

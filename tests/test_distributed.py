@@ -10,6 +10,10 @@ from pathlib import Path
 
 import pytest
 
+# each test here boots a fresh 8-device subprocess and recompiles the full
+# pipeline — minutes apiece on CPU; run explicitly with `-m slow`
+pytestmark = pytest.mark.slow
+
 SRC = str(Path(__file__).resolve().parent.parent / "src")
 
 

@@ -13,12 +13,12 @@ BALANCED = {"grid", "greedy", "hdrf", "2ps-l", "clugp", "s5p", "s5p-exact"}
 
 @pytest.mark.parametrize("name", sorted(PARTITIONERS))
 @pytest.mark.parametrize("seed", list(cases(3)))
-def test_every_edge_assigned_once(name, seed):
+def test_every_edge_assigned_once(name, seed, parts_cache):
     src, dst, n, label = random_graph(seed)
     if len(src) == 0:
         return
     k = 4
-    parts = np.asarray(PARTITIONERS[name](src, dst, n, k, seed))
+    parts = parts_cache(name, seed, k, seed)
     valid = src != dst
     assert parts.shape == (len(src),)
     assert np.all(parts[valid] >= 0), f"{name} dropped edges on {label}"
@@ -26,10 +26,10 @@ def test_every_edge_assigned_once(name, seed):
 
 
 @pytest.mark.parametrize("name", sorted(BALANCED))
-def test_balance_constraint(name):
+def test_balance_constraint(name, parts_cache):
     src, dst, n, _ = random_graph(1)  # community graph
     k = 4
-    parts = PARTITIONERS[name](src, dst, n, k, 0)
+    parts = parts_cache(name, 1, k, 1)
     loads = np.asarray(partition_loads(parts, k=k))
     E = int((src != dst).sum())
     cap = int(np.ceil(1.1 * E / k)) + 1  # τ ≈ 1 (+1 slack for ceil effects)
@@ -53,41 +53,48 @@ def test_rf_bounds(seed):
 
 def test_s5p_beats_baselines_on_community_graph():
     """The paper's headline claim (Table 3) in miniature: S5P wins on
-    skewed, community-structured graphs at equal balance."""
+    skewed, community-structured graphs at equal balance.
+
+    Asserted as a *mean over 3 partitioner seeds* — the Table-3 claim is
+    about the method, not one lucky draw of the game's damping RNG.
+    """
     from repro.graphs.generators import community_graph
 
     src, dst, n = community_graph(3000, n_communities=48, avg_degree=8, seed=7)
     k = 8
-    rf = {}
-    for name in ("hdrf", "2ps-l", "clugp", "s5p"):
-        parts = PARTITIONERS[name](src, dst, n, k, 0)
-        rf[name] = replication_factor(src, dst, parts, n_vertices=n, k=k)
-        assert load_balance(parts, k=k) <= 1.11
+    seeds = (0, 1, 2)
+
+    def mean_rf(name):
+        rfs = []
+        # hdrf / 2ps-l are deterministic in the partitioner seed — one run
+        for s in seeds if name in ("clugp", "s5p") else seeds[:1]:
+            parts = PARTITIONERS[name](src, dst, n, k, s)
+            assert load_balance(parts, k=k) <= 1.11, (name, s)
+            rfs.append(replication_factor(src, dst, parts, n_vertices=n, k=k))
+        return float(np.mean(rfs))
+
+    rf = {name: mean_rf(name) for name in ("hdrf", "2ps-l", "clugp", "s5p")}
     assert rf["s5p"] < rf["hdrf"], rf
     assert rf["s5p"] < rf["2ps-l"], rf
     assert rf["s5p"] < rf["clugp"], rf
 
 
-def test_two_stage_beats_one_stage():
+def test_two_stage_beats_one_stage(community_bench_graph, s5p_exact_community):
     """Fig. 7(d): the Stackelberg (two-stage) game ≤ one-stage RF."""
-    from repro.graphs.generators import community_graph
-
-    src, dst, n = community_graph(2000, n_communities=32, avg_degree=8, seed=3)
+    src, dst, n = community_bench_graph
     k = 8
-    two = s5p_partition(src, dst, n, S5PConfig(k=k, use_cms=False))
+    two = s5p_exact_community
     one = s5p_partition(src, dst, n, S5PConfig(k=k, use_cms=False, one_stage=True))
     rf2 = replication_factor(src, dst, two.parts, n_vertices=n, k=k)
     rf1 = replication_factor(src, dst, one.parts, n_vertices=n, k=k)
     assert rf2 <= rf1 * 1.05, (rf2, rf1)
 
 
-def test_cms_vs_exact_rf_close():
+def test_cms_vs_exact_rf_close(community_bench_graph, s5p_exact_community):
     """Fig. 9: sketch-backed Θ costs ≲1% RF vs exact counts."""
-    from repro.graphs.generators import community_graph
-
-    src, dst, n = community_graph(2000, n_communities=32, avg_degree=8, seed=5)
+    src, dst, n = community_bench_graph
     k = 8
-    exact = s5p_partition(src, dst, n, S5PConfig(k=k, use_cms=False))
+    exact = s5p_exact_community
     cms = s5p_partition(src, dst, n, S5PConfig(k=k, use_cms=True))
     rf_e = replication_factor(src, dst, exact.parts, n_vertices=n, k=k)
     rf_c = replication_factor(src, dst, cms.parts, n_vertices=n, k=k)
