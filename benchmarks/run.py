@@ -16,14 +16,15 @@ def main() -> None:
     args = ap.parse_args()
 
     from . import (fig7_components, fig9_sketch, fig11_pagerank, fig12_params,
-                   fig13_skewness, kernels_bench, roofline, table3_rf,
-                   table4_game, table5_optimality)
+                   fig13_skewness, kernels_bench, oocstream_bench, roofline,
+                   table3_rf, table4_game, table5_optimality, windowed_quality)
 
     modules = {
         "table3": table3_rf, "table4": table4_game, "table5": table5_optimality,
         "fig7": fig7_components, "fig9": fig9_sketch, "fig11": fig11_pagerank,
         "fig12": fig12_params, "fig13": fig13_skewness,
         "kernels": kernels_bench, "roofline": roofline,
+        "oocstream": oocstream_bench, "windowed": windowed_quality,
     }
     print("name,us_per_call,derived")
     failed = []

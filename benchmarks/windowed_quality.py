@@ -1,0 +1,53 @@
+"""Windowed-ordering quality study (ROADMAP item; Patwary et al. 2019).
+
+The ``windowed`` EdgeStream ordering buys dst-locality with a bounded
+buffer of ``window`` edges.  This sweep measures what that locality is
+worth in partition quality: replication factor of HDRF and Greedy under
+window ∈ {256, 4096, 65536}, bracketed by ``natural`` (window → 1) and
+``dst-sorted`` (window → ∞), on the community and R-MAT graphs.  The
+resulting table lives in ``benchmarks/README.md``.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import replication_factor
+from repro.core.baselines import greedy_partition, hdrf_partition
+from repro.graphs import rmat_graph
+from repro.graphs.generators import community_graph
+from repro.streaming import EdgeStream
+
+from .common import emit, timed
+
+WINDOWS = (256, 4096, 65536)
+
+
+def graphs(quick: bool):
+    nv = 4000 if quick else 12000
+    yield "community", community_graph(nv, n_communities=64, avg_degree=8,
+                                       p_intra=0.95, seed=0)
+    yield "rmat", rmat_graph(13 if quick else 15, edge_factor=8, seed=0,
+                             dedup=False)
+
+
+def sweep(src, dst, n, k=8):
+    """(ordering label, stream) pairs from no reorder to full dst sort."""
+    yield "natural", EdgeStream(src, dst, n)
+    for w in WINDOWS:
+        yield f"w{w}", EdgeStream(src, dst, n, ordering="windowed", window=w)
+    yield "dst-sorted", EdgeStream(src, dst, n, ordering="dst-sorted")
+
+
+def run(quick: bool = True):
+    k = 8
+    for gname, (src, dst, n) in graphs(quick):
+        E = len(src)
+        for oname, stream in sweep(src, dst, n, k):
+            for pname, fn in (("hdrf", hdrf_partition),
+                              ("greedy", greedy_partition)):
+                parts, us = timed(
+                    lambda: np.asarray(fn(src, dst, n, k, stream=stream)))
+                rf = replication_factor(src, dst, parts, n_vertices=n, k=k)
+                emit(f"windowed_quality/{gname}-{E}/{oname}/{pname}", us,
+                     f"rf={rf:.4f}")

@@ -222,13 +222,15 @@ def clugp_partition(src, dst, n_vertices, k, seed=0):
     return s5p_partition(src, dst, n_vertices, cfg).parts
 
 
-def _s5p(src, dst, n_vertices, k, seed=0):
-    return s5p_partition(src, dst, n_vertices, S5PConfig(k=k, seed=seed)).parts
+def _s5p(src, dst, n_vertices, k, seed=0, *, stream=None):
+    return s5p_partition(src, dst, n_vertices, S5PConfig(k=k, seed=seed),
+                         stream=stream).parts
 
 
-def _s5p_exact(src, dst, n_vertices, k, seed=0):
+def _s5p_exact(src, dst, n_vertices, k, seed=0, *, stream=None):
     return s5p_partition(
-        src, dst, n_vertices, S5PConfig(k=k, use_cms=False, seed=seed)
+        src, dst, n_vertices, S5PConfig(k=k, use_cms=False, seed=seed),
+        stream=stream,
     ).parts
 
 

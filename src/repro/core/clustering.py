@@ -230,9 +230,16 @@ def cluster_stream(
 
     if stream is None:
         stream = EdgeStream(src, dst, n_vertices, chunk_size=chunk_size)
-    src_j = jnp.asarray(stream.src, jnp.int32)
-    dst_j = jnp.asarray(stream.dst, jnp.int32)
-    degrees = compute_degrees(src_j, dst_j, stream.n_vertices)
+    # host-resident streams get the one-call vectorized precompute; streams
+    # without full arrays (out-of-core) take the chunked pass — the two are
+    # bit-identical (integer segment sums commute)
+    src_full = getattr(stream, "src", None)
+    if src_full is not None:
+        degrees = compute_degrees(jnp.asarray(src_full, jnp.int32),
+                                  jnp.asarray(stream.dst, jnp.int32),
+                                  stream.n_vertices)
+    else:
+        degrees = compute_degrees_stream(stream)
     state = init_state(stream.n_vertices)
     for ch in stream.chunks():
         state = cluster_chunk(
@@ -246,6 +253,19 @@ def compute_degrees(src: jax.Array, dst: jax.Array, n_vertices: int) -> jax.Arra
     ones = jnp.ones_like(src)
     deg = jax.ops.segment_sum(ones, src, num_segments=n_vertices)
     deg = deg + jax.ops.segment_sum(ones, dst, num_segments=n_vertices)
+    return deg.astype(jnp.int32)
+
+
+def compute_degrees_stream(stream) -> jax.Array:
+    """The one-pass global degree precompute, chunk by chunk — O(|V|) carry,
+    so it runs on out-of-core streams too.  Integer segment sums commute,
+    so the result is bit-identical to :func:`compute_degrees` on the full
+    arrays (padding entries are masked out, not counted as self-loops)."""
+    deg = jnp.zeros((stream.n_vertices,), jnp.int32)
+    for ch in stream.chunks():
+        w = (jnp.arange(ch.src.shape[0]) < ch.n_valid).astype(jnp.int32)
+        deg = deg + jax.ops.segment_sum(w, ch.src, num_segments=stream.n_vertices)
+        deg = deg + jax.ops.segment_sum(w, ch.dst, num_segments=stream.n_vertices)
     return deg.astype(jnp.int32)
 
 

@@ -64,15 +64,37 @@ class EdgeChunkPipeline:
     ``step`` indexes chunks modulo the stream (wrapping = one replay pass
     per epoch), so the fault-tolerant loop's bitwise-resume contract holds:
     replaying step s yields the identical chunk.  Compose with
-    :class:`Prefetcher` to overlap host chunking with device scans.
+    :class:`Prefetcher` to overlap host chunking — or, for out-of-core
+    streams, disk paging — with device scans.
+
+    The first argument may be a per-edge ``src`` array (classic form, with
+    ``dst``/``n_vertices`` following), an already-built stream (any
+    :class:`EdgeStream` subclass), or a shard-manifest path / ``file:<path>``
+    spec, which opens a mmap-paged :class:`ShardedEdgeStream`.
     """
 
-    def __init__(self, src, dst, n_vertices: int, *, chunk_size: int = 1 << 16,
-                 ordering: str = "natural", seed: int = 0):
-        from ..streaming import EdgeStream
+    def __init__(self, src, dst=None, n_vertices: int | None = None, *,
+                 chunk_size: int = 1 << 16, ordering: str = "natural",
+                 seed: int = 0, window: int = 4096):
+        from pathlib import Path
 
-        self.stream = EdgeStream(src, dst, n_vertices, chunk_size=chunk_size,
-                                 ordering=ordering, seed=seed)
+        from ..streaming import EdgeStream, ShardedEdgeStream
+
+        if isinstance(src, EdgeStream):
+            if dst is not None or n_vertices is not None:
+                raise ValueError("pass either a stream or (src, dst, n_vertices)")
+            self.stream = src
+        elif isinstance(src, (str, Path)):
+            manifest = str(src)
+            manifest = manifest[5:] if manifest.startswith("file:") else manifest
+            if dst is not None or n_vertices is not None:
+                raise ValueError("pass either a manifest path or (src, dst, n_vertices)")
+            self.stream = ShardedEdgeStream(manifest, chunk_size=chunk_size,
+                                            ordering=ordering, seed=seed,
+                                            window=window)
+        else:
+            self.stream = EdgeStream(src, dst, n_vertices, chunk_size=chunk_size,
+                                     ordering=ordering, seed=seed, window=window)
 
     def __call__(self, step: int) -> dict:
         # chunks are index-addressable — only the requested one is built
@@ -84,24 +106,52 @@ class EdgeChunkPipeline:
 
 
 class Prefetcher:
-    """Double-buffered host → device prefetch around any step-addressable fn."""
+    """Double-buffered host → device prefetch around any step-addressable fn.
+
+    ``stop()`` really terminates the worker: the producer only ever blocks
+    in ``put`` with a timeout (re-checking the stop flag), and ``stop``
+    drains the queue until the thread exits — so no daemon-thread leak and
+    ``start``/``stop``/``start`` cycles are safe (each ``start`` gets a
+    fresh queue, discarding stale entries from the previous run).  A
+    worker that dies in ``fn`` re-raises in the consumer instead of
+    leaving it blocked on an empty queue forever.
+    """
+
+    _FAILED = object()  # queue sentinel: the worker died in fn
 
     def __init__(self, fn: Callable[[int], dict], depth: int = 2):
         self.fn = fn
         self.depth = depth
         self._q: queue.Queue = queue.Queue(maxsize=depth)
-        self._next = 0
+        self._stop = True
+        self._error: BaseException | None = None
         self._thread: threading.Thread | None = None
 
     def start(self, start_step: int = 0) -> None:
-        self._next = start_step
+        self.stop()  # terminate any previous worker before rewiring
         self._stop = False
+        self._error = None
+        q = self._q = queue.Queue(maxsize=self.depth)
+
+        def put_until_stopped(item) -> bool:
+            while not self._stop:
+                try:
+                    q.put(item, timeout=0.05)
+                    return True
+                except queue.Full:
+                    continue
+            return False
 
         def work():
             s = start_step
-            while not self._stop:
-                self._q.put((s, self.fn(s)))
-                s += 1
+            try:
+                while not self._stop:
+                    batch = (s, self.fn(s))
+                    if put_until_stopped(batch):
+                        s += 1
+            except BaseException as e:  # surface in the consumer
+                self._error = e
+                put_until_stopped((s, self._FAILED))
 
         self._thread = threading.Thread(target=work, daemon=True)
         self._thread.start()
@@ -110,7 +160,18 @@ class Prefetcher:
         if self._thread is None:
             return self.fn(step)
         while True:
-            s, batch = self._q.get()
+            try:
+                s, batch = self._q.get(timeout=0.1)
+            except queue.Empty:
+                if self._error is not None:
+                    raise RuntimeError(
+                        "prefetch worker died") from self._error
+                if not self._thread.is_alive():
+                    return self.fn(step)  # worker gone without error: direct
+                continue
+            if batch is self._FAILED:
+                raise RuntimeError(
+                    f"prefetch worker died at step {s}") from self._error
             if s == step:
                 return batch
             # restart/seek: fall back to direct synthesis
@@ -119,3 +180,13 @@ class Prefetcher:
 
     def stop(self):
         self._stop = True
+        t = self._thread
+        if t is None:
+            return
+        while t.is_alive():
+            try:  # unblock a producer waiting on a full queue
+                self._q.get_nowait()
+            except queue.Empty:
+                pass
+            t.join(timeout=0.05)
+        self._thread = None

@@ -28,9 +28,34 @@ Mapping to the paper: *chunks* realize the bounded-memory stream of §2.1
 structure of Fig. 2 (clustering pass, Θ pass, placement pass are three
 replays of one stream); *orderings* model arrival-order robustness (§6.5
 studies stream order sensitivity).
+
+Out-of-core (graphs ≫ RAM)
+--------------------------
+``oocstream`` extends the contract to disk: :func:`write_shards` lays an
+edge list out as fixed-record ``.npy`` shards plus a small
+``manifest.json`` (counts, dtypes, shard table), and
+:class:`ShardedEdgeStream` memory-maps those shards and pages only the
+chunks it needs — same ``chunks()`` / ``chunk_at()`` / ``scatter_back()``
+surface, bit-identical chunks, so every consumer above runs unchanged on
+graphs that never fit in host memory.  Memory knobs: ``shard_edges``
+(write-time shard granularity = reorder-buffer bound), ``chunk_size``
+(device-resident slice), ``window`` (windowed-ordering buffer), and
+``scratch_dir`` (where the shuffled / dst-sorted external reorder passes
+spill); ``stream.budget`` (a :class:`HostBudget`) accounts every host
+allocation the stream makes, and the tests assert its peak stays
+O(shard_edges + chunk + window).  CLI: ``python -m repro.launch.partition
+--graph file:<manifest.json>`` partitions straight from shards, and
+``--write-shards DIR`` converts any synthetic graph spec to shards.
 """
 
 from .stream import Chunk, EdgeStream  # noqa: F401
 from .engine import run_scan, run_scan_batched  # noqa: F401
+from .oocstream import (  # noqa: F401
+    HostBudget,
+    ShardedEdgeStream,
+    read_manifest,
+    write_shards,
+)
 
-__all__ = ["Chunk", "EdgeStream", "run_scan", "run_scan_batched"]
+__all__ = ["Chunk", "EdgeStream", "run_scan", "run_scan_batched",
+           "HostBudget", "ShardedEdgeStream", "read_manifest", "write_shards"]

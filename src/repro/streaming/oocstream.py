@@ -1,0 +1,581 @@
+"""Out-of-core edge shards: ``write_shards`` + mmap-paged ``ShardedEdgeStream``.
+
+Shard format
+------------
+A *shard directory* is a flat directory of fixed-record ``.npy`` files plus
+one small JSON manifest::
+
+    manifest.json            counts, dtypes, shard table (see below)
+    shard_00000.src.npy      int32 (n,)  — readable via np.load(mmap_mode="r")
+    shard_00000.dst.npy      int32 (n,)
+    shard_00000.<field>.npy  optional per-edge payload fields (any dtype/shape)
+    shard_00001.src.npy      ...
+
+Every shard holds exactly ``shard_edges`` edges except the last.  The
+manifest records ``{version, n_edges, n_vertices, shard_edges, fields,
+shards}`` where ``fields`` is a list of ``{name, dtype, shape}`` and
+``shards`` a list of ``{id, offset, n_edges, files}``.  Plain ``.npy``
+means any tool can inspect a shard; fixed offsets mean arrival index →
+(shard, row) is arithmetic.
+
+Memory model
+------------
+:class:`ShardedEdgeStream` never materializes the edge list.  Shards are
+memory-mapped and paged by the OS; the only *host allocations* the stream
+makes are O(chunk_size) staging copies, O(shard_edges) reorder buffers and
+an O(window) heap — all routed through a :class:`HostBudget` accounting
+hook (``stream.budget.peak_bytes``) that tests assert against.
+
+Orderings out of core
+---------------------
+- ``natural``   — contiguous mmap reads, shard by shard.
+- ``windowed``  — the shared bounded-buffer emitter (``_windowed_emit``)
+  runs once over the ``dst`` field shard-by-shard (O(window) heap) and
+  spills the emitted order to a scratch ``.npy``; chunks then gather
+  through that order mmap (accesses stay within ~``window`` of the cursor).
+- ``shuffled``  — the permutation must be *bit-identical* to the in-memory
+  engine's ``rng.permutation(E)``, so Fisher–Yates runs in place on a
+  scratch **memmap** (identical RNG draw sequence, OS-paged storage), then
+  a bucketed gather pass spills reordered edge shards to scratch.
+- ``dst-sorted``— external merge sort: per-shard stable argsort runs are
+  spilled to scratch, then k-way merged (ties broken by arrival index,
+  which reproduces the global stable argsort exactly) and the reordered
+  edge shards are spilled like the shuffled case.
+
+After the (one-off, budget-bounded) reorder pass, ``shuffled`` and
+``dst-sorted`` read contiguously from the spilled scratch shards; the
+order mmap is kept for extras alignment and :meth:`scatter_back`.
+"""
+
+from __future__ import annotations
+
+import json
+import shutil
+import tempfile
+import weakref
+from contextlib import contextmanager
+from heapq import merge as _heap_merge
+from pathlib import Path
+
+import numpy as np
+
+from .stream import DEFAULT_CHUNK, ORDERINGS, EdgeStream, _windowed_emit
+
+__all__ = ["HostBudget", "ShardedEdgeStream", "write_shards", "read_manifest",
+           "DEFAULT_SHARD_EDGES", "MANIFEST_NAME"]
+
+MANIFEST_NAME = "manifest.json"
+MANIFEST_VERSION = 1
+DEFAULT_SHARD_EDGES = 1 << 20
+
+
+# ---------------------------------------------------------------------------
+# byte-budget accounting
+# ---------------------------------------------------------------------------
+
+
+class HostBudget:
+    """Accounting hook for host allocations made *by the stream*.
+
+    mmap-backed views are charged nothing (the OS pages and evicts them);
+    every real ndarray the stream allocates — chunk staging copies, reorder
+    block buffers, gather outputs — is charged while live.  ``peak_bytes``
+    is what the bounded-memory tests assert against.
+    """
+
+    def __init__(self) -> None:
+        self.current_bytes = 0
+        self.peak_bytes = 0
+
+    def charge(self, nbytes: int) -> None:
+        self.current_bytes += int(nbytes)
+        if self.current_bytes > self.peak_bytes:
+            self.peak_bytes = self.current_bytes
+
+    def release(self, nbytes: int) -> None:
+        self.current_bytes -= int(nbytes)
+
+    @contextmanager
+    def scoped(self, nbytes: int):
+        self.charge(nbytes)
+        try:
+            yield
+        finally:
+            self.release(nbytes)
+
+
+# ---------------------------------------------------------------------------
+# shard writer + manifest
+# ---------------------------------------------------------------------------
+
+
+def write_shards(
+    out_dir,
+    src,
+    dst,
+    *extras,
+    shard_edges: int = DEFAULT_SHARD_EDGES,
+    n_vertices: int | None = None,
+    field_names=None,
+) -> Path:
+    """Write ``src``/``dst`` (+ optional per-edge ``extras``) as edge shards.
+
+    Returns the path of the written ``manifest.json``.  ``extras`` keep
+    their dtype and trailing shape; ``field_names`` names them in the
+    manifest (default ``x0, x1, ...``).
+    """
+    if shard_edges < 1:
+        raise ValueError("shard_edges must be >= 1")
+    out = Path(out_dir)
+    out.mkdir(parents=True, exist_ok=True)
+    src = np.ascontiguousarray(src, np.int32)
+    dst = np.ascontiguousarray(dst, np.int32)
+    if src.ndim != 1 or src.shape != dst.shape:
+        raise ValueError("src/dst must be equal-length 1-D arrays")
+    ex = [np.ascontiguousarray(e) for e in extras]
+    for e in ex:
+        if e.shape[:1] != src.shape:
+            raise ValueError("extra array length != n_edges")
+    names = list(field_names) if field_names is not None else [
+        f"x{i}" for i in range(len(ex))
+    ]
+    if len(names) != len(ex):
+        raise ValueError("field_names length != number of extras")
+    fields = ["src", "dst", *names]
+    if len(set(fields)) != len(fields):
+        raise ValueError(f"duplicate field names in {fields}")
+    n = int(src.shape[0])
+    if n_vertices is None:
+        n_vertices = int(max(src.max(), dst.max())) + 1 if n else 0
+    arrays = [src, dst, *ex]
+    shard_rows = []
+    for sid, lo in enumerate(range(0, n, shard_edges)):
+        hi = min(lo + shard_edges, n)
+        files = {}
+        for name, arr in zip(fields, arrays):
+            fname = f"shard_{sid:05d}.{name}.npy"
+            np.save(out / fname, arr[lo:hi])
+            files[name] = fname
+        shard_rows.append({"id": sid, "offset": lo, "n_edges": hi - lo,
+                           "files": files})
+    manifest = {
+        "version": MANIFEST_VERSION,
+        "format": "s5p-edge-shards",
+        "n_edges": n,
+        "n_vertices": int(n_vertices),
+        "shard_edges": int(shard_edges),
+        "fields": [
+            {"name": name, "dtype": str(arr.dtype), "shape": list(arr.shape[1:])}
+            for name, arr in zip(fields, arrays)
+        ],
+        "shards": shard_rows,
+    }
+    mpath = out / MANIFEST_NAME
+    mpath.write_text(json.dumps(manifest, indent=1))
+    return mpath
+
+
+def read_manifest(path) -> tuple[Path, dict]:
+    """Resolve a manifest path (file or shard directory) and load it."""
+    p = Path(path)
+    if p.is_dir():
+        p = p / MANIFEST_NAME
+    meta = json.loads(p.read_text())
+    version = meta.get("version")
+    if version != MANIFEST_VERSION:
+        raise ValueError(f"unsupported shard manifest version {version!r}")
+    return p, meta
+
+
+class _Shard:
+    """One on-disk shard: lazily opened mmaps per field."""
+
+    __slots__ = ("offset", "n", "root", "files", "_mm")
+
+    def __init__(self, root: Path, offset: int, n: int, files: dict):
+        self.root = root
+        self.offset = int(offset)
+        self.n = int(n)
+        self.files = files
+        self._mm: dict = {}
+
+    def mm(self, field: str) -> np.ndarray:
+        m = self._mm.get(field)
+        if m is None:
+            m = np.load(self.root / self.files[field], mmap_mode="r")
+            self._mm[field] = m
+        return m
+
+    def close(self) -> None:
+        self._mm.clear()
+
+
+class _FieldView:
+    """Array-like over one manifest field: mmap-paged, never materialized.
+
+    Supports ``len``/``.shape`` and slice or fancy indexing (returning
+    ndarray copies of just the requested rows), which is exactly the
+    surface :meth:`EdgeStream.chunk_at` needs from an extras array — so
+    stored extra fields ride through ``chunks()`` out-of-core too.
+    """
+
+    def __init__(self, stream: "ShardedEdgeStream", shards, field: str,
+                 dtype, shape: tuple):
+        self._stream = stream
+        self._shards = shards
+        self._field = field
+        self.dtype = np.dtype(dtype)
+        self.shape = shape
+        self._staged = 0  # bytes of the last returned rows, still live
+
+    def __len__(self) -> int:
+        return self.shape[0]
+
+    def _stage(self, rows: np.ndarray) -> np.ndarray:
+        # same accounting pattern as the stream's chunk staging: the
+        # previous read is dead once the next one is built
+        budget = self._stream.budget
+        budget.release(self._staged)
+        self._staged = int(rows.nbytes)
+        budget.charge(self._staged)
+        return rows
+
+    def __getitem__(self, sl):
+        if isinstance(sl, slice):
+            start, stop, step = sl.indices(self.shape[0])
+            if step != 1:
+                raise IndexError("field views support unit-stride slices only")
+            return self._stage(self._stream._read_range(
+                self._shards, self._field, start, stop))
+        return self._stage(self._stream._gather(
+            self._shards, self._field, np.asarray(sl, np.int64)))
+
+
+# ---------------------------------------------------------------------------
+# the stream
+# ---------------------------------------------------------------------------
+
+
+class ShardedEdgeStream(EdgeStream):
+    """Out-of-core :class:`EdgeStream` over a shard directory.
+
+    Same ``chunks()`` / ``chunk_at()`` / ``scatter_back()`` contract —
+    consumers (``run_scan``, ``cluster_stream``, the Θ pass,
+    ``assign_edges_stream``, every baseline scan) run unchanged; only the
+    data access differs (mmap paging instead of host-resident arrays,
+    see module docstring for the per-ordering strategy).
+
+    ``scratch_dir`` receives reorder spills (order ``.npy`` + reordered
+    shards); a private temp dir (removed on GC/:meth:`close`) is used when
+    not given.  Spill names are keyed by (ordering, seed, window), so give
+    each *concurrently live* stream its own scratch dir — rebuilding a
+    spec truncates files another stream of the same spec may still map.
+    ``budget`` is the :class:`HostBudget` accounting hook.
+    """
+
+    def __init__(
+        self,
+        manifest,
+        *,
+        chunk_size: int = DEFAULT_CHUNK,
+        ordering: str = "natural",
+        seed: int = 0,
+        window: int = 4096,
+        scratch_dir=None,
+        budget: HostBudget | None = None,
+    ):
+        # deliberately no super().__init__ — storage is mmap shards, and the
+        # base ctor's array fields are exactly what this class must not hold
+        if ordering not in ORDERINGS:
+            raise ValueError(f"unknown ordering {ordering!r}; one of {ORDERINGS}")
+        if chunk_size < 1:
+            raise ValueError("chunk_size must be >= 1")
+        self.manifest_path, self._meta = read_manifest(manifest)
+        self.root = self.manifest_path.parent
+        self._n_edges = int(self._meta["n_edges"])
+        self.n_vertices = int(self._meta["n_vertices"])
+        self.shard_edges = int(self._meta["shard_edges"])
+        self._fields = {f["name"]: f for f in self._meta["fields"]}
+        self._shards = [
+            _Shard(self.root, s["offset"], s["n_edges"], s["files"])
+            for s in self._meta["shards"]
+        ]
+        self.chunk_size = int(chunk_size)
+        self.ordering = ordering
+        self.seed = int(seed)
+        self.window = int(window)
+        self.budget = budget if budget is not None else HostBudget()
+        # reorder block size: buffers stay O(shard_edges + chunk_size)
+        self._block = max(min(self.shard_edges, 1 << 16), self.chunk_size, 1024)
+        self._staged = 0  # bytes of the currently live chunk staging copy
+        self._respilled: list[_Shard] | None = None
+        self._scratch = Path(scratch_dir) if scratch_dir is not None else None
+        self._finalizer = None
+        if self._scratch is not None:
+            self._scratch.mkdir(parents=True, exist_ok=True)
+        self._order = self._make_order()
+
+    # -------------------------------------------------------------- misc
+    @property
+    def n_edges(self) -> int:
+        return self._n_edges
+
+    @property
+    def field_names(self) -> tuple:
+        return tuple(self._fields)
+
+    @property
+    def src(self):
+        raise AttributeError(
+            "ShardedEdgeStream holds no host-resident edge arrays; page via "
+            "chunks()/chunk_at(), or materialize explicitly with "
+            "arrival_arrays()")
+
+    dst = src
+
+    def open_field(self, name: str) -> _FieldView:
+        """Mmap-paged view of a stored per-edge field (for ``chunks(*extras)``)."""
+        f = self._fields[name]
+        return _FieldView(self, self._shards, name, f["dtype"],
+                          (self._n_edges, *f["shape"]))
+
+    def arrival_arrays(self) -> tuple[np.ndarray, np.ndarray]:
+        """Materialize (src, dst) in arrival order — O(E) host memory, for
+        metrics/converters only; the streaming read path never calls this."""
+        return (self._read_range(self._shards, "src", 0, self._n_edges),
+                self._read_range(self._shards, "dst", 0, self._n_edges))
+
+    def close(self) -> None:
+        for sh in self._shards:
+            sh.close()
+        if self._respilled:
+            for sh in self._respilled:
+                sh.close()
+        if self._finalizer is not None:
+            self._finalizer()
+            self._finalizer = None
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        self.close()
+
+    # ----------------------------------------------------------- scratch
+    def _scratch_path(self, name: str) -> Path:
+        if self._scratch is None:
+            self._scratch = Path(tempfile.mkdtemp(prefix="oocstream-"))
+            self._finalizer = weakref.finalize(
+                self, shutil.rmtree, str(self._scratch), ignore_errors=True)
+        return self._scratch / name
+
+    @property
+    def _tag(self) -> str:
+        return f"{self.ordering}-s{self.seed}-w{self.window}"
+
+    # --------------------------------------------------------- raw reads
+    def _read_range(self, shards, field: str, start: int, stop: int) -> np.ndarray:
+        """Contiguous rows [start, stop) across a shard list.  A
+        single-shard read returns a zero-copy mmap view; budget charging
+        is the caller's job (the rows outlive this call)."""
+        if stop <= start:
+            f = self._fields.get(field)
+            shape = (0, *(f["shape"] if f else ()))
+            return np.empty(shape, f["dtype"] if f else np.int32)
+        parts = []
+        for sh in shards:
+            lo = max(start - sh.offset, 0)
+            hi = min(stop - sh.offset, sh.n)
+            if lo < hi:
+                parts.append(sh.mm(field)[lo:hi])
+        if len(parts) == 1:
+            return parts[0]  # mmap view — paged, not a host allocation
+        out = np.concatenate(parts)
+        return out
+
+    def _gather(self, shards, field: str, idx: np.ndarray) -> np.ndarray:
+        """Rows at arbitrary arrival indices (grouped per shard)."""
+        first = shards[0].mm(field) if shards else None
+        dt = first.dtype if first is not None else np.int32
+        trail = first.shape[1:] if first is not None else ()
+        out = np.empty((idx.shape[0], *trail), dt)
+        with self.budget.scoped(idx.nbytes):  # mask/offset scratch bound
+            for sh in shards:
+                m = (idx >= sh.offset) & (idx < sh.offset + sh.n)
+                if m.any():
+                    out[m] = sh.mm(field)[idx[m] - sh.offset]
+        return out
+
+    def _iter_field(self, field: str):
+        """Python-int iterator over a field, block-buffered per shard."""
+        for sh in self._shards:
+            mm = sh.mm(field)
+            for lo in range(0, sh.n, self._block):
+                blk = np.asarray(mm[lo:lo + self._block])
+                with self.budget.scoped(blk.nbytes):
+                    yield from blk.tolist()
+
+    # ----------------------------------------------------- order building
+    def _make_order(self):
+        if self.ordering == "natural":
+            return None
+        if self._n_edges == 0:
+            return np.empty(0, np.int64)
+        opath = self._scratch_path(f"order-{self._tag}.npy")
+        if self.ordering == "shuffled":
+            self._build_shuffled_order(opath)
+        elif self.ordering == "dst-sorted":
+            self._build_dst_sorted_order(opath)
+        else:
+            self._build_windowed_order(opath)
+        order = np.load(opath, mmap_mode="r")
+        if self.ordering in ("shuffled", "dst-sorted"):
+            self._respilled = self._spill_reordered(order)
+        return order
+
+    def _build_shuffled_order(self, opath: Path) -> None:
+        """Bit-parity shuffle: ``Generator.permutation(E)`` is arange +
+        in-place Fisher–Yates, and the draw sequence depends only on E —
+        so running ``rng.shuffle`` on a scratch *memmap* yields the exact
+        permutation of the in-memory engine with OS-paged storage."""
+        E = self._n_edges
+        perm = np.lib.format.open_memmap(opath, mode="w+", dtype=np.int64,
+                                         shape=(E,))
+        with self.budget.scoped(self._block * 8):
+            for lo in range(0, E, self._block):
+                hi = min(lo + self._block, E)
+                perm[lo:hi] = np.arange(lo, hi, dtype=np.int64)
+        np.random.default_rng(self.seed).shuffle(perm)
+        perm.flush()
+        del perm
+
+    def _build_dst_sorted_order(self, opath: Path) -> None:
+        """External stable merge sort by dst.  Per-shard stable argsort
+        runs + a k-way merge tie-broken on arrival index reproduce
+        ``np.argsort(dst, kind="stable")`` exactly (stable order is
+        unique), with O(shard_edges) peak buffers."""
+        runs = []
+        for sh in self._shards:
+            d = np.asarray(sh.mm("dst"))
+            with self.budget.scoped(d.nbytes * 4):  # d + argsort + key + idx
+                loc = np.argsort(d, kind="stable")
+                kpath = self._scratch_path(f"run-{sh.offset}.key.npy")
+                ipath = self._scratch_path(f"run-{sh.offset}.idx.npy")
+                np.save(kpath, d[loc])
+                np.save(ipath, loc.astype(np.int64) + sh.offset)
+            runs.append((kpath, ipath))
+        del d, loc
+
+        block = max(256, min(self._block,
+                             -(-self._block // max(len(runs), 1))))
+
+        def run_iter(kpath, ipath):
+            key = np.load(kpath, mmap_mode="r")
+            idx = np.load(ipath, mmap_mode="r")
+            for lo in range(0, key.shape[0], block):
+                kb = np.asarray(key[lo:lo + block])
+                ib = np.asarray(idx[lo:lo + block])
+                with self.budget.scoped(kb.nbytes + ib.nbytes):
+                    yield from zip(kb.tolist(), ib.tolist())
+
+        out = np.lib.format.open_memmap(opath, mode="w+", dtype=np.int64,
+                                        shape=(self._n_edges,))
+        buf = np.empty(self._block, np.int64)
+        with self.budget.scoped(buf.nbytes):
+            j = 0
+            pos = 0
+            for _, arrival in _heap_merge(*(run_iter(k, i) for k, i in runs)):
+                buf[j] = arrival
+                j += 1
+                if j == buf.shape[0]:
+                    out[pos:pos + j] = buf
+                    pos += j
+                    j = 0
+            if j:
+                out[pos:pos + j] = buf[:j]
+        out.flush()
+        del out
+        for kpath, ipath in runs:
+            kpath.unlink()
+            ipath.unlink()
+
+    def _build_windowed_order(self, opath: Path) -> None:
+        """One bounded-buffer pass of the shared emitter over the dst field
+        (shard by shard); emitted arrival indices spill blockwise."""
+        out = np.lib.format.open_memmap(opath, mode="w+", dtype=np.int64,
+                                        shape=(self._n_edges,))
+        buf = np.empty(self._block, np.int64)
+        # the emitter's heap holds <= window+1 (dst, index) int pairs
+        with self.budget.scoped(buf.nbytes + (self.window + 1) * 64):
+            j = 0
+            pos = 0
+            for arrival in _windowed_emit(self._iter_field("dst"), self.window):
+                buf[j] = arrival
+                j += 1
+                if j == buf.shape[0]:
+                    out[pos:pos + j] = buf
+                    pos += j
+                    j = 0
+            if j:
+                out[pos:pos + j] = buf[:j]
+        out.flush()
+        del out
+
+    def _spill_reordered(self, order) -> list[_Shard]:
+        """Bucketed gather pass: rewrite src/dst in stream order as scratch
+        shards of ``shard_edges`` edges, so the read path is contiguous."""
+        spilled = []
+        se = self.shard_edges
+        for sid, lo in enumerate(range(0, self._n_edges, se)):
+            hi = min(lo + se, self._n_edges)
+            idx = np.asarray(order[lo:hi])
+            with self.budget.scoped(idx.nbytes):
+                files = {}
+                for field in ("src", "dst"):
+                    rows = self._gather(self._shards, field, idx)
+                    with self.budget.scoped(rows.nbytes):
+                        fname = f"spill-{self._tag}-{sid:05d}.{field}.npy"
+                        np.save(self._scratch_path(fname), rows)
+                    files[field] = fname
+            spilled.append(_Shard(self._scratch, lo, hi - lo, files))
+        return spilled
+
+    # ----------------------------------------------------------- read path
+    def scatter_back(self, values):
+        """Map per-edge results from stream order back to arrival order.
+
+        ``values`` and the returned array are *result-sized* (the caller's
+        O(E) output — the same class of allocation as ``run_scan``'s
+        concatenated parts, unavoidable at this API); unlike the base
+        implementation, no O(E) inverse-permutation array is built — the
+        scatter walks the order mmap in O(block) charged slices, so the
+        stream adds only bounded host memory on top of the result."""
+        if self._order is None:
+            return values
+        import jax.numpy as jnp
+
+        vals = np.asarray(values)
+        out = np.empty_like(vals)
+        for lo in range(0, self._n_edges, self._block):
+            idx = np.asarray(self._order[lo:lo + self._block])
+            with self.budget.scoped(idx.nbytes):
+                out[..., idx] = vals[..., lo:lo + idx.shape[0]]
+        return jnp.asarray(out)
+
+    def _edges_at(self, sl, start: int, stop: int):
+        # previous chunk's staging copy is dead once the next one is built
+        self.budget.release(self._staged)
+        self._staged = 0
+        if isinstance(sl, slice):
+            s = self._read_range(self._shards, "src", start, stop)
+            d = self._read_range(self._shards, "dst", start, stop)
+        elif self._respilled is not None:
+            s = self._read_range(self._respilled, "src", start, stop)
+            d = self._read_range(self._respilled, "dst", start, stop)
+        else:  # windowed: gather through the order mmap (near-local)
+            s = self._gather(self._shards, "src", sl)
+            d = self._gather(self._shards, "dst", sl)
+        # charge conservatively even when the reads were zero-copy views
+        self._staged = int(s.nbytes + d.nbytes)
+        self.budget.charge(self._staged)
+        return s, d

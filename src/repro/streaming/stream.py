@@ -48,25 +48,28 @@ class Chunk(NamedTuple):
     n_valid: int  # true (unpadded) edge count, ≤ B
 
 
-def _windowed_order(dst: np.ndarray, window: int) -> np.ndarray:
+def _windowed_emit(dst_iter, window: int) -> Iterator[int]:
     """Sliding-buffer reorder: emit the buffered edge with the smallest
     destination first.  Deterministic; the buffer never holds more than
     ``window`` edges (bounded memory), so no edge is emitted more than
     ``window`` slots *before* its arrival position.  Departure can be
-    late without bound — a high-destination edge sits until the drain."""
-    n = dst.shape[0]
-    out = np.empty(n, np.int64)
+    late without bound — a high-destination edge sits until the drain.
+
+    Shared by the in-memory and the out-of-core engines (the latter feeds
+    ``dst`` shard-by-shard), so the two orders agree by construction.
+    """
     heap: list[tuple[int, int]] = []
-    j = 0
-    for i in range(n):
-        heapq.heappush(heap, (int(dst[i]), i))
+    for i, d in enumerate(dst_iter):
+        heapq.heappush(heap, (int(d), i))
         if len(heap) > window:
-            out[j] = heapq.heappop(heap)[1]
-            j += 1
+            yield heapq.heappop(heap)[1]
     while heap:
-        out[j] = heapq.heappop(heap)[1]
-        j += 1
-    return out
+        yield heapq.heappop(heap)[1]
+
+
+def _windowed_order(dst: np.ndarray, window: int) -> np.ndarray:
+    n = dst.shape[0]
+    return np.fromiter(_windowed_emit(dst, window), np.int64, count=n)
 
 
 class EdgeStream:
@@ -127,6 +130,17 @@ class EdgeStream:
         return self._order
 
     # ------------------------------------------------------------------
+    def _edges_at(self, sl, start: int, stop: int):
+        """Data-access hook: edges for stream positions [start, stop).
+
+        ``sl`` is a ``slice`` (natural order) or an int array of arrival
+        indices (permuted orders); out-of-core subclasses override this to
+        page from disk — everything else in :meth:`chunk_at` (padding,
+        extras, dtypes) is shared, which is what makes the engines
+        bit-identical.
+        """
+        return self.src[sl], self.dst[sl]
+
     def chunk_at(self, i: int, *extras, pad: bool = True) -> Chunk:
         """Build chunk ``i`` on demand — O(chunk) host/device footprint.
 
@@ -137,7 +151,9 @@ class EdgeStream:
         """
         if not 0 <= i < self.n_chunks:
             raise IndexError(f"chunk {i} out of range [0, {self.n_chunks})")
-        ex = [np.asarray(e) for e in extras]
+        # anything already exposing .shape/__getitem__ (ndarray, memmap, an
+        # out-of-core field view) passes through unmaterialized
+        ex = [e if hasattr(e, "shape") else np.asarray(e) for e in extras]
         for e in ex:
             if e.shape[0] != self.n_edges:
                 raise ValueError("extra array length != n_edges")
@@ -147,8 +163,8 @@ class EdgeStream:
         if self._order is None:
             sl = slice(start, stop)
         else:
-            sl = self._order[start:stop]
-        s, d = self.src[sl], self.dst[sl]
+            sl = np.asarray(self._order[start:stop])
+        s, d = self._edges_at(sl, start, stop)
         exc = [e[sl] for e in ex]
         if pad and s.shape[0] < cs and start > 0:
             padn = cs - s.shape[0]
@@ -181,6 +197,7 @@ class EdgeStream:
         """
         if self._order is None:
             return values
-        inv = np.empty_like(self._order)
-        inv[self._order] = np.arange(self._order.size)
+        order = np.asarray(self._order)  # mmap-backed orders view in cheaply
+        inv = np.empty(order.size, order.dtype)
+        inv[order] = np.arange(order.size)
         return jnp.take(values, jnp.asarray(inv), axis=-1)

@@ -1,0 +1,442 @@
+"""Out-of-core ShardedEdgeStream vs the in-memory engine.
+
+Four layers, mirroring the contract:
+
+1. *Bit parity* — for every ordering × chunk_size × shard_edges, chunks
+   from disk shards are byte-identical to :class:`EdgeStream`'s (the
+   headline guarantee: consumers cannot tell the engines apart).
+2. *Golden reproduction* — the pinned seed hashes of
+   ``tests/test_streaming.py`` reproduce when the scans page from disk.
+3. *Bounded memory* — every host allocation the stream makes goes through
+   its ``HostBudget``; peaks stay O(shard_edges + chunk + window) and far
+   below the full edge list (plus a tracemalloc cross-check that doesn't
+   trust the stream's own accounting).
+4. *Shared stream invariants* — property-based checks (hypothesis when
+   installed, the seeded ``proptest`` harness otherwise) run against BOTH
+   engines: order is a permutation, scatter_back round-trips batched
+   arrays, tail padding is (0,0) self-loops with correct ``n_valid``,
+   windowed never emits an edge more than ``window`` slots early.
+
+Plus the Prefetcher lifecycle regression (stop() used to leave the worker
+blocked forever in ``queue.put``).
+"""
+
+import gc
+import time
+import tracemalloc
+
+import numpy as np
+import pytest
+
+from proptest import random_graph
+from test_streaming import GOLDEN, _h
+from repro.core import S5PConfig, s5p_partition
+from repro.core.baselines import greedy_partition, grid_partition, hdrf_partition
+from repro.core.clustering import cluster_stream
+from repro.data.pipeline import EdgeChunkPipeline, Prefetcher
+from repro.streaming import (
+    EdgeStream,
+    ShardedEdgeStream,
+    read_manifest,
+    write_shards,
+)
+
+try:  # optional — the container image has no hypothesis; gate, don't require
+    from hypothesis import HealthCheck, given, settings
+    from hypothesis import strategies as st_
+
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+ORDERINGS = ("natural", "shuffled", "dst-sorted", "windowed")
+CHUNK_SIZES = (1, 7, 1 << 16)
+SHARD_EDGES = (13, 1 << 16)  # odd small (many ragged shards) vs single-shard
+
+
+def _np(a):
+    return np.asarray(a)
+
+
+@pytest.fixture(scope="module")
+def parity_setup(tmp_path_factory):
+    """One diverse graph, sharded at both granularities."""
+    src, dst, n, _ = random_graph(1)
+    manifests = {}
+    for se in SHARD_EDGES:
+        d = tmp_path_factory.mktemp(f"shards-{se}")
+        manifests[se] = write_shards(d, src, dst, shard_edges=se, n_vertices=n)
+    return src, dst, n, manifests
+
+
+# ======================================================== 1. bit parity
+@pytest.mark.parametrize("shard_edges", SHARD_EDGES)
+@pytest.mark.parametrize("chunk_size", CHUNK_SIZES)
+@pytest.mark.parametrize("ordering", ORDERINGS)
+def test_bit_parity_chunks(parity_setup, ordering, chunk_size, shard_edges):
+    src, dst, n, manifests = parity_setup
+    tag = np.arange(len(src), dtype=np.int32)
+    ref = EdgeStream(src, dst, n, chunk_size=chunk_size, ordering=ordering,
+                     seed=5, window=16)
+    with ShardedEdgeStream(manifests[shard_edges], chunk_size=chunk_size,
+                           ordering=ordering, seed=5, window=16) as got:
+        assert got.n_edges == ref.n_edges
+        assert got.n_vertices == ref.n_vertices
+        assert got.n_chunks == ref.n_chunks
+        for i in range(ref.n_chunks):
+            a = ref.chunk_at(i, tag)
+            b = got.chunk_at(i, tag)
+            assert a.start == b.start and a.n_valid == b.n_valid
+            assert _np(a.src).dtype == _np(b.src).dtype == np.int32
+            assert np.array_equal(_np(a.src), _np(b.src))
+            assert np.array_equal(_np(a.dst), _np(b.dst))
+            assert np.array_equal(_np(a.extras[0]), _np(b.extras[0]))
+        # unpadded replay agrees too
+        ca = np.concatenate([_np(c.src) for c in ref.chunks(pad=False)])
+        cb = np.concatenate([_np(c.src) for c in got.chunks(pad=False)])
+        assert np.array_equal(ca, cb)
+        # per-edge results map back to arrival order identically
+        vals = np.arange(len(src), dtype=np.float32)
+        assert np.array_equal(_np(ref.scatter_back(vals)),
+                              _np(got.scatter_back(vals)))
+
+
+def test_stored_extra_fields_page_through_chunks(tmp_path):
+    """Extras written into shards ride through chunks() via open_field —
+    identical to passing the host array to the in-memory engine."""
+    src, dst, n, _ = random_graph(0)
+    w = np.random.default_rng(7).random(len(src)).astype(np.float32)
+    man = write_shards(tmp_path, src, dst, w, shard_edges=19, n_vertices=n,
+                       field_names=["w"])
+    ref = EdgeStream(src, dst, n, chunk_size=23, ordering="dst-sorted")
+    with ShardedEdgeStream(man, chunk_size=23, ordering="dst-sorted") as got:
+        assert got.field_names == ("src", "dst", "w")
+        view = got.open_field("w")
+        assert view.shape == (len(src),)
+        for a, b in zip(ref.chunks(w), got.chunks(view)):
+            assert np.array_equal(_np(a.extras[0]), _np(b.extras[0]))
+
+
+def test_manifest_round_trip_and_validation(tmp_path):
+    src, dst, n, _ = random_graph(3)
+    man = write_shards(tmp_path / "g", src, dst, shard_edges=11, n_vertices=n)
+    path, meta = read_manifest(man.parent)  # directory resolves to manifest
+    assert path == man
+    assert meta["n_edges"] == len(src) and meta["n_vertices"] == n
+    assert [f["name"] for f in meta["fields"]] == ["src", "dst"]
+    assert sum(s["n_edges"] for s in meta["shards"]) == len(src)
+    with pytest.raises(ValueError):
+        write_shards(tmp_path / "bad", src, dst, shard_edges=0)
+    with pytest.raises(ValueError):
+        write_shards(tmp_path / "bad", src, dst[:-1])
+    with ShardedEdgeStream(man) as st:
+        with pytest.raises(IndexError):
+            st.chunk_at(st.n_chunks)
+        with pytest.raises(AttributeError):  # no host-resident edge arrays
+            st.src
+        s, d = st.arrival_arrays()  # the explicit opt-in materialization
+        assert np.array_equal(s, src) and np.array_equal(d, dst)
+
+
+def test_empty_graph_round_trip(tmp_path):
+    man = write_shards(tmp_path, np.empty(0, np.int32), np.empty(0, np.int32),
+                       shard_edges=7, n_vertices=0)
+    for ordering in ORDERINGS:
+        with ShardedEdgeStream(man, ordering=ordering, chunk_size=4) as st:
+            assert st.n_edges == 0 and st.n_chunks == 1
+            (ch,) = list(st.chunks())
+            assert ch.n_valid == 0 and _np(ch.src).shape == (0,)
+
+
+# ================================================ 2. golden reproduction
+@pytest.mark.parametrize("seed", [0, 1, 2, 3])
+@pytest.mark.parametrize("name", ["greedy", "hdrf", "grid"])
+def test_golden_hashes_from_disk_baselines(tmp_path, seed, name):
+    src, dst, n, _ = random_graph(seed)
+    man = write_shards(tmp_path, src, dst, shard_edges=17, n_vertices=n)
+    fn = {"greedy": greedy_partition, "hdrf": hdrf_partition,
+          "grid": grid_partition}[name]
+    with ShardedEdgeStream(man, chunk_size=64) as st:
+        assert _h(fn(src, dst, n, 4, stream=st)) == GOLDEN[(seed, name)]
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2, 3])
+def test_golden_hashes_from_disk_clustering(tmp_path, seed):
+    src, dst, n, _ = random_graph(seed)
+    man = write_shards(tmp_path, src, dst, shard_edges=17, n_vertices=n)
+    with ShardedEdgeStream(man, chunk_size=64) as st:
+        state = cluster_stream(None, None, None, xi=3, kappa=50, stream=st)
+    got = _h(np.concatenate([_np(state.v2c_h), _np(state.v2c_t)]))
+    assert got == GOLDEN[(seed, "cluster")]
+
+
+@pytest.mark.parametrize("seed", [
+    0, 1,
+    pytest.param(2, marks=pytest.mark.slow),
+    pytest.param(3, marks=pytest.mark.slow),
+])
+def test_golden_hashes_from_disk_s5p(tmp_path, seed):
+    src, dst, n, _ = random_graph(seed)
+    man = write_shards(tmp_path, src, dst, shard_edges=29, n_vertices=n)
+    cfg = S5PConfig(k=4, use_cms=False, game_accept_prob=0.7,
+                    game_max_rounds=64, seed=0)
+    with ShardedEdgeStream(man, chunk_size=64) as st:
+        out = s5p_partition(src, dst, n, cfg, stream=st)
+    assert _h(out.parts) == GOLDEN[(seed, "s5p")]
+
+
+# ==================================================== 3. bounded memory
+@pytest.fixture(scope="module")
+def big_sharded(tmp_path_factory):
+    """~100k edges, sharded small — the regime where O(E) vs O(shard)
+    host memory is clearly separable."""
+    from repro.graphs import powerlaw_graph
+
+    src, dst, n = powerlaw_graph(30000, avg_degree=8, seed=3)
+    d = tmp_path_factory.mktemp("big-shards")
+    man = write_shards(d, src, dst, shard_edges=4096, n_vertices=n)
+    return src, dst, n, man
+
+
+@pytest.mark.parametrize("ordering", ORDERINGS)
+def test_host_budget_bounded(big_sharded, ordering):
+    src, _, _, man = big_sharded
+    se, cs, w = 4096, 2048, 512
+    with ShardedEdgeStream(man, chunk_size=cs, ordering=ordering, seed=1,
+                           window=w) as st:
+        edges_seen = 0
+        for ch in st.chunks():
+            edges_seen += ch.n_valid
+        assert edges_seen == len(src)
+        # scatter_back walks the order mmap in blocks — it must not add an
+        # O(E) inverse permutation to the stream's own accounting (the
+        # result arrays themselves are the caller's, and excluded)
+        st.scatter_back(np.zeros(len(src), np.int32))
+        peak = st.budget.peak_bytes
+    # O(shard_edges + chunk + window), with the per-term constants of the
+    # reorder passes (runs, merge buffers, spill gathers) made explicit —
+    # and in all cases a small fraction of the full edge list
+    assert peak <= 8 * (3 * se + 4 * cs + 8 * w) + (1 << 14), ordering
+    assert peak < (8 * len(src)) // 4, ordering
+
+
+@pytest.mark.parametrize("ordering", ["dst-sorted", "windowed"])
+def test_partition_budget_bounded_under_reordering(big_sharded, ordering):
+    """Full HDRF partition through a *reordered* disk stream: results match
+    the in-memory engine and the stream's own allocations (including the
+    scatter_back at the end of run_scan) stay bounded."""
+    src, dst, n, man = big_sharded
+    se, cs, w = 4096, 4096, 512
+    ref = _np(hdrf_partition(
+        src, dst, n, 4,
+        stream=EdgeStream(src, dst, n, chunk_size=cs, ordering=ordering,
+                          seed=1, window=w)))
+    with ShardedEdgeStream(man, chunk_size=cs, ordering=ordering, seed=1,
+                           window=w) as st:
+        parts = _np(hdrf_partition(None, None, n, 4, stream=st))
+        peak = st.budget.peak_bytes
+    assert np.array_equal(parts, ref)
+    assert peak <= 8 * (3 * se + 4 * cs + 8 * w) + (1 << 14), peak
+    assert peak < (8 * len(src)) // 4, peak
+
+
+def test_no_full_edge_list_on_read_path(big_sharded):
+    """tracemalloc cross-check: a full natural pass allocates nowhere near
+    the edge list (this does NOT trust the stream's own accounting)."""
+    src, _, _, man = big_sharded
+    edge_bytes = 8 * len(src)
+    st = ShardedEdgeStream(man, chunk_size=2048)
+    gc.collect()
+    tracemalloc.start()
+    edges_seen = 0
+    for ch in st.chunks():
+        edges_seen += ch.n_valid
+    _, peak = tracemalloc.get_traced_memory()
+    tracemalloc.stop()
+    st.close()
+    assert edges_seen == len(src)
+    assert peak < edge_bytes // 3, (peak, edge_bytes)
+
+
+@pytest.mark.slow
+def test_no_full_edge_list_at_scale(tmp_path):
+    """~1M-edge R-MAT partitioned from disk under tracemalloc: the HDRF
+    scan completes while read-path host allocations stay ~2 orders of
+    magnitude below the edge list."""
+    from repro.graphs import rmat_graph
+
+    src, dst, n = rmat_graph(16, edge_factor=17, seed=0, dedup=False)
+    E = len(src)
+    man = write_shards(tmp_path, src, dst, shard_edges=1 << 17, n_vertices=n)
+    ref = _np(hdrf_partition(src, dst, n, 8, chunk_size=1 << 15))
+    del src, dst
+    gc.collect()
+    tracemalloc.start()
+    with ShardedEdgeStream(man, chunk_size=1 << 15) as st:
+        parts = _np(hdrf_partition(None, None, n, 8, stream=st))
+    _, peak = tracemalloc.get_traced_memory()
+    tracemalloc.stop()
+    assert np.array_equal(parts, ref)
+    # parts itself is O(E) (4E bytes) and unavoidable; the stream must not
+    # add another edge list on top — bound well below src+dst (8E bytes)
+    assert peak < 4 * E + 4 * E // 2, (peak, E)
+
+
+# ============================================ 4. shared stream invariants
+def _both_engines(src, dst, n, manifest, **kw):
+    yield EdgeStream(src, dst, n, **kw)
+    with ShardedEdgeStream(manifest, **kw) as st:
+        yield st
+
+
+def _check_invariants(src, dst, n, manifest, *, ordering, chunk_size, window):
+    E = len(src)
+    for stream in _both_engines(src, dst, n, manifest, ordering=ordering,
+                                chunk_size=chunk_size, seed=9, window=window):
+        # order is a permutation of arrival indices
+        order = stream.order
+        if ordering == "natural":
+            assert order is None
+            order_np = np.arange(E)
+        else:
+            order_np = np.asarray(order)
+            assert sorted(order_np.tolist()) == list(range(E))
+        # scatter_back round-trips batched (B, E) stream-order payloads
+        payload = np.stack([np.arange(E)[order_np],
+                            np.arange(E)[order_np] * 2 + 1])
+        back = _np(stream.scatter_back(payload))
+        assert np.array_equal(back[0], np.arange(E))
+        assert np.array_equal(back[1], np.arange(E) * 2 + 1)
+        # tail padding is (0, 0) self-loops with zeroed extras; n_valid sums
+        tag = np.arange(E, dtype=np.int32) + 1
+        n_valid_total = 0
+        for ch in stream.chunks(tag):
+            n_valid_total += ch.n_valid
+            s, d, x = _np(ch.src), _np(ch.dst), _np(ch.extras[0])
+            assert np.all(s[ch.n_valid:] == 0)
+            assert np.all(d[ch.n_valid:] == 0)
+            assert np.all(x[ch.n_valid:] == 0)
+            if stream.n_chunks > 1:
+                assert s.shape[0] == chunk_size  # fixed device shape
+        assert n_valid_total == E
+        # windowed: never emitted more than `window` slots early
+        if ordering == "windowed":
+            for out_pos, arrival in enumerate(order_np.tolist()):
+                assert out_pos >= arrival - window
+
+
+@pytest.mark.parametrize("ordering", ORDERINGS)
+@pytest.mark.parametrize("graph_seed", [0, 2, 5])
+def test_stream_invariants_both_engines(tmp_path, ordering, graph_seed):
+    src, dst, n, _ = random_graph(graph_seed)
+    man = write_shards(tmp_path, src, dst, shard_edges=13, n_vertices=n)
+    _check_invariants(src, dst, n, man, ordering=ordering, chunk_size=29,
+                      window=8)
+
+
+if HAVE_HYPOTHESIS:
+
+    @settings(max_examples=15, deadline=None,
+              suppress_health_check=[HealthCheck.function_scoped_fixture])
+    @given(graph_seed=st_.integers(0, 63),
+           ordering=st_.sampled_from(ORDERINGS),
+           chunk_size=st_.integers(1, 97),
+           shard_edges=st_.integers(1, 64),
+           window=st_.integers(1, 64))
+    def test_stream_invariants_fuzzed(tmp_path_factory, graph_seed, ordering,
+                                      chunk_size, shard_edges, window):
+        src, dst, n, _ = random_graph(graph_seed)
+        d = tmp_path_factory.mktemp("hyp")
+        man = write_shards(d, src, dst, shard_edges=shard_edges, n_vertices=n)
+        _check_invariants(src, dst, n, man, ordering=ordering,
+                          chunk_size=chunk_size, window=window)
+
+
+# =============================================== pipeline + prefetcher
+def test_edge_chunk_pipeline_accepts_stream_and_path(tmp_path):
+    src, dst, n, _ = random_graph(0)
+    man = write_shards(tmp_path, src, dst, shard_edges=23, n_vertices=n)
+    mem = EdgeChunkPipeline(src, dst, n, chunk_size=31, ordering="shuffled",
+                            seed=4)
+    via_path = EdgeChunkPipeline(f"file:{man}", chunk_size=31,
+                                 ordering="shuffled", seed=4)
+    via_stream = EdgeChunkPipeline(
+        ShardedEdgeStream(man, chunk_size=31, ordering="shuffled", seed=4))
+    for step in (0, 2, mem.stream.n_chunks + 1):
+        a, b, c = mem(step), via_path(step), via_stream(step)
+        assert np.array_equal(_np(a["src"]), _np(b["src"]))
+        assert np.array_equal(_np(a["src"]), _np(c["src"]))
+        assert a["start"] == b["start"] and a["n_valid"] == b["n_valid"]
+    with pytest.raises(ValueError):
+        EdgeChunkPipeline(f"file:{man}", dst, n)
+
+
+def test_prefetcher_overlaps_disk_paging(tmp_path):
+    """Compose Prefetcher with an out-of-core pipeline: batches match the
+    direct path and the worker shuts down cleanly."""
+    src, dst, n, _ = random_graph(1)
+    man = write_shards(tmp_path, src, dst, shard_edges=23, n_vertices=n)
+    pipe = EdgeChunkPipeline(str(man), chunk_size=17)
+    pf = Prefetcher(pipe, depth=2)
+    pf.start(0)
+    try:
+        for step in range(min(pipe.stream.n_chunks, 4)):
+            got = pf(step)
+            want = pipe(step)
+            assert np.array_equal(_np(got["src"]), _np(want["src"]))
+    finally:
+        pf.stop()
+    assert pf._thread is None
+
+
+def test_prefetcher_stop_unblocks_full_queue_and_restarts():
+    """Regression: stop() used to leave the worker blocked forever in
+    queue.put when the queue was full (daemon-thread leak), and restart
+    reused the stale queue."""
+    produced = []
+
+    def fn(step):
+        produced.append(step)
+        return {"step": step}
+
+    p = Prefetcher(fn, depth=1)
+    p.start(0)
+    deadline = time.time() + 5.0
+    while not p._q.full() and time.time() < deadline:  # slow consumer: never reads
+        time.sleep(0.01)
+    assert p._q.full()
+    worker = p._thread
+    p.stop()
+    worker.join(timeout=2.0)
+    assert not worker.is_alive()
+    # restart from a different step is safe and serves fresh batches
+    p.start(10)
+    assert p(10)["step"] == 10
+    assert p(11)["step"] == 11
+    worker2 = p._thread
+    p.stop()
+    assert not worker2.is_alive() and p._thread is None
+    # a stopped prefetcher degrades to direct synthesis
+    assert p(3)["step"] == 3
+    # stop() is idempotent
+    p.stop()
+
+
+def test_prefetcher_worker_death_raises_instead_of_hanging():
+    """Regression: an exception in fn used to kill the worker silently,
+    leaving the consumer blocked forever in queue.get."""
+
+    def fn(step):
+        if step >= 2:
+            raise ValueError(f"shard vanished at step {step}")
+        return {"step": step}
+
+    p = Prefetcher(fn, depth=1)
+    p.start(0)
+    try:
+        assert p(0)["step"] == 0
+        assert p(1)["step"] == 1
+        with pytest.raises(RuntimeError, match="prefetch worker died"):
+            p(2)
+    finally:
+        p.stop()

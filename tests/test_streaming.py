@@ -187,6 +187,36 @@ def test_windowed_bounded_early_emission():
         assert out_pos >= arrival - W
 
 
+@pytest.mark.slow
+def test_windowed_quality_sweep():
+    """The ROADMAP windowed-quality study (table in benchmarks/README.md):
+    a window ≥ E reproduces dst-sorted exactly (the buffer never drains
+    early, so emission is the stable dst sort), and some bounded window
+    recovers the locality RF gain over natural arrival order."""
+    from repro.core import replication_factor
+    from repro.graphs.generators import community_graph
+
+    k = 8
+    src, dst, n = community_graph(4000, n_communities=64, avg_degree=8,
+                                  p_intra=0.95, seed=0)
+    E = len(src)
+    parts, rf = {}, {}
+    orderings = {
+        "natural": EdgeStream(src, dst, n),
+        "w256": EdgeStream(src, dst, n, ordering="windowed", window=256),
+        "w4096": EdgeStream(src, dst, n, ordering="windowed", window=4096),
+        "w65536": EdgeStream(src, dst, n, ordering="windowed", window=65536),
+        "dst-sorted": EdgeStream(src, dst, n, ordering="dst-sorted"),
+    }
+    assert E < 65536  # so the largest window subsumes the whole stream
+    for name, stream in orderings.items():
+        parts[name] = np.asarray(hdrf_partition(src, dst, n, k, stream=stream))
+        rf[name] = replication_factor(src, dst, parts[name], n_vertices=n, k=k)
+    assert np.array_equal(parts["w65536"], parts["dst-sorted"])
+    best_windowed = min(rf["w256"], rf["w4096"], rf["w65536"])
+    assert best_windowed <= rf["natural"] + 0.02, rf
+
+
 def test_partitioning_valid_under_any_ordering():
     src, dst, n, _ = random_graph(1)
     k = 4
