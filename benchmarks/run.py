@@ -1,41 +1,89 @@
-"""Benchmark driver: one module per paper table/figure.
+"""Benchmark driver: one module per paper table/figure or system study.
 
-``PYTHONPATH=src python -m benchmarks.run [--full] [--only NAME]``
-prints ``name,us_per_call,derived`` CSV rows.
+``PYTHONPATH=src python -m benchmarks.run [--full] [--only NAME] [--out F]``
+prints ``name,us_per_call,derived`` CSV rows and writes every row from the
+run into one merged JSON file (default ``BENCH_RESULTS.json``).
+
+Modules are auto-discovered: every ``benchmarks/*.py`` exposing a
+``run(quick: bool)`` callable is a bench module (no manual registry to
+forget when adding one); its ``--only`` alias is the module name up to
+the first underscore (``table3_rf`` → ``table3``, ``oocstream_bench`` →
+``oocstream``, ``parallel_ingest`` → ``parallel``).
 """
 
 import argparse
+import importlib
+import json
+import pkgutil
 import sys
 import traceback
+from pathlib import Path
+
+
+def discover() -> tuple[dict, list]:
+    """Map alias → module for every bench module in this package.
+
+    Returns ``(modules, broken)`` — a module that fails at *import* time
+    lands in ``broken`` instead of crashing the driver, so one WIP file
+    cannot take down the whole nightly sweep."""
+    pkg_dir = Path(__file__).resolve().parent
+    modules, broken = {}, []
+    for info in sorted(pkgutil.iter_modules([str(pkg_dir)]),
+                       key=lambda i: i.name):
+        if info.name in ("run", "common") or info.name.startswith("_"):
+            continue
+        try:
+            mod = importlib.import_module(f"benchmarks.{info.name}")
+        except Exception:
+            traceback.print_exc()
+            broken.append(info.name)
+            continue
+        if not callable(getattr(mod, "run", None)):
+            continue
+        alias = info.name.split("_")[0]
+        if alias in modules:  # alias collision: fall back to the full name
+            alias = info.name
+        modules[alias] = mod
+    return modules, broken
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true", help="paper-scale sweeps")
     ap.add_argument("--only", default=None)
+    ap.add_argument("--out", default="BENCH_RESULTS.json",
+                    help="merged JSON output path ('' disables)")
     args = ap.parse_args()
 
-    from . import (fig7_components, fig9_sketch, fig11_pagerank, fig12_params,
-                   fig13_skewness, kernels_bench, oocstream_bench, roofline,
-                   table3_rf, table4_game, table5_optimality, windowed_quality)
+    from . import common
 
-    modules = {
-        "table3": table3_rf, "table4": table4_game, "table5": table5_optimality,
-        "fig7": fig7_components, "fig9": fig9_sketch, "fig11": fig11_pagerank,
-        "fig12": fig12_params, "fig13": fig13_skewness,
-        "kernels": kernels_bench, "roofline": roofline,
-        "oocstream": oocstream_bench, "windowed": windowed_quality,
-    }
+    modules, failed = discover()
+    if args.only and args.only not in modules:
+        ap.error(f"unknown bench {args.only!r}; one of {sorted(modules)}")
     print("name,us_per_call,derived")
-    failed = []
+    ran = []
     for name, mod in modules.items():
         if args.only and name != args.only:
             continue
         try:
             mod.run(quick=not args.full)
+            ran.append(name)
         except Exception:
             traceback.print_exc()
             failed.append(name)
+    if args.out:
+        merged = {
+            "quick": not args.full,
+            "modules_ran": ran,
+            "modules_failed": failed,
+            "rows": [
+                {"name": n, "us_per_call": us, "derived": derived}
+                for n, us, derived in common.ROWS
+            ],
+        }
+        Path(args.out).write_text(json.dumps(merged, indent=1))
+        print(f"[bench] wrote {len(common.ROWS)} rows to {args.out}",
+              file=sys.stderr)
     if failed:
         print(f"FAILED: {failed}", file=sys.stderr)
         raise SystemExit(1)

@@ -1,7 +1,17 @@
 """S5P core: the paper's contribution (clustering + Stackelberg game)."""
 
-from .cms import CMSketch, make_sketch, cms_update, cms_query, cms_merge, pair_key  # noqa: F401
+from .cms import (  # noqa: F401
+    CMSketch,
+    SketchCarry,
+    cms_merge,
+    cms_query,
+    cms_update,
+    make_sketch,
+    pair_key,
+)
 from .clustering import (  # noqa: F401
+    ClusterCarry,
+    DegreeCarry,
     cluster_stream,
     cluster_chunk,
     compact_clusters,
@@ -9,7 +19,7 @@ from .clustering import (  # noqa: F401
     reference_cluster_python,
 )
 from .game import GameInputs, GameResult, run_game, best_response_gap  # noqa: F401
-from .postprocess import assign_edges, assign_edges_stream  # noqa: F401
+from .postprocess import AssignCarry, assign_edges, assign_edges_stream  # noqa: F401
 from .s5p import S5PConfig, S5POutput, s5p_partition  # noqa: F401
 from .metrics import (  # noqa: F401
     replication_factor,

@@ -35,7 +35,7 @@ from . import clustering as _cl
 from . import postprocess as _post
 from .s5p import S5PConfig, s5p_partition
 from ..kernels import stream_scan as _scan
-from ..streaming import EdgeStream, run_scan, run_scan_batched
+from ..streaming import as_stream, run_parallel, run_scan_batched
 
 __all__ = [
     "hash_partition",
@@ -82,14 +82,6 @@ def _grid_dims(k: int) -> tuple[int, int]:
     return r, k // r
 
 
-def _as_stream(src, dst, n_vertices, stream, chunk_size):
-    if stream is not None:
-        return stream
-    from ..streaming.stream import DEFAULT_CHUNK
-
-    return EdgeStream(src, dst, n_vertices, chunk_size=chunk_size or DEFAULT_CHUNK)
-
-
 def _grid_rowcol(n_vertices, k, c, seed):
     cell = (_hash32(jnp.arange(n_vertices, dtype=jnp.int32), seed) % jnp.uint32(k)).astype(
         jnp.int32
@@ -97,7 +89,8 @@ def _grid_rowcol(n_vertices, k, c, seed):
     return cell // c, cell % c
 
 
-def grid_partition(src, dst, n_vertices, k, seed=0, *, stream=None, chunk_size=None):
+def grid_partition(src, dst, n_vertices, k, seed=0, *, stream=None,
+                   chunk_size=None, num_streams=1, super_chunk=8):
     """Grid/constrained candidate partitioning, sequential least-loaded pick.
 
     Candidate set: grid intersection of u's row/col with v's — cells
@@ -105,8 +98,9 @@ def grid_partition(src, dst, n_vertices, k, seed=0, *, stream=None, chunk_size=N
     """
     _, c = _grid_dims(k)
     row, col = _grid_rowcol(n_vertices, k, c, seed)
-    st = _as_stream(src, dst, n_vertices, stream, chunk_size)
-    parts, _ = run_scan(st, _scan.grid_init(k, row, col, c), _scan.grid_chunk)
+    st = as_stream(src, dst, n_vertices, stream=stream, chunk_size=chunk_size)
+    parts, _ = run_parallel(st, _scan.GridCarry(k, row, col, c),
+                            num_streams=num_streams, super_chunk=super_chunk)
     return parts
 
 
@@ -120,26 +114,30 @@ def grid_partition_multi_seed(src, dst, n_vertices, k, seeds, *, stream=None,
     _, c = _grid_dims(k)
     carries = [_scan.grid_init(k, *_grid_rowcol(n_vertices, k, c, s), c) for s in seeds]
     stacked = jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *carries)
-    st = _as_stream(src, dst, n_vertices, stream, chunk_size)
+    st = as_stream(src, dst, n_vertices, stream=stream, chunk_size=chunk_size)
     parts, _ = run_scan_batched(st, stacked, _scan.grid_chunk)
     return parts
 
 
 def greedy_partition(src, dst, n_vertices, k, seed=0, *, stream=None,
-                     chunk_size=None, use_kernel=None):
+                     chunk_size=None, use_kernel=None, num_streams=1,
+                     super_chunk=8):
     """PowerGraph Greedy: 4-case replica-aware assignment."""
-    st = _as_stream(src, dst, n_vertices, stream, chunk_size)
-    chunk_fn = _scan.make_chunk_fn("greedy", use_kernel=use_kernel)
-    parts, _ = run_scan(st, _scan.greedy_init(n_vertices, k), chunk_fn)
+    st = as_stream(src, dst, n_vertices, stream=stream, chunk_size=chunk_size)
+    pc = _scan.GreedyCarry(n_vertices, k, use_kernel=use_kernel)
+    parts, _ = run_parallel(st, pc, num_streams=num_streams,
+                            super_chunk=super_chunk)
     return parts
 
 
 def hdrf_partition(src, dst, n_vertices, k, seed=0, lam: float = 1.1, *,
-                   stream=None, chunk_size=None, use_kernel=None):
+                   stream=None, chunk_size=None, use_kernel=None,
+                   num_streams=1, super_chunk=8):
     """High-Degree Replicated First (partial-degree variant, as published)."""
-    st = _as_stream(src, dst, n_vertices, stream, chunk_size)
-    chunk_fn = _scan.make_chunk_fn("hdrf", use_kernel=use_kernel)
-    parts, _ = run_scan(st, _scan.hdrf_init(n_vertices, k, lam), chunk_fn)
+    st = as_stream(src, dst, n_vertices, stream=stream, chunk_size=chunk_size)
+    pc = _scan.HdrfCarry(n_vertices, k, lam, use_kernel=use_kernel)
+    parts, _ = run_parallel(st, pc, num_streams=num_streams,
+                            super_chunk=super_chunk)
     return parts
 
 
@@ -167,7 +165,7 @@ def hdrf_partition_batched(src, dst, n_vertices, ks, lams=None, *,
         for k, lam in zip(ks, lams)
     ]
     stacked = jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *carries)
-    st = _as_stream(src, dst, n_vertices, stream, chunk_size)
+    st = as_stream(src, dst, n_vertices, stream=stream, chunk_size=chunk_size)
     parts, _ = run_scan_batched(st, stacked, _scan.hdrf_chunk)
     return parts
 
@@ -222,16 +220,19 @@ def clugp_partition(src, dst, n_vertices, k, seed=0):
     return s5p_partition(src, dst, n_vertices, cfg).parts
 
 
-def _s5p(src, dst, n_vertices, k, seed=0, *, stream=None):
-    return s5p_partition(src, dst, n_vertices, S5PConfig(k=k, seed=seed),
-                         stream=stream).parts
+def _s5p(src, dst, n_vertices, k, seed=0, *, stream=None, chunk_size=None,
+         num_streams=1, super_chunk=8):
+    cfg = S5PConfig(k=k, seed=seed, chunk_size=chunk_size or 1 << 16,
+                    num_streams=num_streams, super_chunk=super_chunk)
+    return s5p_partition(src, dst, n_vertices, cfg, stream=stream).parts
 
 
-def _s5p_exact(src, dst, n_vertices, k, seed=0, *, stream=None):
-    return s5p_partition(
-        src, dst, n_vertices, S5PConfig(k=k, use_cms=False, seed=seed),
-        stream=stream,
-    ).parts
+def _s5p_exact(src, dst, n_vertices, k, seed=0, *, stream=None,
+               chunk_size=None, num_streams=1, super_chunk=8):
+    cfg = S5PConfig(k=k, use_cms=False, seed=seed,
+                    chunk_size=chunk_size or 1 << 16,
+                    num_streams=num_streams, super_chunk=super_chunk)
+    return s5p_partition(src, dst, n_vertices, cfg, stream=stream).parts
 
 
 PARTITIONERS = {

@@ -32,9 +32,13 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from ..streaming.carry import MAX, SUM, PartitionerCarry
+
 __all__ = [
     "ClusterState",
     "ClusterResult",
+    "ClusterCarry",
+    "DegreeCarry",
     "init_state",
     "cluster_chunk",
     "cluster_stream",
@@ -208,6 +212,70 @@ def cluster_chunk(
     return state
 
 
+class ClusterCarry(PartitionerCarry):
+    """Algorithm 1 as a :class:`~repro.streaming.carry.PartitionerCarry`.
+
+    Carry = :class:`ClusterState`.  Merge semantics for parallel ingest:
+    vertex→cluster tables and the id counters are monotone (``-1`` =
+    unassigned, so MAX prefers any assignment and resolves cross-worker
+    conflicts deterministically); cluster volumes and local degrees are
+    additive (SUM of per-worker deltas).  State-only — no per-edge parts.
+    """
+
+    emits_parts = False
+    # ClusterState leaf order: v2c_h, v2c_t, vol_h, vol_t, ld, next_h, next_t
+    merge_ops = (MAX, MAX, SUM, SUM, SUM, MAX, MAX)
+
+    def __init__(self, degrees: jax.Array, n_vertices: int, *, xi: int,
+                 kappa: int, global_tail: bool = False):
+        self.degrees = degrees
+        self.n_vertices = int(n_vertices)
+        self.xi = int(xi)
+        self.kappa = int(kappa)
+        self.global_tail = bool(global_tail)
+
+    def init(self) -> ClusterState:
+        return init_state(self.n_vertices)
+
+    def step_chunk(self, carry, src, dst, n_valid, *extras):
+        return cluster_chunk(
+            carry, src, dst, self.degrees, xi=self.xi, kappa=self.kappa,
+            global_tail=self.global_tail,
+        ), None
+
+
+class DegreeCarry(PartitionerCarry):
+    """One-pass global degree precompute as a carry (deg SUM; state-only).
+
+    Padding is masked via ``n_valid`` (real (0, 0) self-loops *do* count
+    toward vertex 0's degree, exactly as :func:`compute_degrees` counts
+    them — padding entries must not)."""
+
+    emits_parts = False
+    merge_ops = (SUM,)
+
+    def __init__(self, n_vertices: int):
+        self.n_vertices = int(n_vertices)
+
+    def init(self) -> jax.Array:
+        return jnp.zeros((self.n_vertices,), jnp.int32)
+
+    def step_chunk(self, carry, src, dst, n_valid, *extras):
+        return _degree_chunk(carry, src, dst, n_valid), None
+
+    def finalize(self, carry):
+        return carry.astype(jnp.int32)
+
+
+@jax.jit
+def _degree_chunk(deg, src, dst, n_valid):
+    w = (jnp.arange(src.shape[0]) < n_valid).astype(jnp.int32)
+    n = deg.shape[0]
+    deg = deg + jax.ops.segment_sum(w, src, num_segments=n)
+    deg = deg + jax.ops.segment_sum(w, dst, num_segments=n)
+    return deg
+
+
 def cluster_stream(
     src: jax.Array,
     dst: jax.Array,
@@ -218,18 +286,22 @@ def cluster_stream(
     chunk_size: int = 1 << 16,
     global_tail: bool = False,
     stream=None,
+    num_streams: int = 1,
+    super_chunk: int = 8,
 ) -> ClusterState:
     """Run Algorithm 1 over the whole stream in fixed-size device chunks.
 
     Only the O(|V|) carry persists between chunks — the streaming memory
     contract.  Degrees are the one-pass global precompute.  An existing
     :class:`repro.streaming.EdgeStream` (e.g. with a non-natural ordering)
-    may be passed instead of raw arrays.
+    may be passed instead of raw arrays.  ``num_streams > 1`` ingests S
+    sharded sub-streams in parallel with :class:`ClusterCarry` merges every
+    ``super_chunk`` chunks (``num_streams=1`` is bit-identical sequential).
     """
-    from ..streaming import EdgeStream
+    from ..streaming import as_stream, run_parallel
 
-    if stream is None:
-        stream = EdgeStream(src, dst, n_vertices, chunk_size=chunk_size)
+    stream = as_stream(src, dst, n_vertices, stream=stream,
+                       chunk_size=chunk_size)
     # host-resident streams get the one-call vectorized precompute; streams
     # without full arrays (out-of-core) take the chunked pass — the two are
     # bit-identical (integer segment sums commute)
@@ -240,12 +312,10 @@ def cluster_stream(
                                   stream.n_vertices)
     else:
         degrees = compute_degrees_stream(stream)
-    state = init_state(stream.n_vertices)
-    for ch in stream.chunks():
-        state = cluster_chunk(
-            state, ch.src, ch.dst, degrees, xi=xi, kappa=kappa,
-            global_tail=global_tail,
-        )
+    pc = ClusterCarry(degrees, stream.n_vertices, xi=xi, kappa=kappa,
+                      global_tail=global_tail)
+    _, state = run_parallel(stream, pc, num_streams=num_streams,
+                            super_chunk=super_chunk)
     return state
 
 
@@ -256,17 +326,18 @@ def compute_degrees(src: jax.Array, dst: jax.Array, n_vertices: int) -> jax.Arra
     return deg.astype(jnp.int32)
 
 
-def compute_degrees_stream(stream) -> jax.Array:
+def compute_degrees_stream(stream, num_streams: int = 1,
+                           super_chunk: int = 8) -> jax.Array:
     """The one-pass global degree precompute, chunk by chunk — O(|V|) carry,
     so it runs on out-of-core streams too.  Integer segment sums commute,
     so the result is bit-identical to :func:`compute_degrees` on the full
-    arrays (padding entries are masked out, not counted as self-loops)."""
-    deg = jnp.zeros((stream.n_vertices,), jnp.int32)
-    for ch in stream.chunks():
-        w = (jnp.arange(ch.src.shape[0]) < ch.n_valid).astype(jnp.int32)
-        deg = deg + jax.ops.segment_sum(w, ch.src, num_segments=stream.n_vertices)
-        deg = deg + jax.ops.segment_sum(w, ch.dst, num_segments=stream.n_vertices)
-    return deg.astype(jnp.int32)
+    arrays (padding entries are masked out, not counted as self-loops) —
+    and, for the same reason, to any ``num_streams``/``super_chunk``."""
+    from ..streaming import run_parallel
+
+    _, deg = run_parallel(stream, DegreeCarry(stream.n_vertices),
+                          num_streams=num_streams, super_chunk=super_chunk)
+    return deg
 
 
 def compact_clusters(state: ClusterState, degrees: jax.Array, xi: int) -> ClusterResult:

@@ -26,8 +26,11 @@ from typing import NamedTuple
 import jax
 import jax.numpy as jnp
 
+from ..streaming.carry import REPLICATED, SUM, PartitionerCarry
+
 __all__ = [
     "CMSketch",
+    "SketchCarry",
     "make_sketch",
     "pair_key",
     "cms_update",
@@ -132,3 +135,30 @@ def cms_query(sketch: CMSketch, keys: jax.Array) -> jax.Array:
 def cms_merge(a: CMSketch, b: CMSketch) -> CMSketch:
     """Merge two sketches built with identical seeds (element-wise sum)."""
     return CMSketch(table=a.table + b.table, seeds=a.seeds)
+
+
+class SketchCarry(PartitionerCarry):
+    """The Θ statistics pass as a carry: a CMS over cluster-pair keys.
+
+    The stream's (src, dst) are *cluster-id pairs*, not graph edges; each
+    valid pair increments the sketch at its order-insensitive key.  The
+    sketch is linear, so the parallel-ingest merge (table SUM, row seeds
+    replicated) is **exact** — sharded Θ ingestion loses nothing, which is
+    precisely why the paper's choice of summary distributes (cf.
+    ``core.distributed`` Phase 2's one-``psum`` sketch merge).
+    """
+
+    emits_parts = False
+    merge_ops = (SUM, REPLICATED)  # CMSketch leaves: table, seeds
+
+    def __init__(self, width: int, depth: int, seed: int = 0):
+        self.width = int(width)
+        self.depth = int(depth)
+        self.seed = int(seed)
+
+    def init(self) -> CMSketch:
+        return make_sketch(self.width, self.depth, seed=self.seed)
+
+    def step_chunk(self, carry, src, dst, n_valid, *extras):
+        counts = (jnp.arange(src.shape[0]) < n_valid).astype(jnp.uint32)
+        return cms_update(carry, pair_key(src, dst), counts), None

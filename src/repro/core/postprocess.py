@@ -23,7 +23,9 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 
-__all__ = ["assign_edges", "assign_edges_stream"]
+from ..streaming.carry import SUM, PartitionerCarry
+
+__all__ = ["AssignCarry", "assign_edges", "assign_edges_stream"]
 
 
 @partial(jax.jit, static_argnames=("k",))
@@ -57,6 +59,33 @@ def _assign_chunk(load, max_load, src, dst, is_head_edge, cu, cv, c2p, *, k: int
     return load, parts
 
 
+class AssignCarry(PartitionerCarry):
+    """Algorithm 3 as a carry: the O(k) load vector (SUM merge).
+
+    Per-edge extras (head flag, endpoint clusters) ride the chunk; the
+    cluster→partition map and capacity are replicated closure constants.
+    Under parallel ingest each sub-stream places its edges against a load
+    vector that is ``super_chunk`` chunks stale at worst — the bounded-
+    staleness regime of ``core.distributed`` Phase 4.
+    """
+
+    merge_ops = (SUM,)
+
+    def __init__(self, k: int, max_load: int, c2p: jax.Array):
+        self.k = int(k)
+        self.max_load = jnp.int32(max_load)
+        self.c2p = c2p
+
+    def init(self) -> jax.Array:
+        return jnp.zeros((self.k,), jnp.int32)
+
+    def step_chunk(self, carry, src, dst, n_valid, *extras):
+        h, a, b = extras
+        load, parts = _assign_chunk(carry, self.max_load, src, dst, h, a, b,
+                                    self.c2p, k=self.k)
+        return load, parts
+
+
 def assign_edges_stream(
     src: jax.Array,
     dst: jax.Array,
@@ -69,26 +98,24 @@ def assign_edges_stream(
     *,
     chunk_size: int = 1 << 16,
     stream=None,
+    num_streams: int = 1,
+    super_chunk: int = 8,
 ):
     """Algorithm 3 over the full stream.  Returns (parts (E,), load (k,)).
 
     The per-edge attributes (head flag, endpoint clusters) ride along the
     EdgeStream as extras, so a reordered stream keeps them aligned; parts
-    come back in arrival order either way.
+    come back in arrival order either way.  ``num_streams > 1`` places S
+    sharded sub-streams in parallel with load-vector all-reduces every
+    ``super_chunk`` chunks (``num_streams=1`` is bit-identical sequential).
     """
-    from ..streaming import EdgeStream
+    from ..streaming import as_stream, run_parallel
 
-    if stream is None:
-        stream = EdgeStream(src, dst, chunk_size=chunk_size)
-    load = jnp.zeros((k,), jnp.int32)
-    ml = jnp.int32(max_load)
-    outs = []
-    for ch in stream.chunks(is_head_edge, cu, cv):
-        h, a, b = ch.extras
-        load, parts = _assign_chunk(load, ml, ch.src, ch.dst, h, a, b, c2p, k=k)
-        outs.append(parts[: ch.n_valid])
-    parts = outs[0] if len(outs) == 1 else jnp.concatenate(outs)
-    return stream.scatter_back(parts), load
+    stream = as_stream(src, dst, stream=stream, chunk_size=chunk_size)
+    parts, load = run_parallel(
+        stream, AssignCarry(k, max_load, c2p), is_head_edge, cu, cv,
+        num_streams=num_streams, super_chunk=super_chunk)
+    return parts, load
 
 
 def assign_edges(

@@ -27,7 +27,7 @@ import numpy as np
 from . import clustering as _cl
 from . import game as _game
 from . import postprocess as _post
-from .cms import CMSketch, cms_query, cms_update, make_sketch, pair_key, suggest_params
+from .cms import CMSketch, SketchCarry, cms_query, pair_key, suggest_params
 from .. import streaming as _stream
 
 __all__ = ["S5PConfig", "S5POutput", "s5p_partition", "cluster_statistics"]
@@ -53,6 +53,10 @@ class S5PConfig:
     bounded: bool = False  # S5P-B (§5.3)
     one_stage: bool = False  # Fig. 7d ablation: no leader/follower split
     seed: int = 0
+    # parallel ingest (HEP/CuSP regime): S sharded sub-streams per pass,
+    # carry all-reduced every super_chunk chunks; 1 = sequential (exact)
+    num_streams: int = 1
+    super_chunk: int = 8
 
 
 @dataclasses.dataclass
@@ -91,6 +95,8 @@ def cluster_statistics(
     cms_nu: float,
     seed: int,
     chunk_size: int = 1 << 18,
+    num_streams: int = 1,
+    super_chunk: int = 8,
 ):
     """Stream pass 2: cluster sizes + inter-cluster adjacency Θ.
 
@@ -151,14 +157,16 @@ def cluster_statistics(
     sketch_mem = 0
     if use_cms:
         w, d = suggest_params(cms_epsilon, cms_nu)
-        sketch = make_sketch(w * max(1, int(math.sqrt(C))), d, seed=seed)
-        # stream the boundary cluster-pairs through the sketch: the Θ pass
-        # is itself an EdgeStream (over pair ids), replayed unpadded
+        # the Θ pass is itself an EdgeStream (over cluster-pair ids) driven
+        # by a SketchCarry; the sketch is linear, so parallel ingest of the
+        # pair stream merges exactly (table SUM)
         pair_stream = _stream.EdgeStream(
             a_np[a_np < C], b_np[a_np < C], C + 1, chunk_size=chunk_size
         )
-        for ch in pair_stream.chunks(pad=False):
-            sketch = cms_update(sketch, pair_key(ch.src, ch.dst))
+        theta = SketchCarry(w * max(1, int(math.sqrt(C))), d, seed=seed)
+        _, sketch = _stream.run_parallel(
+            pair_stream, theta, num_streams=num_streams,
+            super_chunk=super_chunk)
         pw = cms_query(sketch, pair_key(jnp.asarray(pa), jnp.asarray(pb))).astype(jnp.float32)
         sketch_mem = sketch.memory_bytes()
     else:
@@ -198,6 +206,7 @@ def s5p_partition(src, dst, n_vertices: int, config: S5PConfig,
     state = _cl.cluster_stream(
         src, dst, n_vertices, xi=xi, kappa=kappa,
         global_tail=config.bounded, stream=stream,
+        num_streams=config.num_streams, super_chunk=config.super_chunk,
     )
     res = _cl.compact_clusters(state, degrees, xi)
     timings["clustering"] = time.perf_counter() - t0
@@ -216,6 +225,7 @@ def s5p_partition(src, dst, n_vertices: int, config: S5PConfig,
         src, dst, res, degrees, xi,
         use_cms=config.use_cms, cms_epsilon=config.cms_epsilon,
         cms_nu=config.cms_nu, seed=config.seed,
+        num_streams=config.num_streams, super_chunk=config.super_chunk,
     )
     n_head = res.n_clusters if config.one_stage else res.n_head
     inputs = _game.GameInputs(
@@ -239,6 +249,7 @@ def s5p_partition(src, dst, n_vertices: int, config: S5PConfig,
     parts, load = _post.assign_edges_stream(
         src, dst, is_head, jnp.maximum(cu, 0), jnp.maximum(cv, 0),
         game.assignment, k, max_load, stream=stream,
+        num_streams=config.num_streams, super_chunk=config.super_chunk,
     )
     timings["postprocess"] = time.perf_counter() - t0
 

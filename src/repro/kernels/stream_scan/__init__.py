@@ -5,7 +5,13 @@ fallback; ref.py — the seed ``lax.scan`` oracles (bit-identical contract).
 """
 
 from .kernel import stream_scan_tpu  # noqa: F401
-from .ops import kernel_fits, make_chunk_fn  # noqa: F401
+from .ops import (  # noqa: F401
+    GreedyCarry,
+    GridCarry,
+    HdrfCarry,
+    kernel_fits,
+    make_chunk_fn,
+)
 from .ref import (  # noqa: F401
     greedy_chunk,
     greedy_init,

@@ -5,6 +5,14 @@
 budget) it runs the fused kernel; on CPU — where Pallas interpret mode is
 correctness-only — it runs the compiled ``lax.scan`` oracle.  Both paths
 produce bit-identical parts (tests/test_streaming.py).
+
+The scoring baselines' :class:`~repro.streaming.carry.PartitionerCarry`
+implementations live here too (``GreedyCarry`` / ``HdrfCarry`` /
+``GridCarry``): they wrap the oracle/kernel dispatch as ``step_chunk`` and
+declare the parallel-ingest merge algebra — replica bitmaps OR, loads and
+partial degrees SUM, scenario constants (λ, k-mask, grid tables)
+replicated — so oracle and kernel stay in lockstep behind one protocol
+surface.
 """
 
 from __future__ import annotations
@@ -12,10 +20,12 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from ...streaming.carry import OR, REPLICATED, SUM, PartitionerCarry
 from .kernel import stream_scan_tpu
 from . import ref as _ref
 
-__all__ = ["make_chunk_fn", "kernel_fits"]
+__all__ = ["make_chunk_fn", "kernel_fits", "GreedyCarry", "HdrfCarry",
+           "GridCarry"]
 
 _VMEM_STATE_BUDGET = 8 << 20  # bytes of bitmap+chunk state the kernel may hold
 
@@ -63,3 +73,65 @@ def make_chunk_fn(mode: str, *, use_kernel: bool | None = None):
     if mode == "grid":
         return _ref.grid_chunk  # O(k) carry — no bitmap, nothing to fuse
     raise ValueError(f"unknown mode {mode!r}")
+
+
+# ---------------------------------------------------------------------------
+# PartitionerCarry implementations (oracle/kernel dispatch behind one surface)
+# ---------------------------------------------------------------------------
+
+
+class GreedyCarry(PartitionerCarry):
+    """PowerGraph Greedy as a carry: (load SUM, replica bitmap OR)."""
+
+    merge_ops = (SUM, OR)
+
+    def __init__(self, n_vertices: int, k: int, *, use_kernel: bool | None = None):
+        self.n_vertices = int(n_vertices)
+        self.k = int(k)
+        self._chunk_fn = make_chunk_fn("greedy", use_kernel=use_kernel)
+
+    def init(self):
+        return _ref.greedy_init(self.n_vertices, self.k)
+
+    def step_chunk(self, carry, src, dst, n_valid, *extras):
+        return self._chunk_fn(carry, src, dst)
+
+
+class HdrfCarry(PartitionerCarry):
+    """HDRF as a carry: (load SUM, replica bitmap OR, partial degrees SUM,
+    λ replicated, active-partition mask replicated)."""
+
+    merge_ops = (SUM, OR, SUM, REPLICATED, REPLICATED)
+
+    def __init__(self, n_vertices: int, k: int, lam: float = 1.1, *,
+                 k_active: int | None = None, use_kernel: bool | None = None):
+        self.n_vertices = int(n_vertices)
+        self.k = int(k)
+        self.lam = float(lam)
+        self.k_active = k_active
+        self._chunk_fn = make_chunk_fn("hdrf", use_kernel=use_kernel)
+
+    def init(self):
+        return _ref.hdrf_init(self.n_vertices, self.k, self.lam,
+                              k_active=self.k_active)
+
+    def step_chunk(self, carry, src, dst, n_valid, *extras):
+        return self._chunk_fn(carry, src, dst)
+
+
+class GridCarry(PartitionerCarry):
+    """Grid partitioning as a carry: (load SUM, row/col/#cols replicated)."""
+
+    merge_ops = (SUM, REPLICATED, REPLICATED, REPLICATED)
+
+    def __init__(self, k: int, row, col, n_cols: int):
+        self.k = int(k)
+        self.row = row
+        self.col = col
+        self.n_cols = int(n_cols)
+
+    def init(self):
+        return _ref.grid_init(self.k, self.row, self.col, self.n_cols)
+
+    def step_chunk(self, carry, src, dst, n_valid, *extras):
+        return _ref.grid_chunk(carry, src, dst)

@@ -11,6 +11,12 @@ Out-of-core (mmap-paged edge shards; see ``repro.streaming.oocstream``):
   # partition straight from disk shards — edges page in chunk by chunk
   python -m repro.launch.partition --graph file:/data/g18/manifest.json \
       --k 32 --partitioner hdrf --ordering windowed
+
+Parallel ingest (S sharded sub-streams per pass, carries merged every
+--super-chunk chunks; see ``repro.streaming.parallel``):
+
+  python -m repro.launch.partition --graph rmat:17 --k 8 \
+      --partitioner hdrf --num-streams 8 --super-chunk 8
 """
 
 from __future__ import annotations
@@ -67,7 +73,12 @@ def write_shards_cli(graph: str, out_dir: str, shard_edges: int,
 
 def run(graph: str, k: int, partitioner: str = "s5p", seed: int = 0,
         compare: bool = False, *, chunk_size: int = 1 << 16,
-        ordering: str = "natural", window: int = 4096):
+        ordering: str = "natural", window: int = 4096,
+        num_streams: int = 1, super_chunk: int = 8):
+    for pname, v in (("k", k), ("chunk_size", chunk_size), ("window", window),
+                     ("num_streams", num_streams), ("super_chunk", super_chunk)):
+        if v < 1:
+            raise ValueError(f"{pname} must be >= 1, got {v}")
     stream = None
     if graph.startswith("file:"):
         stream = open_sharded_stream(graph[5:], chunk_size=chunk_size,
@@ -85,9 +96,15 @@ def run(graph: str, k: int, partitioner: str = "s5p", seed: int = 0,
     for name in names:
         fn = PARTITIONERS[name]
         kw = {}
-        takes_stream = "stream" in inspect.signature(fn).parameters
+        params = inspect.signature(fn).parameters
+        takes_stream = "stream" in params
         if stream is not None and takes_stream:
             kw["stream"] = stream
+        elif "chunk_size" in params:
+            kw["chunk_size"] = chunk_size
+        if num_streams > 1 and "num_streams" in params:
+            kw["num_streams"] = num_streams
+            kw["super_chunk"] = super_chunk
         t0 = time.time()
         parts = fn(src, dst, n, k, seed, **kw)
         dt = time.time() - t0
@@ -110,25 +127,44 @@ def run(graph: str, k: int, partitioner: str = "s5p", seed: int = 0,
     return rows
 
 
+def _positive_int(value: str) -> int:
+    """argparse type: reject non-positive sizes at the CLI boundary with a
+    clear message instead of a numpy traceback from deep inside a stream."""
+    try:
+        iv = int(value)
+    except ValueError:
+        raise argparse.ArgumentTypeError(f"expected an integer, got {value!r}")
+    if iv < 1:
+        raise argparse.ArgumentTypeError(f"must be >= 1, got {iv}")
+    return iv
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--graph", default="community:4000",
                     help="rmat:S | powerlaw:N | community:N | toy | "
                          "file:<shard manifest.json>")
-    ap.add_argument("--k", type=int, default=8)
+    ap.add_argument("--k", type=_positive_int, default=8)
     ap.add_argument("--partitioner", default="s5p", choices=list(PARTITIONERS))
     ap.add_argument("--compare", action="store_true")
     ap.add_argument("--seed", type=int, default=0)
-    ap.add_argument("--chunk-size", type=int, default=1 << 16,
-                    help="device-resident edges per chunk (file: graphs)")
+    ap.add_argument("--chunk-size", type=_positive_int, default=1 << 16,
+                    help="device-resident edges per chunk (also the "
+                         "parallel-ingest sharding granularity)")
     ap.add_argument("--ordering", default="natural",
                     choices=("natural", "shuffled", "dst-sorted", "windowed"),
                     help="stream arrival order (file: graphs)")
-    ap.add_argument("--window", type=int, default=4096,
+    ap.add_argument("--window", type=_positive_int, default=4096,
                     help="windowed-ordering buffer (file: graphs)")
+    ap.add_argument("--num-streams", type=_positive_int, default=1,
+                    help="parallel-ingest sub-streams per pass (1 = "
+                         "sequential, bit-identical)")
+    ap.add_argument("--super-chunk", type=_positive_int, default=8,
+                    help="chunks each sub-stream ingests between carry "
+                         "merges (parallel ingest only)")
     ap.add_argument("--write-shards", default=None, metavar="DIR",
                     help="convert --graph to edge shards in DIR and exit")
-    ap.add_argument("--shard-edges", type=int, default=1 << 20,
+    ap.add_argument("--shard-edges", type=_positive_int, default=1 << 20,
                     help="edges per shard for --write-shards")
     args = ap.parse_args()
     if args.write_shards:
@@ -137,7 +173,8 @@ def main():
         return
     run(args.graph, args.k, args.partitioner, args.seed, args.compare,
         chunk_size=args.chunk_size, ordering=args.ordering,
-        window=args.window)
+        window=args.window, num_streams=args.num_streams,
+        super_chunk=args.super_chunk)
 
 
 if __name__ == "__main__":

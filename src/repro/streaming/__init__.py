@@ -29,6 +29,20 @@ structure of Fig. 2 (clustering pass, Θ pass, placement pass are three
 replays of one stream); *orderings* model arrival-order robustness (§6.5
 studies stream order sensitivity).
 
+Carry protocol + parallel ingest
+--------------------------------
+``carry`` defines :class:`PartitionerCarry` — ``init / step_chunk / merge /
+finalize`` with per-field merge semantics (replica bitmaps OR, loads and
+cluster volumes SUM, HDRF degree estimates SUM, Θ sketch tables SUM,
+assignment tables MAX) — and every streaming consumer in the repo (the
+greedy/HDRF/grid scoring scans, Alg. 1 clustering, the Θ pass, Alg. 3
+placement, the degree precompute) is an implementation of it.  ``parallel``
+shards one logical stream into S sub-streams (:class:`ParallelEdgeStream`)
+and drives any carry over them (:func:`run_parallel`) with carry
+all-reduces at super-chunk boundaries — single-device vmapped lanes or one
+lane per device under ``shard_map``; ``num_streams=1`` is bit-identical to
+the sequential driver by construction.
+
 Out-of-core (graphs ≫ RAM)
 --------------------------
 ``oocstream`` extends the contract to disk: :func:`write_shards` lays an
@@ -49,7 +63,16 @@ O(shard_edges + chunk + window).  CLI: ``python -m repro.launch.partition
 """
 
 from .stream import Chunk, EdgeStream  # noqa: F401
-from .engine import run_scan, run_scan_batched  # noqa: F401
+from .carry import (  # noqa: F401
+    MAX,
+    OR,
+    REPLICATED,
+    SUM,
+    FnCarry,
+    PartitionerCarry,
+)
+from .engine import as_stream, run_carry, run_scan, run_scan_batched  # noqa: F401
+from .parallel import ParallelEdgeStream, run_parallel  # noqa: F401
 from .oocstream import (  # noqa: F401
     HostBudget,
     ShardedEdgeStream,
@@ -57,5 +80,7 @@ from .oocstream import (  # noqa: F401
     write_shards,
 )
 
-__all__ = ["Chunk", "EdgeStream", "run_scan", "run_scan_batched",
+__all__ = ["Chunk", "EdgeStream", "as_stream", "run_carry", "run_scan",
+           "run_scan_batched", "PartitionerCarry", "FnCarry", "SUM", "OR",
+           "MAX", "REPLICATED", "ParallelEdgeStream", "run_parallel",
            "HostBudget", "ShardedEdgeStream", "read_manifest", "write_shards"]

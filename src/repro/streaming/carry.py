@@ -1,0 +1,214 @@
+"""PartitionerCarry — the one carry protocol every streaming consumer speaks.
+
+A streaming partitioner is an ``init / step_chunk / merge / finalize``
+quadruple over an O(|V| + k) carry pytree:
+
+- ``init()``        — the identity carry (empty replica bitmaps, zero loads);
+- ``step_chunk``    — fold one EdgeStream chunk into the carry, optionally
+  emitting per-edge results (``parts``) for that chunk;
+- ``merge``         — reconcile carries produced by *independent* sub-streams
+  (the HEP/CuSP parallel-ingest regime: S workers ingest disjoint chunk
+  ranges, their carries are all-reduced at super-chunk boundaries);
+- ``finalize``      — extract the consumer-facing result from the carry.
+
+Merge semantics are declared **per field** via :attr:`merge_ops`, one op per
+leaf of the carry pytree in ``jax.tree_util`` flattening order:
+
+- ``SUM``        — additive statistics: partition loads, cluster volumes,
+  HDRF partial-degree estimates, Θ count-min tables, degree counts.  Merging
+  carries that diverged from a common ``base`` sums their *deltas*
+  (``base + Σ (cᵢ − base)``), so the base is never double-counted.
+- ``OR``         — monotone union: replica bitmaps (a vertex is replicated on
+  a partition if *any* sub-stream put it there).  Implemented as elementwise
+  maximum, which is ∨ on bools and works for int-encoded bitmaps.
+- ``MAX``        — monotone resolution for assignment tables and id counters:
+  vertex→cluster entries are ``-1`` when unassigned, so ``max`` prefers any
+  assignment over none and breaks conflicting assignments deterministically.
+- ``REPLICATED`` — scenario constants threaded through the carry (HDRF λ,
+  the padded-k mask, grid row/col tables): identical in every sub-stream,
+  merged by taking the first.
+
+Why these laws matter: ``SUM``/``OR``/``MAX`` over integer/bool arrays are
+associative and commutative, and ``init()`` is their identity — so the
+merged carry is independent of worker count, merge tree shape, and arrival
+interleaving of the merge itself (``tests/test_carry.py`` pins this
+algebra property-based).  That is exactly the licence ``run_parallel``
+needs to all-reduce carries with one collective per super-chunk.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Callable, Iterable, Sequence
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "SUM",
+    "OR",
+    "MAX",
+    "REPLICATED",
+    "MERGE_OPS",
+    "PartitionerCarry",
+    "FnCarry",
+]
+
+SUM = "sum"
+OR = "or"
+MAX = "max"
+REPLICATED = "replicated"
+
+MERGE_OPS = (SUM, OR, MAX, REPLICATED)
+
+
+def _or_leaf(a, b):
+    # ∨ on bools, elementwise max on int-encoded bitmaps — both monotone
+    if a.dtype == jnp.bool_:
+        return a | b
+    return jnp.maximum(a, b)
+
+
+def _check_ops(ops: Sequence[str], n_leaves: int) -> None:
+    if len(ops) != n_leaves:
+        raise ValueError(
+            f"merge_ops declares {len(ops)} fields but the carry has "
+            f"{n_leaves} leaves")
+    for op in ops:
+        if op not in MERGE_OPS:
+            raise ValueError(f"unknown merge op {op!r}; one of {MERGE_OPS}")
+
+
+class PartitionerCarry:
+    """Base class: declare :attr:`merge_ops`, implement ``init``/``step_chunk``.
+
+    ``step_chunk(carry, src, dst, n_valid, *extras) -> (carry, parts)`` must
+    be pure and traceable (``n_valid`` arrives as a traced int32 scalar so
+    one compiled step serves every chunk; padding entries are (0, 0)
+    self-loops, which every consumer already masks).  ``parts`` is the
+    per-edge result for the chunk (or ``None`` for state-only consumers
+    like clustering and the Θ pass).
+
+    ``merge``/``merge_stacked`` are derived from :attr:`merge_ops`;
+    ``finalize`` defaults to the identity.
+    """
+
+    #: one merge op per carry leaf, in ``jax.tree_util`` flattening order
+    merge_ops: tuple[str, ...] = ()
+
+    #: False for state-only consumers whose step_chunk returns parts=None
+    emits_parts: bool = True
+
+    # ------------------------------------------------------------ protocol
+    def init(self):
+        raise NotImplementedError
+
+    def step_chunk(self, carry, src, dst, n_valid, *extras):
+        raise NotImplementedError
+
+    def finalize(self, carry):
+        return carry
+
+    # ------------------------------------------------------------- merging
+    def merge(self, carries: Iterable[Any], base: Any | None = None):
+        """Reconcile carries from independent sub-streams.
+
+        With ``base`` given, every carry is treated as a divergence from
+        that common ancestor (``SUM`` fields add deltas onto the base);
+        without it, carries are deltas from the identity and ``SUM`` fields
+        add directly.  ``merge([c])`` returns ``c`` unchanged (bitwise)."""
+        carries = list(carries)
+        if not carries:
+            raise ValueError("merge() needs at least one carry")
+        if len(carries) == 1:
+            return carries[0]
+        flat0, treedef = jax.tree_util.tree_flatten(carries[0])
+        _check_ops(self.merge_ops, len(flat0))
+        cols = [flat0] + [
+            jax.tree_util.tree_flatten(c)[0] for c in carries[1:]
+        ]
+        base_flat = (jax.tree_util.tree_leaves(base)
+                     if base is not None else None)
+        out = []
+        for i, op in enumerate(self.merge_ops):
+            leaves = [jnp.asarray(c[i]) for c in cols]
+            if op == SUM:
+                acc = leaves[0]
+                for x in leaves[1:]:
+                    acc = acc + x
+                if base_flat is not None:
+                    b = jnp.asarray(base_flat[i])
+                    acc = acc - (len(leaves) - 1) * b.astype(acc.dtype)
+                out.append(acc)
+            elif op in (OR, MAX):
+                acc = leaves[0]
+                for x in leaves[1:]:
+                    acc = _or_leaf(acc, x) if op == OR else jnp.maximum(acc, x)
+                out.append(acc)
+            else:  # REPLICATED
+                out.append(leaves[0])
+        return jax.tree_util.tree_unflatten(treedef, out)
+
+    def merge_stacked(self, stacked, base: Any | None = None):
+        """Merge a carry whose every leaf carries a leading lane axis
+        (the vmap parallel backend's layout) in one reduction per field."""
+        flat, treedef = jax.tree_util.tree_flatten(stacked)
+        _check_ops(self.merge_ops, len(flat))
+        base_flat = (jax.tree_util.tree_leaves(base)
+                     if base is not None else None)
+        out = []
+        for i, op in enumerate(self.merge_ops):
+            x = jnp.asarray(flat[i])
+            if op == SUM:
+                acc = jnp.sum(x, axis=0)
+                if base_flat is not None:
+                    b = jnp.asarray(base_flat[i])
+                    acc = acc - (x.shape[0] - 1) * b.astype(acc.dtype)
+                out.append(acc.astype(x.dtype))
+            elif op == OR:
+                out.append(jnp.any(x, axis=0) if x.dtype == jnp.bool_
+                           else jnp.max(x, axis=0))
+            elif op == MAX:
+                out.append(jnp.max(x, axis=0))
+            else:  # REPLICATED
+                out.append(x[0])
+        return jax.tree_util.tree_unflatten(treedef, out)
+
+    def merge_collective(self, local, base, axis: str):
+        """The shard_map form of :meth:`merge`: one collective per field
+        (``psum`` of deltas for SUM, ``pmax`` for OR/MAX, base for
+        REPLICATED), evaluated on every device of mesh axis ``axis``."""
+        flat, treedef = jax.tree_util.tree_flatten(local)
+        _check_ops(self.merge_ops, len(flat))
+        base_flat = jax.tree_util.tree_leaves(base)
+        out = []
+        for i, op in enumerate(self.merge_ops):
+            x = flat[i]
+            if op == SUM:
+                b = base_flat[i].astype(x.dtype)
+                out.append(b + jax.lax.psum(x - b, axis))
+            elif op in (OR, MAX):
+                if x.dtype == jnp.bool_:
+                    out.append(jax.lax.pmax(x.astype(jnp.int32), axis) > 0)
+                else:
+                    out.append(jax.lax.pmax(x, axis))
+            else:  # REPLICATED
+                out.append(base_flat[i])
+        return jax.tree_util.tree_unflatten(treedef, out)
+
+
+class FnCarry(PartitionerCarry):
+    """Adapter: a bare ``(carry0, chunk_fn)`` pair as a PartitionerCarry.
+
+    Wraps the legacy ``run_scan`` contract (``chunk_fn(carry, src, dst,
+    *extras)``) so the engine has one driver code path.  No merge semantics
+    are declared — sequential use only."""
+
+    def __init__(self, carry0, chunk_fn: Callable):
+        self._carry0 = carry0
+        self._chunk_fn = chunk_fn
+
+    def init(self):
+        return self._carry0
+
+    def step_chunk(self, carry, src, dst, n_valid, *extras):
+        return self._chunk_fn(carry, src, dst, *extras)

@@ -1,12 +1,19 @@
 """Scan drivers: thread an O(|V|+k) carry through EdgeStream chunks.
 
-A *chunk function* has signature ``(carry, src, dst, *extras) -> (carry,
-parts)`` and is jitted by its author (module-level, so the compile cache is
-shared across every call with the same chunk shape — the engine never
-recompiles per invocation).  ``repro.kernels.stream_scan.ref`` hosts the
-chunk functions for the scoring baselines; ``cluster_chunk`` and
-``_assign_chunk`` are the other two consumers.
+Consumers speak the :class:`~repro.streaming.carry.PartitionerCarry`
+protocol (``init / step_chunk / merge / finalize``); :func:`run_carry`
+drives one protocol instance over a stream sequentially, and
+``repro.streaming.parallel.run_parallel`` drives it over S sharded
+sub-streams with carry all-reduces at super-chunk boundaries.
 
+Chunk step functions are jitted by their author (module-level, so the
+compile cache is shared across every call with the same chunk shape — the
+engine never recompiles per invocation).  ``repro.kernels.stream_scan``
+hosts the scoring-baseline carries; ``core.clustering``,
+``core.postprocess`` and ``core.cms`` host the other consumers.
+
+``run_scan`` is the legacy ``(carry0, chunk_fn)`` surface, now a thin
+:class:`~repro.streaming.carry.FnCarry` adapter over the same driver.
 ``run_scan_batched`` vmaps one compiled chunk function over a stacked
 carry: many seeds, many HDRF λ values, or many (padded) partition counts
 run as one batched engine over a single pass of the stream.
@@ -19,9 +26,46 @@ from typing import Callable
 import jax
 import jax.numpy as jnp
 
-from .stream import EdgeStream
+from .carry import FnCarry, PartitionerCarry
+from .stream import DEFAULT_CHUNK, EdgeStream
 
-__all__ = ["run_scan", "run_scan_batched"]
+__all__ = ["as_stream", "run_carry", "run_scan", "run_scan_batched"]
+
+
+def as_stream(src, dst, n_vertices=None, *, stream=None, chunk_size=None):
+    """Normalize (arrays | existing stream) to an :class:`EdgeStream`.
+
+    The shared front door of every streaming consumer: pass ``stream`` to
+    reuse a replayable (possibly out-of-core / reordered) stream, or raw
+    arrays to wrap them at ``chunk_size``.
+    """
+    if stream is not None:
+        return stream
+    return EdgeStream(src, dst, n_vertices,
+                      chunk_size=chunk_size or DEFAULT_CHUNK)
+
+
+def run_carry(stream: EdgeStream, pc: PartitionerCarry, *extras, carry=None):
+    """Drive a PartitionerCarry over every chunk of ``stream``.
+
+    Returns ``(parts, result)`` where ``parts`` is in arrival order
+    (stream-order results are scattered back through the stream's
+    permutation) — ``None`` for state-only consumers — and ``result`` is
+    ``pc.finalize(final_carry)``.
+    """
+    if carry is None:
+        carry = pc.init()
+    outs = []
+    for ch in stream.chunks(*extras):
+        carry, parts = pc.step_chunk(
+            carry, ch.src, ch.dst, jnp.int32(ch.n_valid), *ch.extras)
+        if parts is not None:
+            outs.append(parts[: ch.n_valid])
+    result = pc.finalize(carry)
+    if not outs:
+        return None, result
+    parts = outs[0] if len(outs) == 1 else jnp.concatenate(outs)
+    return stream.scatter_back(parts), result
 
 
 def run_scan(
@@ -30,17 +74,9 @@ def run_scan(
     chunk_fn: Callable,
     *extras,
 ):
-    """Drive ``chunk_fn`` over every chunk; returns (parts, final_carry).
-
-    ``parts`` is in arrival order (stream-order results are scattered back
-    through the stream's permutation).
-    """
-    outs = []
-    for ch in stream.chunks(*extras):
-        carry, parts = chunk_fn(carry, ch.src, ch.dst, *ch.extras)
-        outs.append(parts[: ch.n_valid])
-    parts = outs[0] if len(outs) == 1 else jnp.concatenate(outs)
-    return stream.scatter_back(parts), carry
+    """Legacy driver: ``chunk_fn(carry, src, dst, *extras)`` over every
+    chunk; returns (parts, final_carry).  ``parts`` is in arrival order."""
+    return run_carry(stream, FnCarry(carry, chunk_fn), *extras)
 
 
 def run_scan_batched(

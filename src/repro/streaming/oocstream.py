@@ -290,6 +290,8 @@ class ShardedEdgeStream(EdgeStream):
             raise ValueError(f"unknown ordering {ordering!r}; one of {ORDERINGS}")
         if chunk_size < 1:
             raise ValueError("chunk_size must be >= 1")
+        if window < 1:
+            raise ValueError("window must be >= 1")
         self.manifest_path, self._meta = read_manifest(manifest)
         self.root = self.manifest_path.parent
         self._n_edges = int(self._meta["n_edges"])

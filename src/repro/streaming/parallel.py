@@ -1,0 +1,332 @@
+"""Parallel ingest: one logical EdgeStream sharded into S sub-streams.
+
+The HEP/CuSP-style regime (ROADMAP "Distributed streams"): S workers each
+ingest a disjoint share of the stream's chunks, folding their own
+:class:`~repro.streaming.carry.PartitionerCarry` replica, and the carries
+are reconciled by the protocol's declared merge semantics (replica bitmaps
+OR, loads/volumes/degree estimates/Θ tables SUM, assignment tables MAX)
+once per *super-chunk* — the only cross-worker communication, O(|V|·k)
+state per merge, never edges.
+
+:class:`ParallelEdgeStream` is the sharding plan: it slices any
+:class:`~repro.streaming.stream.EdgeStream` (in-memory or the mmap-paged
+``ShardedEdgeStream``) into S logical sub-streams by contiguous chunk
+**range** or chunk **round-robin**, and serves lockstep *rounds* — the
+r-th chunk of every sub-stream, stacked into (S, B) device arrays (lanes
+that ran out of chunks serve all-padding (0, 0) self-loop chunks, the
+masked no-op every consumer already skips).
+
+:func:`run_parallel` drives a carry over that plan with three backends
+that produce **bit-identical results** (merges are integer/bool exact, so
+reduction order cannot matter):
+
+- ``"threads"``   — S host workers, each folding its sub-stream through
+  the shared compiled chunk step (jax releases the GIL during execution,
+  so workers genuinely overlap on multicore hosts; wall-clock gain is
+  bounded by ``min(S, cores)``).  The default on single-device hosts.
+- ``"shard_map"`` — one lane per device of a mesh axis (built over the
+  first S local devices by default, or any provided mesh); the super-chunk
+  merge becomes one ``psum``/``pmax`` collective per carry field — the
+  same collective plumbing ``core.distributed`` uses.  The default when
+  the platform reports ≥ S devices.  (Note: *forced* host-platform CPU
+  devices execute serially — real parallelism needs real devices or the
+  threads backend.)
+- ``"vmap"``      — one compiled step processes all S lanes per round as
+  a batch.  Semantically the reference backend; on XLA:CPU the batched
+  per-edge scatters lower poorly, so use it for testing, not speed.
+
+``num_streams=1`` (or a single-chunk stream) bypasses all of this and runs
+the sequential :func:`~repro.streaming.engine.run_carry` driver — the
+parallel path is additive, so every sequential result (and the pinned
+golden hashes) is reproduced bit-identically by construction.
+"""
+
+from __future__ import annotations
+
+import threading
+from concurrent.futures import ThreadPoolExecutor
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .carry import PartitionerCarry
+from .engine import run_carry
+from .stream import EdgeStream
+
+try:  # jax ≥ 0.5 top-level API; older releases ship it under experimental
+    _shard_map = jax.shard_map
+except AttributeError:  # pragma: no cover - version shim
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+# pvary (varying-axis annotation) only exists on newer jax; on older
+# shard_map it is unnecessary — replicated operands are implicitly varying
+_pvary = getattr(jax.lax, "pvary", lambda x, axes: x)
+
+__all__ = ["ParallelEdgeStream", "run_parallel"]
+
+SHARD_MODES = ("range", "round-robin")
+
+
+class ParallelEdgeStream:
+    """Shard a stream's chunk index space into S logical sub-streams.
+
+    ``shard="range"`` gives sub-stream s the contiguous chunk range
+    ``[s·⌈C/S⌉, (s+1)·⌈C/S⌉)`` (each worker scans a contiguous slice of
+    the stream — the HEP file-split layout); ``shard="round-robin"`` deals
+    chunk i to sub-stream ``i mod S`` (arrival-interleaved, the Le Merrer
+    et al. multi-worker placement layout).  Either way every chunk belongs
+    to exactly one sub-stream and sub-stream-local order preserves stream
+    order.
+    """
+
+    def __init__(self, stream: EdgeStream, num_streams: int, *,
+                 shard: str = "range"):
+        if num_streams < 1:
+            raise ValueError("num_streams must be >= 1")
+        if shard not in SHARD_MODES:
+            raise ValueError(f"unknown shard mode {shard!r}; one of {SHARD_MODES}")
+        self.stream = stream
+        self.shard = shard
+        # more lanes than chunks would only add all-padding lanes
+        self.num_streams = max(1, min(int(num_streams), stream.n_chunks))
+        C, S = stream.n_chunks, self.num_streams
+        if shard == "range":
+            q = -(-C // S)
+            self.lanes = [list(range(s * q, min((s + 1) * q, C)))
+                          for s in range(S)]
+        else:
+            self.lanes = [list(range(s, C, S)) for s in range(S)]
+
+    @property
+    def n_rounds(self) -> int:
+        """Lockstep rounds = chunks of the longest sub-stream."""
+        return max(len(lane) for lane in self.lanes)
+
+    def chunk_n_valid(self, chunk_id: int) -> int:
+        cs, E = self.stream.chunk_size, self.stream.n_edges
+        return min((chunk_id + 1) * cs, E) - chunk_id * cs
+
+    def round_at(self, r: int, *extras):
+        """Round r as stacked (S, B) arrays.
+
+        Returns ``(src, dst, n_valid (S,), extras, chunk_ids)`` where
+        ``chunk_ids[s]`` is the stream chunk served to lane s this round
+        (``None`` for exhausted lanes, which get all-padding chunks).
+        """
+        st = self.stream
+        B = st.chunk_size
+        srcs, dsts, nvs, ids = [], [], [], []
+        exs: list[list] = [[] for _ in extras]
+        zero = None
+        for lane in self.lanes:
+            if r < len(lane):
+                cid = lane[r]
+                ch = st.chunk_at(cid, *extras)
+                if ch.src.shape[0] != B:  # single-chunk streams never get here
+                    raise AssertionError("parallel rounds need fixed-size chunks")
+                srcs.append(ch.src)
+                dsts.append(ch.dst)
+                nvs.append(ch.n_valid)
+                for j, e in enumerate(ch.extras):
+                    exs[j].append(e)
+                ids.append(cid)
+            else:  # exhausted lane: all-padding (0, 0) self-loop chunk
+                if zero is None:
+                    zero = jnp.zeros((B,), jnp.int32)
+                srcs.append(zero)
+                dsts.append(zero)
+                nvs.append(0)
+                for j, e in enumerate(exs):
+                    proto = e[0] if e else None
+                    if proto is None:
+                        raise AssertionError("padding lane before any real lane")
+                    e.append(jnp.zeros_like(proto))
+                ids.append(None)
+        return (
+            jnp.stack(srcs),
+            jnp.stack(dsts),
+            jnp.asarray(np.array(nvs, np.int32)),
+            tuple(jnp.stack(e) for e in exs),
+            ids,
+        )
+
+
+def _mask_inactive_step(pc):
+    """Wrap ``pc.step_chunk`` so an all-padding chunk (``n_valid == 0`` —
+    only exhausted lanes serve these) is a true carry no-op.  Consumers
+    only guarantee no-op behaviour for *embedded* (0, 0) self-loops where
+    it matters for results (HDRF, e.g., counts partial degrees for them,
+    exactly as the sequential tail-padding does); an exhausted lane must
+    contribute an exact identity delta instead."""
+
+    def step(carry, src, dst, n_valid, *extras):
+        new, parts = pc.step_chunk(carry, src, dst, n_valid, *extras)
+        active = n_valid > 0
+        kept = jax.tree_util.tree_map(
+            lambda o, n: jnp.where(active, n, o), carry, new)
+        return kept, parts
+
+    return step
+
+
+def _resolve_backend(backend, S):
+    if backend is not None:
+        return backend
+    return "shard_map" if len(jax.devices()) >= S else "threads"
+
+
+def _streams_mesh(S):
+    return jax.sharding.Mesh(np.asarray(jax.devices()[:S]), ("streams",))
+
+
+def run_parallel(
+    stream: EdgeStream,
+    pc: PartitionerCarry,
+    *extras,
+    num_streams: int = 1,
+    super_chunk: int = 8,
+    shard: str = "range",
+    backend: str | None = None,
+    mesh=None,
+):
+    """Drive ``pc`` over ``stream`` with S-way parallel ingest.
+
+    Same return contract as :func:`~repro.streaming.engine.run_carry`:
+    ``(parts_in_arrival_order | None, pc.finalize(final_carry))``.
+    ``super_chunk`` is the number of rounds (chunks per sub-stream)
+    between carry merges — smaller means fresher cross-worker state,
+    larger means less communication.  ``num_streams=1`` delegates to the
+    sequential driver and is bit-identical to it.
+    """
+    if num_streams < 1:
+        raise ValueError("num_streams must be >= 1")
+    if super_chunk < 1:
+        raise ValueError("super_chunk must be >= 1")
+    if num_streams == 1 or stream.n_chunks <= 1:
+        return run_carry(stream, pc, *extras)
+
+    ps = ParallelEdgeStream(stream, num_streams, shard=shard)
+    S = ps.num_streams
+    backend = _resolve_backend(backend, S)
+    base = pc.init()
+    parts_by_chunk: dict[int, jax.Array] = {}
+
+    if backend == "vmap":
+        n_ex = len(extras)
+        # jit the vmapped step once per drive: rounds reuse one executable
+        vstep = jax.jit(jax.vmap(_mask_inactive_step(pc),
+                                 in_axes=(0, 0, 0, 0) + (0,) * n_ex))
+        for r0 in range(0, ps.n_rounds, super_chunk):
+            local = jax.tree_util.tree_map(
+                lambda x: jnp.broadcast_to(
+                    jnp.asarray(x), (S,) + jnp.shape(jnp.asarray(x))), base)
+            for r in range(r0, min(r0 + super_chunk, ps.n_rounds)):
+                src, dst, nv, exs, ids = ps.round_at(r, *extras)
+                local, parts = vstep(local, src, dst, nv, *exs)
+                if parts is not None:
+                    for s, cid in enumerate(ids):
+                        if cid is not None:
+                            parts_by_chunk[cid] = parts[s]
+            base = pc.merge_stacked(local, base)
+    elif backend == "shard_map":
+        mesh = mesh if mesh is not None else _streams_mesh(S)
+        axis = mesh.axis_names[0]
+        if mesh.shape[axis] != S:
+            raise ValueError(
+                f"shard_map backend needs a {S}-wide mesh axis, got "
+                f"{mesh.shape[axis]} (use backend='threads' or 'vmap' on "
+                f"hosts with fewer devices)")
+        fns: dict[int, object] = {}  # jitted super-step per round count
+        for r0 in range(0, ps.n_rounds, super_chunk):
+            rounds = list(range(r0, min(r0 + super_chunk, ps.n_rounds)))
+            blocks = [ps.round_at(r, *extras) for r in rounds]
+            # (S, R, B) lane-major blocks for this super-chunk
+            src_b = jnp.stack([b[0] for b in blocks], axis=1)
+            dst_b = jnp.stack([b[1] for b in blocks], axis=1)
+            nv_b = jnp.stack([b[2] for b in blocks], axis=1)
+            exs_b = tuple(
+                jnp.stack([b[3][j] for b in blocks], axis=1)
+                for j in range(len(extras)))
+            R = len(rounds)
+            if R not in fns:
+                fns[R] = _make_super_step(pc, mesh, axis, R, base,
+                                          len(extras))
+            base, parts_b = fns[R](base, src_b, dst_b, nv_b, *exs_b)
+            base = jax.tree_util.tree_map(lambda x: x[0], base)
+            if pc.emits_parts:
+                for ri, r in enumerate(rounds):
+                    ids = blocks[ri][4]
+                    for s, cid in enumerate(ids):
+                        if cid is not None:
+                            parts_by_chunk[cid] = parts_b[s, ri]
+    elif backend == "threads":
+        # S host workers fold their sub-streams concurrently through the
+        # shared compiled step (execution releases the GIL); chunk staging
+        # is serialized under one lock — the out-of-core stream's budget
+        # accounting and staging buffers are not thread-safe, and staging
+        # is a small fraction of a chunk's scan cost.
+        stage_lock = threading.Lock()
+
+        def lane_fold(lane, r0, r1, start):
+            local = start
+            for r in range(r0, min(r1, len(lane))):
+                cid = lane[r]
+                with stage_lock:
+                    ch = stream.chunk_at(cid, *extras)
+                local, parts = pc.step_chunk(
+                    local, ch.src, ch.dst, jnp.int32(ch.n_valid), *ch.extras)
+                if parts is not None:
+                    parts_by_chunk[cid] = parts[: ch.n_valid]
+            return local
+
+        with ThreadPoolExecutor(max_workers=S) as ex:
+            for r0 in range(0, ps.n_rounds, super_chunk):
+                futs = [ex.submit(lane_fold, lane, r0, r0 + super_chunk, base)
+                        for lane in ps.lanes]
+                base = pc.merge([f.result() for f in futs], base=base)
+    else:
+        raise ValueError(f"unknown backend {backend!r}")
+
+    result = pc.finalize(base)
+    if not parts_by_chunk:
+        return None, result
+    outs = [parts_by_chunk[cid][: ps.chunk_n_valid(cid)]
+            for cid in range(stream.n_chunks)]
+    parts = outs[0] if len(outs) == 1 else jnp.concatenate(outs)
+    return stream.scatter_back(parts), result
+
+
+def _make_super_step(pc, mesh, axis, R, base, n_ex):
+    """Build the jitted shard_map super-step for R rounds: each device
+    folds its lane's R chunks from the replicated base carry, then the
+    carries are merged by one collective per field.  Returns a callable
+    ``(base, src (S,R,B), dst, nv (S,R), *extras) -> (merged (S-stacked,
+    identical per lane — caller takes lane 0), parts (S, R, B))``."""
+    P = jax.sharding.PartitionSpec
+    lane = P(axis)
+
+    step = _mask_inactive_step(pc)
+
+    def body(base_carry, src, dst, nv, *exs):
+        local = jax.tree_util.tree_map(
+            lambda x: _pvary(x, (axis,)), base_carry)
+        parts_rounds = []
+        for r in range(R):
+            local, parts = step(
+                local, src[0, r], dst[0, r], nv[0, r],
+                *[e[0, r] for e in exs])
+            if pc.emits_parts:
+                parts_rounds.append(parts)
+        merged = pc.merge_collective(local, base_carry, axis)
+        merged = jax.tree_util.tree_map(lambda x: x[None], merged)
+        if parts_rounds:
+            return merged, jnp.stack(parts_rounds)[None]
+        return merged, jnp.zeros((1, 1, 1), jnp.int32)
+
+    return jax.jit(_shard_map(
+        body, mesh=mesh,
+        in_specs=(jax.tree_util.tree_map(lambda _: P(), base),
+                  lane, lane, lane) + (lane,) * n_ex,
+        out_specs=(jax.tree_util.tree_map(lambda _: lane, base), lane),
+    ))

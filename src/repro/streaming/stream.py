@@ -90,6 +90,8 @@ class EdgeStream:
             raise ValueError(f"unknown ordering {ordering!r}; one of {ORDERINGS}")
         if chunk_size < 1:
             raise ValueError("chunk_size must be >= 1")
+        if window < 1:
+            raise ValueError("window must be >= 1")
         self.src = np.asarray(src, np.int32)
         self.dst = np.asarray(dst, np.int32)
         if self.src.shape != self.dst.shape:
