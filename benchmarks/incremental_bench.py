@@ -1,0 +1,86 @@
+"""Incremental re-partitioning: warm-start replay vs cold full re-run.
+
+The Le Merrer & Trédan question, asked of this repo's subsystem: for a
+growing R-MAT stream, how much of a full re-partition's wall-clock does a
+warm-start replay of only the delta save, and how much replication-factor
+quality does it give up?  Deltas of 1 % / 5 % / 10 % of the stream are
+split off the tail; the warm path restores the prefix carry from a
+CarryStore, replays the delta, and (for S5P) runs the drift-triggered
+masked-game refinement (threshold 0 ⇒ always refine — the quality-anchor
+regime).
+
+Rows: ``incremental/<name>/d<pct>`` with derived
+``speedup=<cold/warm> rf_warm rf_cold replay=<fraction of cold's folds>``.
+Timings on this container are load-noisy (see benchmarks/README.md);
+the speedup column is the comparison, the replay column is the invariant.
+"""
+
+from __future__ import annotations
+
+import tempfile
+import time
+
+import numpy as np
+
+from repro.core import S5PConfig, replication_factor, s5p_partition
+from repro.core.baselines import hdrf_partition
+from repro.graphs import rmat_graph
+from repro.incremental import cold_start, run_incremental
+
+from . import common
+
+
+def _cold_run(name, src, dst, n, k, cfg):
+    t0 = time.perf_counter()
+    if name == "s5p":
+        cold_parts = s5p_partition(src, dst, n, cfg).parts
+    else:
+        cold_parts = hdrf_partition(src, dst, n, k,
+                                    chunk_size=cfg.chunk_size)
+    t_cold = time.perf_counter() - t0
+    rf_cold = replication_factor(src, dst, cold_parts, n_vertices=n, k=k)
+    return t_cold, rf_cold
+
+
+def _bench_one(name, src, dst, n, k, frac, cfg, t_cold, rf_cold):
+    E = len(src)
+    E0 = int(E * (1.0 - frac))
+
+    with tempfile.TemporaryDirectory() as store:
+        cold_start(store, name, src[:E0], dst[:E0], n, k,
+                   chunk_size=cfg.chunk_size, s5p_config=cfg)
+        t0 = time.perf_counter()
+        res = run_incremental(store, name, src, dst, n, k,
+                              chunk_size=cfg.chunk_size, s5p_config=cfg,
+                              save=False)
+        t_warm = time.perf_counter() - t0
+    common.emit(
+        f"incremental/{name}/d{int(frac * 100)}",
+        t_warm * 1e6,
+        f"speedup={t_cold / max(t_warm, 1e-9):.1f}x "
+        f"rf_warm={res.rf:.3f} rf_cold={rf_cold:.3f} "
+        f"replay={res.replay_fraction:.1%} refined={res.refined}",
+    )
+
+
+def run(quick: bool = True) -> None:
+    scale = 13 if quick else 17  # full: ~1M-edge R-MAT (paper-style skew)
+    k = 8
+    src, dst, n = rmat_graph(scale, edge_factor=8, seed=7)
+    src = np.asarray(src, np.int32)
+    dst = np.asarray(dst, np.int32)
+    cfg = S5PConfig(k=k, chunk_size=1 << 16, drift_rf_threshold=0.0,
+                    refine_rounds=16)
+    common.emit(f"incremental/graph/rmat{scale}", 0.0,
+                f"E={len(src)} V={n}")
+    for name in ("hdrf", "s5p"):
+        # one cold full re-run per partitioner — the shared baseline every
+        # delta fraction is compared against (it also warms the jit caches
+        # the warm path reuses, so the speedup column is not compile skew)
+        t_cold, rf_cold = _cold_run(name, src, dst, n, k, cfg)
+        for frac in ((0.10,) if quick else (0.01, 0.05, 0.10)):
+            _bench_one(name, src, dst, n, k, frac, cfg, t_cold, rf_cold)
+
+
+if __name__ == "__main__":
+    run(quick=True)

@@ -38,9 +38,18 @@ __all__ = [
     "GameResult",
     "init_assignment",
     "compute_delta",
+    "default_batch_size",
     "run_game",
     "best_response_gap",
 ]
+
+
+def default_batch_size(requested: int, n_clusters: int) -> int:
+    """Clamp a requested game batch to ≲ C/8 (floor 16): near-simultaneous
+    sweeps over a small player set cycle — the potential argument needs
+    mostly-sequential moves.  One policy shared by the cold pipeline and
+    the incremental settle/refine games so warm dynamics match cold."""
+    return max(16, min(int(requested), n_clusters // 8))
 
 
 class GameInputs(NamedTuple):
@@ -98,6 +107,40 @@ def _neighbor_partition_weight(inputs: GameInputs, assign: jax.Array, n_clusters
     return w[:n_clusters]
 
 
+def _batch_update(inputs, degs, assign, active, key, dk, inv_k, accept_prob,
+                  n_clusters):
+    """Best response for ``active`` clusters (one simultaneous batch).
+
+    Within a batch moves are simultaneous (the paper's batch parallelism).
+    Simultaneous moves can cycle — S(Λ) is an *exact potential* only for
+    unilateral deviations — so each improving move is accepted with
+    probability ``accept_prob`` (ε-damped best response, a.s. convergent
+    in potential games).  ``wanted`` tracks whether anyone had an
+    improving move at all: the equilibrium test.
+    """
+    sizes, k = inputs.sizes, inputs.k
+    w_ip = _neighbor_partition_weight(inputs, assign, n_clusters)  # (C, k)
+    part_sizes = jax.ops.segment_sum(sizes, assign, num_segments=k)  # (k,)
+    onehot = jax.nn.one_hot(assign, k, dtype=jnp.float32)
+    # hypothetical |p| if i moved to p: current size + s_i when p ≠ P_i
+    hyp = part_sizes[None, :] + sizes[:, None] * (1.0 - onehot)
+    cost = dk * sizes[:, None] * hyp + (degs[:, None] - w_ip + sizes[:, None]) * inv_k
+    # deterministic tie-breaking: the current partition wins cost ties
+    # (no churn between equal-cost strategies), remaining ties go to the
+    # lowest partition id — best responses are a pure function of state
+    cur = jnp.take_along_axis(cost, assign[:, None], axis=1)[:, 0]
+    strictly_better = jnp.min(cost, axis=1) < cur
+    best = jnp.where(
+        strictly_better, jnp.argmin(cost, axis=1).astype(jnp.int32), assign
+    )
+    improves = active & (best != assign) & strictly_better
+    lucky = jax.random.uniform(key, (n_clusters,)) < accept_prob
+    new_assign = jnp.where(improves & lucky, best, assign)
+    wanted = jnp.any(improves)
+    moved = jnp.any(new_assign != assign)
+    return new_assign, moved, wanted
+
+
 @partial(
     jax.jit,
     static_argnames=("n_clusters", "n_head", "k", "batch_size", "max_rounds"),
@@ -130,35 +173,8 @@ def _run_game_jit(
     key0 = jax.random.PRNGKey(seed)
 
     def batch_update(assign, active, key):
-        """Best response for ``active`` clusters.
-
-        Within a batch moves are simultaneous (the paper's batch
-        parallelism).  Simultaneous moves can cycle — S(Λ) is an *exact
-        potential* only for unilateral deviations — so each improving move
-        is accepted with probability ``accept_prob`` (ε-damped best
-        response, a.s. convergent in potential games).  ``wanted`` tracks
-        whether anyone had an improving move at all: the equilibrium test.
-        """
-        w_ip = _neighbor_partition_weight(inputs, assign, n_clusters)  # (C, k)
-        part_sizes = jax.ops.segment_sum(sizes, assign, num_segments=k)  # (k,)
-        onehot = jax.nn.one_hot(assign, k, dtype=jnp.float32)
-        # hypothetical |p| if i moved to p: current size + s_i when p ≠ P_i
-        hyp = part_sizes[None, :] + sizes[:, None] * (1.0 - onehot)
-        cost = dk * sizes[:, None] * hyp + (degs[:, None] - w_ip + sizes[:, None]) * inv_k
-        # deterministic tie-breaking: the current partition wins cost ties
-        # (no churn between equal-cost strategies), remaining ties go to the
-        # lowest partition id — best responses are a pure function of state
-        cur = jnp.take_along_axis(cost, assign[:, None], axis=1)[:, 0]
-        strictly_better = jnp.min(cost, axis=1) < cur
-        best = jnp.where(
-            strictly_better, jnp.argmin(cost, axis=1).astype(jnp.int32), assign
-        )
-        improves = active & (best != assign) & strictly_better
-        lucky = jax.random.uniform(key, (n_clusters,)) < accept_prob
-        new_assign = jnp.where(improves & lucky, best, assign)
-        wanted = jnp.any(improves)
-        moved = jnp.any(new_assign != assign)
-        return new_assign, moved, wanted
+        return _batch_update(inputs, degs, assign, active, key, dk, inv_k,
+                             accept_prob, n_clusters)
 
     def stage(assign, moved, wanted, key, role_mask, n_batches, offset):
         def body(b, carry):
@@ -195,6 +211,87 @@ def _run_game_jit(
     return assign, rounds, ~wanted
 
 
+@partial(
+    jax.jit,
+    static_argnames=("n_clusters", "k", "batch_size", "max_rounds"),
+)
+def _run_game_masked_jit(
+    sizes,
+    pair_a,
+    pair_b,
+    pair_w,
+    assign0,
+    delta,
+    accept_prob,
+    seed,
+    leader_mask,
+    move_mask,
+    batch_ids,
+    *,
+    n_clusters: int,
+    k: int,
+    batch_size: int,
+    max_rounds: int,
+):
+    """Masked best-response dynamics (incremental refinement path).
+
+    Identical move semantics to :func:`_run_game_jit` with two
+    generalizations the warm-start subsystem needs: leaders are named by
+    an explicit boolean mask (stable combined cluster ids interleave new
+    head/tail clusters, so the leader set is no longer a contiguous id
+    prefix), and only ``move_mask`` clusters may deviate (every other
+    player is frozen but still shapes costs) — the "refine only what the
+    delta touched" game.  ``batch_ids`` names the batch windows that hold
+    at least one movable cluster (precomputed on host): a refinement over
+    a handful of touched clusters pays for those batches only, not a full
+    sweep — frozen-only batches are provably no-ops.
+    """
+    inputs = GameInputs(sizes, pair_a, pair_b, pair_w, 0, k)
+    degs = _cluster_degrees(inputs, n_clusters)
+    cid = jnp.arange(n_clusters, dtype=jnp.int32)
+    n_batches = batch_ids.shape[0]
+    inv_k = 1.0 / k
+    dk = delta * inv_k
+    key0 = jax.random.PRNGKey(seed)
+
+    def stage(assign, moved, wanted, key, role_mask):
+        def body(b, carry):
+            assign, moved, wanted = carry
+            bid = batch_ids[b]
+            lo = bid * batch_size
+            in_batch = (cid >= lo) & (cid < lo + batch_size) & role_mask
+            # fold in the window id (not the loop index) so a window's
+            # acceptance draws don't depend on which other windows ran
+            assign, m, w = _batch_update(
+                inputs, degs, assign, in_batch, jax.random.fold_in(key, bid),
+                dk, inv_k, accept_prob, n_clusters)
+            return assign, moved | m, wanted | w
+
+        return jax.lax.fori_loop(0, n_batches, body, (assign, moved, wanted))
+
+    def round_body(state):
+        assign, _, rounds = state
+        moved = jnp.bool_(False)
+        wanted = jnp.bool_(False)
+        key = jax.random.fold_in(key0, rounds)
+        k1, k2 = jax.random.split(key)
+        assign, moved, wanted = stage(assign, moved, wanted, k1,
+                                      leader_mask & move_mask)
+        assign, moved, wanted = stage(assign, moved, wanted, k2,
+                                      (~leader_mask) & move_mask)
+        return assign, wanted, rounds + 1
+
+    def cond(state):
+        _, wanted, rounds = state
+        return wanted & (rounds < max_rounds)
+
+    assign, wanted, rounds = round_body((assign0, jnp.bool_(True), jnp.int32(0)))
+    assign, wanted, rounds = jax.lax.while_loop(
+        cond, lambda s: round_body(s), (assign, wanted, rounds)
+    )
+    return assign, rounds, ~wanted
+
+
 def run_game(
     inputs: GameInputs,
     n_clusters: int,
@@ -205,14 +302,50 @@ def run_game(
     assign0: np.ndarray | None = None,
     delta: float | None = None,
     seed: int = 0,
+    leader_mask: np.ndarray | None = None,
+    move_mask: np.ndarray | None = None,
 ) -> GameResult:
-    """Run (damped) best-response dynamics to a pure Nash equilibrium."""
+    """Run (damped) best-response dynamics to a pure Nash equilibrium.
+
+    ``leader_mask``/``move_mask`` select the masked refinement path: an
+    explicit (C,) leader set replaces the contiguous ``[0, n_head)``
+    convention, and only ``move_mask`` players may deviate (all others are
+    frozen context).  With both ``None`` the original full game runs —
+    bit-identical to before the masks existed.
+    """
     if assign0 is None:
         assign0 = init_assignment(np.asarray(inputs.sizes), inputs.k)
     degs = _cluster_degrees(inputs, n_clusters)
     if delta is None:
         delta = compute_delta(inputs.sizes, degs, inputs.k)
-    assign, rounds, converged = _run_game_jit(
+    if leader_mask is None and move_mask is None:
+        assign, rounds, converged = _run_game_jit(
+            inputs.sizes,
+            inputs.pair_a,
+            inputs.pair_b,
+            inputs.pair_w,
+            jnp.asarray(assign0, jnp.int32),
+            jnp.asarray(delta, jnp.float32),
+            jnp.float32(accept_prob),
+            seed,
+            n_clusters=n_clusters,
+            n_head=inputs.n_head,
+            k=inputs.k,
+            batch_size=batch_size,
+            max_rounds=max_rounds,
+        )
+        return GameResult(assignment=assign, rounds=rounds, converged=converged)
+    if leader_mask is None:
+        leader_mask = np.arange(n_clusters) < inputs.n_head
+    if move_mask is None:
+        move_mask = np.ones((n_clusters,), bool)
+    # only batch windows holding a movable cluster are worth visiting
+    batch_ids = np.unique(
+        np.nonzero(np.asarray(move_mask))[0] // batch_size).astype(np.int32)
+    if batch_ids.size == 0:  # every player frozen: a no-op equilibrium
+        return GameResult(assignment=jnp.asarray(assign0, jnp.int32),
+                          rounds=jnp.int32(0), converged=jnp.bool_(True))
+    assign, rounds, converged = _run_game_masked_jit(
         inputs.sizes,
         inputs.pair_a,
         inputs.pair_b,
@@ -221,8 +354,10 @@ def run_game(
         jnp.asarray(delta, jnp.float32),
         jnp.float32(accept_prob),
         seed,
+        jnp.asarray(leader_mask, bool),
+        jnp.asarray(move_mask, bool),
+        jnp.asarray(batch_ids),
         n_clusters=n_clusters,
-        n_head=inputs.n_head,
         k=inputs.k,
         batch_size=batch_size,
         max_rounds=max_rounds,

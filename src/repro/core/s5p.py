@@ -57,6 +57,12 @@ class S5PConfig:
     # carry all-reduced every super_chunk chunks; 1 = sequential (exact)
     num_streams: int = 1
     super_chunk: int = 8
+    # incremental re-partitioning (repro.incremental): relative RF /
+    # absolute balance drift past which a delta triggers game refinement,
+    # and the refinement budget in Stackelberg rounds (0 disables)
+    drift_rf_threshold: float = 0.05
+    drift_balance_threshold: float = 0.10
+    refine_rounds: int = 16
 
 
 @dataclasses.dataclass
@@ -170,6 +176,7 @@ def cluster_statistics(
         pw = cms_query(sketch, pair_key(jnp.asarray(pa), jnp.asarray(pb))).astype(jnp.float32)
         sketch_mem = sketch.memory_bytes()
     else:
+        sketch = None
         pw = jnp.asarray(counts, jnp.float32)
 
     exact_mem = int(uniq.size) * (8 + 4)  # RBT-equivalent: key + count per pair
@@ -178,6 +185,7 @@ def cluster_statistics(
         "sketch_bytes": sketch_mem,
         "exact_count_bytes": exact_mem,
         "counts_exact": counts,
+        "sketch": sketch,
     }
 
 
@@ -232,9 +240,7 @@ def s5p_partition(src, dst, n_vertices: int, config: S5PConfig,
         sizes=sizes.astype(jnp.float32), pair_a=pa, pair_b=pb,
         pair_w=pw.astype(jnp.float32), n_head=n_head, k=k,
     )
-    # batch ≲ C/8: near-simultaneous sweeps over a small player set cycle
-    # (the potential argument needs mostly-sequential moves)
-    bs = max(16, min(config.game_batch_size, res.n_clusters // 8))
+    bs = _game.default_batch_size(config.game_batch_size, res.n_clusters)
     game = _game.run_game(
         inputs, res.n_clusters,
         batch_size=bs, max_rounds=config.game_max_rounds,
@@ -252,6 +258,20 @@ def s5p_partition(src, dst, n_vertices: int, config: S5PConfig,
         num_streams=config.num_streams, super_chunk=config.super_chunk,
     )
     timings["postprocess"] = time.perf_counter() - t0
+
+    # pipeline internals for warm starts (repro.incremental builds its
+    # carry bundle from these instead of re-deriving them): O(|V| + C + P
+    # + k) state, no per-edge arrays beyond what parts already is
+    stats["incremental"] = {
+        "cluster_state": state,
+        "degrees": degrees,
+        "compact": res,
+        "sizes": sizes,
+        "pair_a": pa,
+        "pair_b": pb,
+        "pair_w": pw,
+        "load": load,
+    }
 
     return S5POutput(
         parts=parts,

@@ -1,0 +1,103 @@
+"""Incremental re-partitioning: carry checkpoints, delta streams, drift-
+triggered game refinement.
+
+The paper's S5P is a one-shot streaming partitioner; real deployments see
+graphs that keep growing.  Le Merrer & Trédan ("(Re)partitioning for
+stream-enabled computation") observed that replaying only the *new* edges
+against retained partitioner state recovers most of the quality of a full
+re-run at a fraction of its cost — and PR 3's
+:class:`~repro.streaming.carry.PartitionerCarry` protocol is exactly the
+retained state this needs: a warm-start replay is ``run_carry`` (or
+``run_parallel``) seeded with a previous carry instead of ``init()``.
+
+Why carry-merge semantics make warm starts sound
+------------------------------------------------
+Every consumer's carry declares per-field merge ops (SUM / OR / MAX /
+REPLICATED), and those same laws govern incremental replay:
+
+- **SUM fields** (degrees, loads, cluster volumes, HDRF partial degrees,
+  Θ count-min tables) are linear: state(prefix + delta) = state(prefix) +
+  state(delta).  Folding the delta onto the restored carry *is* that sum.
+- **OR fields** (replica bitmaps) are monotone unions — new edges only add
+  replicas, so the restored bitmap is a correct lower set to grow from.
+- **MAX fields** (assignment tables, id counters) are monotone
+  resolutions: ``-1`` = unassigned loses to any assignment, and counters
+  only advance — a restored table never un-assigns.
+- **REPLICATED fields** (λ, grid hash tables, the k-mask) are scenario
+  constants; the config fingerprint in the
+  :class:`~repro.incremental.store.CarryStore` guarantees they match.
+
+Exactly vs approximately incremental
+------------------------------------
+Sequential folding is function composition, so
+``fold(fold(init, prefix), delta) == fold(init, prefix + delta)``
+**bit-identically** whenever (a) the step closure is held fixed and (b)
+chunk-padding self-loops are true no-ops.  Concretely:
+
+- **exact**: the degree precompute, the Θ sketch pass, Alg. 1 clustering
+  (under frozen degrees/ξ/κ), greedy and grid scans, and Alg. 3 placement
+  (under a frozen cluster→partition map and capacity) — all of these mask
+  ``(0, 0)`` padding entirely;
+- **approximate**: HDRF (its partial-degree estimates count padding
+  self-loops at chunk seams, exactly as a cold run's own tail padding
+  does — the divergence is bounded by one vertex-0 count per seam), and
+  the *pipeline-level* S5P warm start, where ξ/κ freeze at base-run
+  values, old edges keep their placement and size/Θ attributions while
+  the graph grows, and the CMS stays sized for the base cluster count.
+
+The pipeline approximations are the price of not replaying the prefix;
+their cumulative quality decay is what :class:`~repro.incremental.drift.
+DriftMonitor` tracks, and a drift past threshold triggers a **bounded
+masked Stackelberg game** (``core.game`` with ``leader_mask``/
+``move_mask``) over only the clusters the deltas touched, followed by
+re-placement of only the moved clusters' edges — the per-edge cluster
+tags in the bundle make those edges addressable without a stream replay.
+
+Pieces
+------
+- :class:`CarryStore` — atomic npz+CRC persistence of any carry with
+  consumer/config/stream-position validation and keep-N GC;
+- :class:`DeltaStream` / :func:`run_incremental_carry` /
+  :func:`grow_carry` — an insertion batch as a standard EdgeStream,
+  warm-start drivers, vertex-set growth;
+- :class:`DriftMonitor` — the refinement trigger;
+- :mod:`pipeline` — the S5P bundle (build + delta application);
+- :mod:`driver` — ``cold_start`` / ``run_incremental`` over scan
+  partitioners and the S5P pipeline (the CLI's ``--save-carry`` /
+  ``--resume-carry`` / ``--delta`` backend).
+"""
+
+from .delta import DeltaStream, grow_carry, run_incremental_carry  # noqa: F401
+from .drift import DriftDecision, DriftMonitor  # noqa: F401
+from .driver import (  # noqa: F401
+    INCREMENTAL_PARTITIONERS,
+    SCAN_PARTITIONERS,
+    cold_start,
+    run_incremental,
+)
+from .pipeline import (  # noqa: F401
+    IncrementalResult,
+    s5p_apply_delta,
+    s5p_cold_bundle,
+    s5p_identity_config,
+)
+from .store import CarryMismatchError, CarryStore, config_fingerprint  # noqa: F401
+
+__all__ = [
+    "CarryStore",
+    "CarryMismatchError",
+    "config_fingerprint",
+    "DeltaStream",
+    "run_incremental_carry",
+    "grow_carry",
+    "DriftMonitor",
+    "DriftDecision",
+    "IncrementalResult",
+    "s5p_cold_bundle",
+    "s5p_apply_delta",
+    "s5p_identity_config",
+    "cold_start",
+    "run_incremental",
+    "SCAN_PARTITIONERS",
+    "INCREMENTAL_PARTITIONERS",
+]

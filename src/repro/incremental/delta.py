@@ -1,0 +1,132 @@
+"""Delta ingestion: replay only the new edges against a restored carry.
+
+A warm-start replay is pure function composition: every streaming consumer
+folds its carry edge-by-edge, so ``fold(fold(init, prefix), delta) ==
+fold(init, prefix + delta)`` whenever the step closure (degrees, ξ, κ, λ,
+grid tables, c2p) is held fixed and padding self-loops are no-ops.
+:class:`DeltaStream` wraps an insertion batch as a standard
+:class:`~repro.streaming.stream.EdgeStream` (so orderings, chunking,
+parallel ingest and the out-of-core machinery all apply unchanged), and
+:func:`run_incremental_carry` drives any PartitionerCarry over it from a
+saved carry instead of ``init()``.
+
+Vertex-set growth: an insertion batch may name vertices the base run never
+saw.  :func:`grow_carry` widens a consumer's carry to a larger vertex
+count — new rows are the identity (unassigned ``-1`` tables, ``False``
+bitmap rows, zero volumes/degrees), so growth commutes with folding and
+costs nothing semantically.  Replicated per-vertex tables (the grid
+row/col hashes) are recomputed; the per-vertex hash is independent, so the
+old prefix is reproduced bit-identically.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+
+from ..streaming import EdgeStream, run_carry, run_parallel
+from ..streaming.stream import DEFAULT_CHUNK
+
+__all__ = ["DeltaStream", "run_incremental_carry", "grow_carry"]
+
+
+class DeltaStream(EdgeStream):
+    """An insertion batch as a standard EdgeStream.
+
+    ``base_offset`` records where the batch sits in the logical full
+    stream (the number of edges ingested before it) — provenance a
+    caller can read back instead of threading the split point alongside
+    the stream.  Default ordering is ``natural`` — insertion order is
+    the stream order of a dynamic graph.
+    """
+
+    def __init__(self, src, dst, n_vertices: int | None = None, *,
+                 base_offset: int = 0, chunk_size: int = DEFAULT_CHUNK,
+                 ordering: str = "natural", seed: int = 0,
+                 window: int = 4096):
+        if base_offset < 0:
+            raise ValueError("base_offset must be >= 0")
+        super().__init__(src, dst, n_vertices, chunk_size=chunk_size,
+                         ordering=ordering, seed=seed, window=window)
+        self.base_offset = int(base_offset)
+
+
+def run_incremental_carry(stream, pc, *extras, carry, num_streams: int = 1,
+                          super_chunk: int = 8):
+    """Drive ``pc`` over ``stream`` seeded with a restored ``carry``.
+
+    Same return contract as :func:`~repro.streaming.engine.run_carry`:
+    ``(delta_parts | None, pc.finalize(final_carry))``.  ``num_streams >
+    1`` shards the delta through :func:`~repro.streaming.run_parallel`
+    with the restored carry as the merge base.
+    """
+    if num_streams > 1:
+        return run_parallel(stream, pc, *extras, num_streams=num_streams,
+                            super_chunk=super_chunk, carry=carry)
+    return run_carry(stream, pc, *extras, carry=carry)
+
+
+# ---------------------------------------------------------------------------
+# vertex-set growth
+# ---------------------------------------------------------------------------
+
+
+def _pad_rows(arr, n_new: int, fill):
+    arr = np.asarray(arr)
+    if n_new <= arr.shape[0]:
+        return arr
+    pad = np.full((n_new - arr.shape[0],) + arr.shape[1:], fill, arr.dtype)
+    return np.concatenate([arr, pad])
+
+
+def grow_carry(consumer: str, carry, n_old: int, n_new: int, *,
+               k: int | None = None, seed: int = 0):
+    """Widen a consumer's carry from ``n_old`` to ``n_new`` vertices.
+
+    Identity extension per field class: assignment tables pad with ``-1``,
+    replica bitmaps with ``False``, volumes/degrees with ``0``; O(k) and
+    scalar fields pass through.  ``consumer`` ∈ {greedy, hdrf, grid,
+    cluster, degree, sketch, assign} — the repo's streaming consumers.
+    """
+    if n_new < n_old:
+        raise ValueError(f"cannot shrink a carry ({n_new} < {n_old})")
+    if n_new == n_old:
+        return carry
+    if consumer == "degree":
+        return jnp.asarray(_pad_rows(carry, n_new, 0))
+    if consumer == "greedy":
+        load, rep = carry
+        return (load, jnp.asarray(_pad_rows(rep, n_new, False)))
+    if consumer == "hdrf":
+        load, rep, pd, lam, kmask = carry
+        return (load, jnp.asarray(_pad_rows(rep, n_new, False)),
+                jnp.asarray(_pad_rows(pd, n_new, 0)), lam, kmask)
+    if consumer == "grid":
+        from ..core.baselines import _grid_dims, _grid_rowcol
+
+        load = carry[0]
+        if k is None:
+            k = int(np.asarray(load).shape[0])
+        _, c = _grid_dims(k)
+        row, col = _grid_rowcol(n_new, k, c, seed)
+        return (load, row, col, carry[3])
+    if consumer == "cluster":
+        from ..core.clustering import ClusterState
+
+        st = carry
+        # vol arrays are cluster-indexed with a trailing masked-write sink
+        # slot that provably stays 0 (masked adds write +0) — growing keeps
+        # the old sink slot as a regular (zero) cluster slot and appends a
+        # fresh sink.
+        return ClusterState(
+            v2c_h=jnp.asarray(_pad_rows(st.v2c_h, n_new, -1)),
+            v2c_t=jnp.asarray(_pad_rows(st.v2c_t, n_new, -1)),
+            vol_h=jnp.asarray(_pad_rows(st.vol_h, n_new + 1, 0)),
+            vol_t=jnp.asarray(_pad_rows(st.vol_t, n_new + 1, 0)),
+            ld=jnp.asarray(_pad_rows(st.ld, n_new, 0)),
+            next_h=st.next_h,
+            next_t=st.next_t,
+        )
+    if consumer in ("sketch", "assign"):
+        return carry  # no per-vertex state
+    raise ValueError(f"unknown consumer {consumer!r}")

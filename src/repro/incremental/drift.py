@@ -1,0 +1,62 @@
+"""Drift monitoring: decide when a delta has degraded quality enough to
+spend a refinement game on it.
+
+The monitor tracks replication factor and balance against a *baseline*
+(the last full run or the last refinement point).  Quality decays
+monotonically-ish under pure warm-start replay — old edges keep their
+placement while the graph underneath them changes — so the signal is a
+simple relative drift:
+
+    rf_drift      = (rf_now − rf_baseline) / rf_baseline
+    balance_drift = balance_now − balance_baseline
+
+Refinement triggers when either exceeds its threshold.  The baseline (and
+the touched-cluster set that scopes the refinement game) resets after a
+refinement, so repeated small deltas accumulate toward a trigger instead
+of each hiding under the threshold — the Le Merrer & Trédan observation
+that replay quality decays with *cumulative* insertion volume, not per
+batch.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+__all__ = ["DriftMonitor", "DriftDecision"]
+
+
+class DriftDecision(NamedTuple):
+    refine: bool
+    rf_drift: float
+    balance_drift: float
+
+
+class DriftMonitor:
+    """Threshold trigger over (RF, balance) drift since the last baseline.
+
+    ``rf_threshold <= 0`` makes every delta trigger (useful for forcing
+    refinement in tests/benchmarks); ``float("inf")`` disables it.
+    """
+
+    def __init__(self, baseline_rf: float, baseline_balance: float, *,
+                 rf_threshold: float = 0.05,
+                 balance_threshold: float = 0.10):
+        self.baseline_rf = float(baseline_rf)
+        self.baseline_balance = float(baseline_balance)
+        self.rf_threshold = float(rf_threshold)
+        self.balance_threshold = float(balance_threshold)
+
+    def check(self, rf: float, balance: float) -> DriftDecision:
+        rf_drift = (rf - self.baseline_rf) / max(self.baseline_rf, 1e-12)
+        bal_drift = balance - self.baseline_balance
+        # threshold <= 0 is the unconditional trigger even when drift is
+        # negative (RF can *drop* when a delta adds many fresh vertices)
+        refine = (self.rf_threshold <= 0
+                  or rf_drift >= self.rf_threshold
+                  or bal_drift >= self.balance_threshold)
+        return DriftDecision(bool(refine), float(rf_drift), float(bal_drift))
+
+    def rebase(self, rf: float, balance: float) -> None:
+        """Reset the baseline (after a refinement or a full re-run)."""
+        self.baseline_rf = float(rf)
+        self.baseline_balance = float(balance)

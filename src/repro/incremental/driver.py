@@ -1,0 +1,228 @@
+"""Top-level incremental driver: cold start → CarryStore → warm replays.
+
+Two bundle flavors behind one ``save``/``resume`` surface:
+
+- **scan partitioners** (greedy / hdrf / grid) — the bundle is the scoring
+  carry plus the per-edge parts; a delta replay is one
+  :func:`~repro.incremental.delta.run_incremental_carry` fold (greedy and
+  grid compose exactly; HDRF approximately — tail-chunk padding feeds its
+  partial-degree estimates, see ``repro.incremental`` docs);
+- **s5p** — the full pipeline bundle of
+  :mod:`~repro.incremental.pipeline`, with drift-triggered masked-game
+  refinement.
+
+``cold_start`` runs the partitioner from scratch and persists the bundle;
+``run_incremental`` restores the latest bundle (validated by consumer
+name + config fingerprint + stream position), replays only the suffix the
+store has not seen, and optionally persists the grown bundle.
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import numpy as np
+
+from ..checkpoint.manager import _flatten_with_paths
+from ..core.metrics import load_balance, replication_factor
+from ..core.s5p import S5PConfig
+from ..kernels import stream_scan as _scan
+from .delta import DeltaStream, grow_carry, run_incremental_carry
+from .pipeline import (
+    IncrementalResult,
+    s5p_apply_delta,
+    s5p_cold_bundle,
+    s5p_identity_config,
+)
+from .store import CarryStore
+
+__all__ = ["SCAN_PARTITIONERS", "cold_start", "run_incremental"]
+
+SCAN_PARTITIONERS = ("greedy", "hdrf", "grid")
+INCREMENTAL_PARTITIONERS = SCAN_PARTITIONERS + ("s5p",)
+
+
+def _scan_carry(name: str, n_vertices: int, k: int, seed: int,
+                lam: float = 1.1):
+    if name == "greedy":
+        return _scan.GreedyCarry(n_vertices, k)
+    if name == "hdrf":
+        return _scan.HdrfCarry(n_vertices, k, lam)
+    if name == "grid":
+        from ..core.baselines import _grid_dims, _grid_rowcol
+
+        _, c = _grid_dims(k)
+        row, col = _grid_rowcol(n_vertices, k, c, seed)
+        return _scan.GridCarry(k, row, col, c)
+    raise ValueError(f"{name!r} is not a scan partitioner")
+
+
+def _scan_identity_config(name: str, k: int, seed: int,
+                          lam: float = 1.1) -> dict:
+    cfg: dict[str, Any] = {"partitioner": name, "k": k, "seed": seed}
+    if name == "hdrf":
+        cfg["lam"] = lam
+    return cfg
+
+
+def _metrics(src, dst, parts, n, k):
+    return (float(replication_factor(src, dst, parts, n_vertices=n, k=k)),
+            float(load_balance(parts, k=k)))
+
+
+def _prefix_crc(src, dst, n_edges: int) -> int:
+    """CRC32 of the first ``n_edges`` edges — the stream-identity check
+    that catches a *longer* foreign stream (config + position alone would
+    happily replay an unrelated graph's suffix against the carry)."""
+    import zlib
+
+    crc = zlib.crc32(np.ascontiguousarray(src[:n_edges], np.int32).tobytes())
+    return zlib.crc32(
+        np.ascontiguousarray(dst[:n_edges], np.int32).tobytes(), crc)
+
+
+def _check_prefix(meta, full_src, full_dst):
+    want = meta.get("prefix_crc")
+    if want is None:
+        return
+    got = _prefix_crc(full_src, full_dst, int(meta["stream_pos"]))
+    if got != want:
+        from .store import CarryMismatchError
+
+        raise CarryMismatchError(
+            f"the current stream's first {meta['stream_pos']} edges do not "
+            "match the edges this carry was built on (foreign stream)")
+
+
+def cold_start(store_dir, partitioner: str, src, dst, n_vertices: int,
+               k: int, *, seed: int = 0, chunk_size: int = 1 << 16,
+               s5p_config: S5PConfig | None = None, stream=None,
+               num_streams: int = 1, super_chunk: int = 8,
+               keep: int = 3):
+    """Run ``partitioner`` from scratch and persist its warm-start bundle.
+
+    Returns ``(parts, store_path)``.
+    """
+    if partitioner not in INCREMENTAL_PARTITIONERS:
+        raise ValueError(
+            f"partitioner {partitioner!r} has no incremental bundle; one of "
+            f"{INCREMENTAL_PARTITIONERS}")
+    store = CarryStore(store_dir, keep=keep)
+    src = np.asarray(src, np.int32)
+    dst = np.asarray(dst, np.int32)
+    E = int(src.shape[0])
+    if partitioner == "s5p":
+        config = s5p_config if s5p_config is not None else S5PConfig(
+            k=k, seed=seed, chunk_size=chunk_size)
+        out, bundle = s5p_cold_bundle(src, dst, n_vertices, config,
+                                      stream=stream)
+        store.save(bundle, consumer="s5p", config=s5p_identity_config(config),
+                   stream_pos=E,
+                   extra_meta={"n_vertices": int(n_vertices),
+                               "prefix_crc": _prefix_crc(src, dst, E)})
+        return np.asarray(out.parts), store.directory
+    pc = _scan_carry(partitioner, n_vertices, k, seed)
+    from ..streaming import as_stream, run_parallel
+
+    st = as_stream(src, dst, n_vertices, stream=stream,
+                   chunk_size=chunk_size)
+    parts, carry = run_parallel(st, pc, num_streams=num_streams,
+                                super_chunk=super_chunk)
+    parts = np.asarray(parts, np.int32)
+    store.save({"scan": carry, "parts": parts}, consumer=partitioner,
+               config=_scan_identity_config(partitioner, k, seed),
+               stream_pos=E,
+               extra_meta={"n_vertices": int(n_vertices),
+                           "prefix_crc": _prefix_crc(src, dst, E)})
+    return parts, store.directory
+
+
+def run_incremental(store_dir, partitioner: str, full_src, full_dst,
+                    n_vertices: int, k: int, *, seed: int = 0,
+                    chunk_size: int = 1 << 16,
+                    s5p_config: S5PConfig | None = None,
+                    num_streams: int = 1, super_chunk: int = 8,
+                    save: bool = True, save_dir=None,
+                    keep: int = 3) -> IncrementalResult:
+    """Warm-start ``partitioner`` on the suffix the store has not seen.
+
+    ``full_src``/``full_dst`` are the **whole** stream in arrival order;
+    the delta is everything past the persisted bundle's stream position.
+    The restored bundle is validated (consumer, config fingerprint, stream
+    position) — any mismatch raises
+    :class:`~repro.incremental.store.CarryMismatchError` instead of
+    silently replaying against foreign state.  The grown bundle is saved
+    back to ``save_dir`` (default: the same store) unless ``save=False``.
+    """
+    if partitioner not in INCREMENTAL_PARTITIONERS:
+        raise ValueError(
+            f"partitioner {partitioner!r} has no incremental bundle; one of "
+            f"{INCREMENTAL_PARTITIONERS}")
+    load_store = CarryStore(store_dir, keep=keep)
+    store = (load_store if save_dir is None
+             else CarryStore(save_dir, keep=keep))
+    full_src = np.asarray(full_src, np.int32)
+    full_dst = np.asarray(full_dst, np.int32)
+    E_total = int(full_src.shape[0])
+    if partitioner == "s5p":
+        config = s5p_config if s5p_config is not None else S5PConfig(
+            k=k, seed=seed, chunk_size=chunk_size)
+        bundle, meta = load_store.load(consumer="s5p",
+                                  config=s5p_identity_config(config),
+                                  max_stream_pos=E_total)
+        _check_prefix(meta, full_src, full_dst)
+        bundle, result = s5p_apply_delta(bundle, config, full_src, full_dst,
+                                         meta["stream_pos"])
+        if save:
+            store.save(bundle, consumer="s5p",
+                       config=s5p_identity_config(config),
+                       stream_pos=E_total,
+                       extra_meta={"n_vertices": int(
+                           bundle["degrees"].shape[0]),
+                           "prefix_crc": _prefix_crc(full_src, full_dst,
+                                                     E_total)})
+        return result
+
+    config = _scan_identity_config(partitioner, k, seed)
+    flat, meta = load_store.load(consumer=partitioner, config=config,
+                            max_stream_pos=E_total)
+    _check_prefix(meta, full_src, full_dst)
+    E0 = int(meta["stream_pos"])
+    n_old = int(meta.get("n_vertices", n_vertices))
+    prefix_parts = np.asarray(flat.pop("parts"), np.int32)
+    # reassemble the scoring carry from its path-keyed leaves (the same
+    # path-string scheme the checkpoint manager saved them under)
+    proto = _scan_carry(partitioner, n_old, k, seed).init()
+    keys = [key for key, _ in _flatten_with_paths({"scan": proto})]
+    carry = jax.tree_util.tree_unflatten(
+        jax.tree_util.tree_structure(proto), [flat[key] for key in keys])
+    dsrc = full_src[E0:]
+    ddst = full_dst[E0:]
+    E_delta = E_total - E0
+    n_new = n_vertices
+    if E_delta:
+        n_new = max(n_old, int(max(dsrc.max(), ddst.max())) + 1, n_vertices)
+    carry = grow_carry(partitioner, carry, n_old, n_new, k=k, seed=seed)
+    parts = prefix_parts
+    if E_delta:
+        pc = _scan_carry(partitioner, n_new, k, seed)
+        stream = DeltaStream(dsrc, ddst, n_new, base_offset=E0,
+                             chunk_size=chunk_size)
+        delta_parts, carry = run_incremental_carry(
+            stream, pc, carry=carry, num_streams=num_streams,
+            super_chunk=super_chunk)
+        parts = np.concatenate([prefix_parts,
+                                np.asarray(delta_parts, np.int32)])
+    rf, bal = _metrics(full_src, full_dst, parts, n_new, k)
+    if save:
+        store.save({"scan": carry, "parts": parts}, consumer=partitioner,
+                   config=config, stream_pos=E_total,
+                   extra_meta={"n_vertices": int(n_new),
+                               "prefix_crc": _prefix_crc(full_src, full_dst,
+                                                         E_total)})
+    return IncrementalResult(
+        parts=parts, rf=rf, balance=bal, refined=False, rf_drift=0.0,
+        balance_drift=0.0, edges_replayed=E_delta,
+        full_replay_cost=E_total, game_rounds=0, n_new_clusters=0,
+        n_delta_edges=E_delta)

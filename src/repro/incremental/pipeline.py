@@ -1,0 +1,497 @@
+"""Warm-start S5P: the full pipeline as an incrementally-maintained bundle.
+
+The cold run's aux internals (``S5POutput.aux["incremental"]``) are packed
+into a flat **carry bundle** — every piece of state the three passes of
+Fig. 2 would otherwise recompute from scratch:
+
+======================  =====================================================
+``degrees``             global degree table (exactly incremental: SUM)
+``v2c_h/v2c_t/...``     raw Algorithm-1 :class:`ClusterState` (sequential
+                        fold — composition-exact under frozen ξ/κ)
+``raw2comb_h/_t``       raw → **stable combined** cluster ids.  Unlike
+                        ``compact_clusters`` (which renumbers from scratch
+                        and would shift every tail id when a head cluster
+                        appears), new clusters append at the end — so the
+                        pair list, c2p and per-edge cluster tags stay valid
+                        across deltas.
+``comb_is_head``        leader set per combined id (the masked game's
+                        ``leader_mask`` — new head clusters are leaders too,
+                        even though their ids sit past the old tail block)
+``sizes/pair_*``        cluster sizes + Θ adjacency in combined ids
+``theta_table/seeds``   the CMS (linear ⇒ delta updates are exact)
+``c2p/load/parts``      game assignment, Alg.-3 load vector, per-edge parts
+``edge_cu/cv/head``     per-edge cluster tags — what lets refinement find
+                        the edges of a moved cluster *without* replaying
+                        the stream
+``touched``             clusters touched since the last refinement baseline
+======================  =====================================================
+
+Exact vs approximate (the warm-start semantics):
+
+- **exact** — degrees, the Θ sketch, the Alg.-1 fold itself, and Alg.-3
+  placement of the delta (composition: fold(prefix→carry, delta) ==
+  fold(prefix+delta) under the frozen closure);
+- **approximate** — ξ/κ/``max_load`` freeze at base-run values (ξ, κ) or
+  recompute from the grown |E| (``max_load``), old edges keep their
+  placement and their size/Θ attributions even when their vertices migrate
+  during the replay, and CMS width stays sized for the base cluster count.
+  This is precisely the quality decay the drift monitor watches; past the
+  threshold a **bounded masked Stackelberg game** re-settles only the
+  touched clusters and re-places only the moved clusters' edges.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import NamedTuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from ..core import clustering as _cl
+from ..core import game as _game
+from ..core.cms import CMSketch, cms_query, cms_update, pair_key
+from ..core.metrics import load_balance, replication_factor
+from ..core.postprocess import AssignCarry
+from ..core.s5p import S5PConfig, S5POutput, s5p_partition
+from ..streaming import EdgeStream, run_carry
+from .delta import DeltaStream, grow_carry, run_incremental_carry
+from .drift import DriftMonitor
+
+__all__ = ["IncrementalResult", "s5p_identity_config", "s5p_cold_bundle",
+           "s5p_apply_delta"]
+
+_INT32_MAX = 2**31 - 1
+
+
+class IncrementalResult(NamedTuple):
+    """What one delta application did (and what it would have cost cold)."""
+
+    parts: np.ndarray  # (E_total,) int32 — full assignment after the delta
+    rf: float
+    balance: float
+    refined: bool
+    rf_drift: float
+    balance_drift: float
+    edges_replayed: int  # consumer-fold records processed by the warm path
+    full_replay_cost: int  # the cold re-run's fold count (4 passes × E)
+    game_rounds: int  # settlement + refinement rounds spent
+    n_new_clusters: int
+    n_delta_edges: int
+
+    @property
+    def replay_fraction(self) -> float:
+        return self.edges_replayed / max(self.full_replay_cost, 1)
+
+
+def s5p_identity_config(config: S5PConfig) -> dict:
+    """The config fields a carry must agree on to seed a warm start.
+
+    Execution knobs (chunk_size, num_streams, game batching, drift
+    thresholds) are deliberately excluded — they change how a replay runs,
+    not what state means.
+    """
+    return {
+        "k": config.k, "tau": config.tau, "beta": config.beta,
+        "use_cms": config.use_cms, "cms_epsilon": config.cms_epsilon,
+        "cms_nu": config.cms_nu, "bounded": config.bounded,
+        "one_stage": config.one_stage, "seed": config.seed,
+        "ordering": config.ordering,
+    }
+
+
+# ---------------------------------------------------------------------------
+# cold start → bundle
+# ---------------------------------------------------------------------------
+
+
+def _raw_to_comb(raw_table: np.ndarray, comb_table: np.ndarray,
+                 n_raw: int) -> np.ndarray:
+    """Reconstruct the raw→combined id map from the two per-vertex tables
+    (``compact_clusters`` applies it consistently, so a scatter recovers it)."""
+    out = np.full(max(n_raw, 1), -1, np.int32)
+    mask = raw_table >= 0
+    out[raw_table[mask]] = comb_table[mask]
+    return out
+
+
+def s5p_cold_bundle(src, dst, n_vertices: int, config: S5PConfig, *,
+                    stream=None) -> tuple[S5POutput, dict]:
+    """Run S5P cold and pack the warm-start bundle from its internals."""
+    out = s5p_partition(src, dst, n_vertices, config, stream=stream)
+    src = np.asarray(src, np.int32)
+    dst = np.asarray(dst, np.int32)
+    internals = out.aux.get("incremental")
+    if internals is None:  # degenerate no-valid-edge graphs skip the passes
+        raise ValueError("cold run produced no pipeline state to carry "
+                         "(no valid edges)")
+    state: _cl.ClusterState = internals["cluster_state"]
+    res: _cl.ClusterResult = internals["compact"]
+    degrees = np.asarray(internals["degrees"], np.int32)
+    sketch = out.aux.get("sketch")
+
+    v2c_h = np.asarray(state.v2c_h)
+    v2c_t = np.asarray(state.v2c_t)
+    raw2comb_h = _raw_to_comb(v2c_h, np.asarray(res.v2c_h), int(state.next_h))
+    raw2comb_t = _raw_to_comb(v2c_t, np.asarray(res.v2c_t), int(state.next_t))
+    C = res.n_clusters
+    # one_stage (Fig. 7d ablation) makes every cluster a leader in the
+    # cold game; the warm settle/refine games must keep that semantics
+    comb_is_head = (np.ones(C, bool) if config.one_stage
+                    else np.arange(C) < res.n_head)
+
+    parts = np.asarray(out.parts, np.int32)
+    is_head_e = (degrees[src] > out.xi) & (degrees[dst] > out.xi)
+    e_cu = np.where(is_head_e, np.asarray(res.v2c_h)[src],
+                    np.asarray(res.v2c_t)[src]).astype(np.int32)
+    e_cv = np.where(is_head_e, np.asarray(res.v2c_h)[dst],
+                    np.asarray(res.v2c_t)[dst]).astype(np.int32)
+    invalid = src == dst
+    e_cu[invalid] = -1
+    e_cv[invalid] = -1
+
+    rf = replication_factor(src, dst, parts, n_vertices=n_vertices,
+                            k=config.k)
+    bal = load_balance(parts, k=config.k)
+
+    bundle = {
+        "degrees": degrees,
+        "v2c_h": v2c_h.astype(np.int32),
+        "v2c_t": v2c_t.astype(np.int32),
+        "vol_h": np.asarray(state.vol_h, np.int32),
+        "vol_t": np.asarray(state.vol_t, np.int32),
+        "ld": np.asarray(state.ld, np.int32),
+        "next_h": np.int32(state.next_h),
+        "next_t": np.int32(state.next_t),
+        "raw2comb_h": raw2comb_h,
+        "raw2comb_t": raw2comb_t,
+        "comb_is_head": comb_is_head,
+        "sizes": np.asarray(internals["sizes"], np.float32),
+        "pair_a": np.asarray(internals["pair_a"], np.int32),
+        "pair_b": np.asarray(internals["pair_b"], np.int32),
+        "pair_w": np.asarray(internals["pair_w"], np.float32),
+        "c2p": np.asarray(out.cluster_assignment, np.int32),
+        "load": np.asarray(internals["load"], np.int32),
+        "parts": parts,
+        "edge_cu": e_cu,
+        "edge_cv": e_cv,
+        "edge_head": np.asarray(is_head_e, bool),
+        "touched": np.zeros(C, bool),
+        "xi": np.int32(out.xi),
+        "kappa": np.int32(out.kappa),
+        "rf_baseline": np.float64(rf),
+        "balance_baseline": np.float64(bal),
+    }
+    if sketch is not None:
+        bundle["theta_table"] = np.asarray(sketch.table)
+        bundle["theta_seeds"] = np.asarray(sketch.seeds)
+    return out, bundle
+
+
+# ---------------------------------------------------------------------------
+# delta application
+# ---------------------------------------------------------------------------
+
+
+def _comb_of(raw: np.ndarray, remap: np.ndarray) -> np.ndarray:
+    return np.where(raw >= 0, remap[np.maximum(raw, 0)], -1).astype(np.int32)
+
+
+def _least_loaded_fill(sizes, c2p, new_ids, k):
+    """Deterministic initial partition for newly-allocated clusters:
+    successively least-loaded by size-weighted partition loads."""
+    loads = np.zeros(k, np.float64)
+    placed = c2p >= 0
+    np.add.at(loads, c2p[placed], sizes[placed])
+    for cid in new_ids:
+        p = int(np.argmin(loads))
+        c2p[cid] = p
+        loads[p] += sizes[cid]
+    return c2p
+
+
+def _pair_union(pa, pb, da, db, n_comb):
+    """Union of the stored structural pair list with the delta's pairs."""
+    key_old = pa.astype(np.int64) * (n_comb + 1) + pb
+    key_new = da.astype(np.int64) * (n_comb + 1) + db
+    keys = np.unique(np.concatenate([key_old, key_new]))
+    return ((keys // (n_comb + 1)).astype(np.int32),
+            (keys % (n_comb + 1)).astype(np.int32))
+
+
+def _merge_exact_counts(pa, pb, pw, da, db, dcount, n_comb):
+    """Exact-Θ merge: old per-pair counts + the delta's occurrences."""
+    key_old = pa.astype(np.int64) * (n_comb + 1) + pb
+    key_new = da.astype(np.int64) * (n_comb + 1) + db
+    keys, inv = np.unique(np.concatenate([key_old, key_new]),
+                          return_inverse=True)
+    w = np.zeros(keys.size, np.float64)
+    np.add.at(w, inv, np.concatenate([pw.astype(np.float64), dcount]))
+    return ((keys // (n_comb + 1)).astype(np.int32),
+            (keys % (n_comb + 1)).astype(np.int32),
+            w.astype(np.float32))
+
+
+def s5p_apply_delta(bundle: dict, config: S5PConfig, full_src, full_dst,
+                    stream_pos: int) -> tuple[dict, IncrementalResult]:
+    """Absorb ``full[stream_pos:]`` into the bundle; maybe refine.
+
+    ``full_src``/``full_dst`` are the whole stream in arrival order
+    (prefix the bundle was built on + the insertion batch).  Returns the
+    updated bundle and an :class:`IncrementalResult`.  Mutates a copy —
+    the input bundle dict is not modified.
+    """
+    b = dict(bundle)
+    full_src = np.asarray(full_src, np.int32)
+    full_dst = np.asarray(full_dst, np.int32)
+    E_total = int(full_src.shape[0])
+    E0 = int(stream_pos)
+    if E0 > E_total:
+        raise ValueError(f"carry stream position {E0} is past the stream "
+                         f"({E_total} edges)")
+    dsrc = full_src[E0:]
+    ddst = full_dst[E0:]
+    E_delta = E_total - E0
+    k = config.k
+    xi = int(b["xi"])
+    kappa = int(b["kappa"])
+    full_cost = 4 * E_total  # degree + Alg.1 + Θ + Alg.3 folds of a cold run
+
+    n_old = int(b["degrees"].shape[0])
+    if E_delta == 0:
+        parts = np.asarray(b["parts"], np.int32)
+        rf = replication_factor(full_src, full_dst, parts,
+                                n_vertices=n_old, k=k)
+        bal = load_balance(parts, k=k)
+        res = IncrementalResult(
+            parts=parts, rf=float(rf), balance=float(bal), refined=False,
+            rf_drift=0.0, balance_drift=0.0, edges_replayed=0,
+            full_replay_cost=full_cost, game_rounds=0, n_new_clusters=0,
+            n_delta_edges=0)
+        return b, res
+
+    # ---- vertex-set growth -------------------------------------------
+    n_new = n_old
+    if E_delta:
+        n_new = max(n_old, int(max(dsrc.max(), ddst.max())) + 1)
+    degrees = np.zeros(n_new, np.int32)
+    degrees[:n_old] = b["degrees"]
+    np.add.at(degrees, dsrc, 1)  # exact SUM update (self-loops count,
+    np.add.at(degrees, ddst, 1)  # matching compute_degrees on the cold run)
+
+    state = _cl.ClusterState(
+        v2c_h=jnp.asarray(b["v2c_h"]), v2c_t=jnp.asarray(b["v2c_t"]),
+        vol_h=jnp.asarray(b["vol_h"]), vol_t=jnp.asarray(b["vol_t"]),
+        ld=jnp.asarray(b["ld"]), next_h=jnp.int32(b["next_h"]),
+        next_t=jnp.int32(b["next_t"]))
+    state = grow_carry("cluster", state, n_old, n_new)
+
+    # ---- Alg. 1 replay over the delta (frozen ξ/κ, fresh degrees) ----
+    delta_stream = DeltaStream(dsrc, ddst, n_new, base_offset=E0,
+                               chunk_size=config.chunk_size)
+    pc = _cl.ClusterCarry(jnp.asarray(degrees), n_new, xi=xi, kappa=kappa,
+                          global_tail=config.bounded)
+    _, state = run_incremental_carry(
+        delta_stream, pc, carry=state, num_streams=config.num_streams,
+        super_chunk=config.super_chunk)
+
+    # ---- stable combined ids for any newly-allocated clusters --------
+    v2c_h = np.asarray(state.v2c_h)
+    v2c_t = np.asarray(state.v2c_t)
+    next_h = int(state.next_h)
+    next_t = int(state.next_t)
+    r2c_h = np.full(max(next_h, 1), -1, np.int32)
+    r2c_h[:b["raw2comb_h"].shape[0]] = b["raw2comb_h"]
+    r2c_t = np.full(max(next_t, 1), -1, np.int32)
+    r2c_t[:b["raw2comb_t"].shape[0]] = b["raw2comb_t"]
+    C0 = int(b["comb_is_head"].shape[0])
+    used_h = np.unique(v2c_h[v2c_h >= 0])
+    used_t = np.unique(v2c_t[v2c_t >= 0])
+    new_h = used_h[r2c_h[used_h] < 0]
+    new_t = used_t[r2c_t[used_t] < 0]
+    r2c_h[new_h] = C0 + np.arange(new_h.size, dtype=np.int32)
+    r2c_t[new_t] = C0 + new_h.size + np.arange(new_t.size, dtype=np.int32)
+    C1 = C0 + new_h.size + new_t.size
+    comb_is_head = np.concatenate([
+        b["comb_is_head"], np.ones(new_h.size, bool),
+        np.ones(new_t.size, bool) if config.one_stage
+        else np.zeros(new_t.size, bool)])
+    sizes = np.concatenate([b["sizes"],
+                            np.zeros(C1 - C0, np.float32)]).astype(np.float32)
+    c2p = np.concatenate([b["c2p"], np.full(C1 - C0, -1, np.int32)])
+    touched = np.concatenate([b["touched"], np.ones(C1 - C0, bool)])
+
+    # ---- per-edge cluster tags for the delta (combined ids) ----------
+    u64 = dsrc.astype(np.int64)
+    v64 = ddst.astype(np.int64)
+    valid = dsrc != ddst
+    head_e = (degrees[u64] > xi) & (degrees[v64] > xi)
+    ch_u = _comb_of(v2c_h[u64], r2c_h)
+    ct_u = _comb_of(v2c_t[u64], r2c_t)
+    ch_v = _comb_of(v2c_h[v64], r2c_h)
+    ct_v = _comb_of(v2c_t[v64], r2c_t)
+    cu = np.where(head_e, ch_u, ct_u).astype(np.int32)
+    cv = np.where(head_e, ch_v, ct_v).astype(np.int32)
+    cu[~valid] = -1
+    cv[~valid] = -1
+    alt_u = np.where(head_e, ct_u, ch_u).astype(np.int32)
+    alt_v = np.where(head_e, ct_v, ch_v).astype(np.int32)
+    for arr in (cu, cv):
+        t = arr[arr >= 0]
+        if t.size:
+            touched[t] = True
+
+    # ---- cluster sizes (same ½/1 attribution as cluster_statistics) --
+    internal = (cu == cv) & valid & (cu >= 0)
+    boundary = (cu != cv) & valid & (cu >= 0) & (cv >= 0)
+    sizes64 = sizes.astype(np.float64)
+    np.add.at(sizes64, cu[internal], 1.0)
+    np.add.at(sizes64, cu[boundary], 0.5)
+    np.add.at(sizes64, cv[boundary], 0.5)
+    sizes = sizes64.astype(np.float32)
+
+    # ---- Θ update: the three membership pair sets of the delta -------
+    a_parts, b_parts = [], []
+    for a, bb, ok in ((cu, cv, valid), (alt_u, cv, valid & (alt_u >= 0)),
+                      (cu, alt_v, valid & (alt_v >= 0))):
+        ok = ok & (a != bb) & (a >= 0) & (bb >= 0)
+        a_parts.append(np.minimum(a, bb)[ok])
+        b_parts.append(np.maximum(a, bb)[ok])
+    da = np.concatenate(a_parts).astype(np.int32)
+    db = np.concatenate(b_parts).astype(np.int32)
+    if config.use_cms and "theta_table" in b:
+        sketch = CMSketch(table=jnp.asarray(b["theta_table"]),
+                          seeds=jnp.asarray(b["theta_seeds"]))
+        if da.size:
+            sketch = cms_update(sketch, pair_key(jnp.asarray(da),
+                                                 jnp.asarray(db)))
+        pa, pb = _pair_union(b["pair_a"], b["pair_b"], da, db, C1)
+        pw = np.asarray(cms_query(sketch, pair_key(
+            jnp.asarray(pa), jnp.asarray(pb)))).astype(np.float32)
+        b["theta_table"] = np.asarray(sketch.table)
+        b["theta_seeds"] = np.asarray(sketch.seeds)
+    else:
+        duniq, dcount = (np.empty(0, np.int64), np.empty(0, np.float64))
+        if da.size:
+            key = da.astype(np.int64) * (C1 + 1) + db
+            duniq, dcount = np.unique(key, return_counts=True)
+            dcount = dcount.astype(np.float64)
+        pa, pb, pw = _merge_exact_counts(
+            b["pair_a"], b["pair_b"], b["pair_w"],
+            (duniq // (C1 + 1)).astype(np.int32),
+            (duniq % (C1 + 1)).astype(np.int32), dcount, C1)
+
+    # ---- settle new clusters (masked game over just them) ------------
+    game_rounds = 0
+    n_new_clusters = C1 - C0
+    # the settle and refine games share inputs: the cluster graph after
+    # this delta (sizes/Θ are fixed; only c2p moves between the two)
+    inputs = _game.GameInputs(
+        sizes=jnp.asarray(sizes), pair_a=jnp.asarray(pa),
+        pair_b=jnp.asarray(pb), pair_w=jnp.asarray(pw), n_head=0, k=k)
+    bs = _game.default_batch_size(config.game_batch_size, C1)
+    if n_new_clusters:
+        c2p = _least_loaded_fill(sizes, c2p, range(C0, C1), k)
+        # refine_rounds == 0 means "no game rounds at all" (pure replay):
+        # new clusters then keep the least-loaded fill
+        if config.refine_rounds > 0:
+            new_mask = np.zeros(C1, bool)
+            new_mask[C0:] = True
+            settle = _game.run_game(
+                inputs, C1, batch_size=bs,
+                max_rounds=min(4, config.refine_rounds),
+                accept_prob=config.game_accept_prob, assign0=c2p,
+                seed=config.seed, leader_mask=comb_is_head,
+                move_mask=new_mask & (sizes > 0))
+            c2p = np.asarray(settle.assignment)
+            game_rounds += int(settle.rounds)
+
+    # ---- Alg. 3: place only the delta edges (warm load vector) -------
+    max_load = (_INT32_MAX if config.bounded
+                else int(math.ceil(config.tau * E_total / k)))
+    ac = AssignCarry(k, max_load, jnp.asarray(c2p))
+    delta_parts, load = run_carry(
+        delta_stream, ac, jnp.asarray(head_e), jnp.asarray(np.maximum(cu, 0)),
+        jnp.asarray(np.maximum(cv, 0)), carry=jnp.asarray(b["load"]))
+    parts = np.concatenate([b["parts"],
+                            np.asarray(delta_parts, np.int32)])
+    edge_cu = np.concatenate([b["edge_cu"], cu])
+    edge_cv = np.concatenate([b["edge_cv"], cv])
+    edge_head = np.concatenate([b["edge_head"], head_e])
+    load = np.asarray(load, np.int32)
+    edges_replayed = 4 * E_delta
+
+    # ---- drift check → bounded refinement ----------------------------
+    rf = float(replication_factor(full_src, full_dst, parts,
+                                  n_vertices=n_new, k=k))
+    bal = float(load_balance(parts, k=k))
+    monitor = DriftMonitor(
+        float(b["rf_baseline"]), float(b["balance_baseline"]),
+        rf_threshold=config.drift_rf_threshold,
+        balance_threshold=config.drift_balance_threshold)
+    decision = monitor.check(rf, bal)
+    refined = False
+    if decision.refine and config.refine_rounds > 0 and C1 > 0:
+        refine = _game.run_game(
+            inputs, C1, batch_size=bs, max_rounds=config.refine_rounds,
+            accept_prob=config.game_accept_prob, assign0=c2p,
+            seed=config.seed + 1, leader_mask=comb_is_head,
+            move_mask=touched & (sizes > 0))
+        c2p_new = np.asarray(refine.assignment)
+        game_rounds += int(refine.rounds)
+        moved = np.nonzero(c2p_new != c2p)[0]
+        if moved.size:
+            moved_mask = np.zeros(C1, bool)
+            moved_mask[moved] = True
+            ok = parts >= 0
+            aff = ok & (moved_mask[np.maximum(edge_cu, 0)]
+                        | moved_mask[np.maximum(edge_cv, 0)])
+            # lift the affected edges' load, then re-place just them in
+            # arrival order against the new cluster→partition map
+            load64 = load.astype(np.int64)
+            np.subtract.at(load64, parts[aff], 1)
+            aidx = np.nonzero(aff)[0]
+            re_stream = EdgeStream(full_src[aidx], full_dst[aidx], n_new,
+                                   chunk_size=config.chunk_size)
+            ac = AssignCarry(k, max_load, jnp.asarray(c2p_new))
+            re_parts, load = run_carry(
+                re_stream, ac, jnp.asarray(edge_head[aidx]),
+                jnp.asarray(np.maximum(edge_cu[aidx], 0)),
+                jnp.asarray(np.maximum(edge_cv[aidx], 0)),
+                carry=jnp.asarray(load64.astype(np.int32)))
+            parts = parts.copy()
+            parts[aidx] = np.asarray(re_parts, np.int32)
+            load = np.asarray(load, np.int32)
+            edges_replayed += int(aidx.size)
+            rf = float(replication_factor(full_src, full_dst, parts,
+                                          n_vertices=n_new, k=k))
+            bal = float(load_balance(parts, k=k))
+        c2p = c2p_new
+        refined = True
+        touched = np.zeros(C1, bool)
+        monitor.rebase(rf, bal)
+
+    # ---- pack the grown bundle ---------------------------------------
+    b.update(
+        degrees=degrees,
+        v2c_h=v2c_h.astype(np.int32), v2c_t=v2c_t.astype(np.int32),
+        vol_h=np.asarray(state.vol_h, np.int32),
+        vol_t=np.asarray(state.vol_t, np.int32),
+        ld=np.asarray(state.ld, np.int32),
+        next_h=np.int32(next_h), next_t=np.int32(next_t),
+        raw2comb_h=r2c_h, raw2comb_t=r2c_t,
+        comb_is_head=comb_is_head, sizes=sizes,
+        pair_a=pa, pair_b=pb, pair_w=pw,
+        c2p=c2p.astype(np.int32), load=load, parts=parts,
+        edge_cu=edge_cu, edge_cv=edge_cv, edge_head=edge_head,
+        touched=touched,
+        rf_baseline=np.float64(monitor.baseline_rf),
+        balance_baseline=np.float64(monitor.baseline_balance),
+    )
+    result = IncrementalResult(
+        parts=parts, rf=rf, balance=bal, refined=refined,
+        rf_drift=decision.rf_drift, balance_drift=decision.balance_drift,
+        edges_replayed=edges_replayed, full_replay_cost=full_cost,
+        game_rounds=game_rounds, n_new_clusters=int(n_new_clusters),
+        n_delta_edges=E_delta)
+    return b, result

@@ -1,0 +1,208 @@
+"""CarryStore — durable, validated persistence for partitioner carries.
+
+A carry checkpoint is the atomic npz+CRC commit of ``checkpoint.manager``
+(treedef-path manifest, per-array CRC32, tmp-dir + ``os.rename``) with one
+addition: a **metadata leaf**.  The store wraps every carry as
+``{"meta": <json as uint8>, "carry": <pytree>}`` before saving, so the
+consumer name, a config fingerprint, and the stream position travel
+*inside* the same atomic commit as the arrays — a crash can never split a
+carry from its provenance, and the CRC layer covers the metadata too.
+
+Validation on load is strict by construction: a carry written under a
+different consumer, a different config fingerprint, or an incompatible
+stream position **raises** :class:`CarryMismatchError` instead of silently
+seeding a warm start with foreign state.  (A corrupted checkpoint already
+raises ``IOError`` from the CRC verify underneath.)
+
+Steps are keyed by **stream position** (edges ingested when the carry was
+taken), so ``load()`` with no step resumes from the furthest-ingested
+carry and mid-stream checkpoints coexist naturally with end-of-stream
+ones.  Keep-N GC bounds the directory like ``CheckpointManager`` does.
+"""
+
+from __future__ import annotations
+
+import hashlib
+import json
+import shutil
+from pathlib import Path
+from typing import Any, Mapping
+
+import jax
+import numpy as np
+
+from ..checkpoint.manager import (
+    _flatten_with_paths,
+    restore_checkpoint,
+    save_checkpoint,
+)
+
+__all__ = ["CarryStore", "CarryMismatchError", "config_fingerprint"]
+
+_META_KEY = "meta"
+_CARRY_KEY = "carry"
+_FORMAT = 1
+
+
+class CarryMismatchError(ValueError):
+    """A persisted carry exists but must not seed this warm start."""
+
+
+def config_fingerprint(config: Mapping[str, Any]) -> str:
+    """Order-insensitive 16-hex fingerprint of a config mapping.
+
+    Values must be JSON-serializable; floats/ints/strings/bools/None and
+    nested lists/dicts all hash stably.
+    """
+    blob = json.dumps(config, sort_keys=True, separators=(",", ":"),
+                      default=_json_default)
+    return hashlib.sha256(blob.encode()).hexdigest()[:16]
+
+
+def _json_default(o):
+    if isinstance(o, np.integer):
+        return int(o)
+    if isinstance(o, np.floating):
+        return float(o)
+    return str(o)
+
+
+def _meta_to_leaf(meta: dict) -> np.ndarray:
+    return np.frombuffer(
+        json.dumps(meta, sort_keys=True, default=_json_default).encode(),
+        np.uint8).copy()
+
+
+def _leaf_to_meta(arr: np.ndarray) -> dict:
+    return json.loads(np.asarray(arr, np.uint8).tobytes().decode())
+
+
+class CarryStore:
+    """keep-N store of validated carry checkpoints under one directory."""
+
+    def __init__(self, directory, keep: int = 3):
+        self.directory = Path(directory)
+        self.keep = int(keep)
+
+    # ------------------------------------------------------------- write
+    def save(self, carry, *, consumer: str, config: Mapping[str, Any],
+             stream_pos: int, extra_meta: Mapping[str, Any] | None = None,
+             step: int | None = None) -> Path:
+        """Persist ``carry`` atomically.  Returns the committed path.
+
+        ``consumer`` names the PartitionerCarry implementation (or the
+        pipeline) that produced the state; ``config`` is the scenario
+        mapping whose fingerprint guards the restore; ``stream_pos`` is
+        the number of edges ingested when the carry was taken (and the
+        default step key).
+        """
+        meta = {
+            "format": _FORMAT,
+            "consumer": str(consumer),
+            "config_hash": config_fingerprint(config),
+            "config": dict(config),
+            "stream_pos": int(stream_pos),
+        }
+        if extra_meta:
+            meta.update(extra_meta)
+        state = {_META_KEY: _meta_to_leaf(meta),
+                 _CARRY_KEY: jax.device_get(carry)}
+        path = save_checkpoint(self.directory, int(
+            step if step is not None else stream_pos), state)
+        self._gc()
+        return path
+
+    # -------------------------------------------------------------- read
+    def load(self, like=None, *, consumer: str | None = None,
+             config: Mapping[str, Any] | None = None,
+             max_stream_pos: int | None = None,
+             step: int | None = None, verify: bool = True):
+        """Restore ``(carry, meta)`` from the given (default: latest) step.
+
+        - ``consumer``/``config`` given ⇒ the stored metadata must match
+          (fingerprint equality for config) or :class:`CarryMismatchError`.
+        - ``max_stream_pos`` given ⇒ the carry's stream position must not
+          exceed it (a carry taken *past* the current stream cannot seed
+          a replay of it).
+        - ``like`` given ⇒ the carry is unflattened into that treedef
+          (leaves matched by path; any structural drift raises).  Without
+          it a flat ``{path: array}`` dict is returned.
+        """
+        if step is None and max_stream_pos is not None:
+            # steps are keyed by stream position (the save default), so a
+            # mid-stream checkpoint can seed a shorter stream even after
+            # later end-of-stream saves: take the furthest step that fits
+            fitting = [s for s in self.steps() if s <= max_stream_pos]
+            if fitting:
+                step = fitting[-1]
+            # else fall through to the latest; the metadata check below
+            # reports the stale/foreign position with full context
+        flat, _ = restore_checkpoint(self.directory, step=step, like=None,
+                                     verify=verify)
+        if _META_KEY not in flat:
+            raise CarryMismatchError(
+                f"checkpoint under {self.directory} is not a carry "
+                "checkpoint (no metadata leaf)")
+        meta = _leaf_to_meta(flat.pop(_META_KEY))
+        if meta.get("format") != _FORMAT:
+            raise CarryMismatchError(
+                f"unsupported carry format {meta.get('format')!r}")
+        if consumer is not None and meta["consumer"] != consumer:
+            raise CarryMismatchError(
+                f"carry was written by consumer {meta['consumer']!r}, "
+                f"refusing to seed {consumer!r}")
+        if config is not None:
+            want = config_fingerprint(config)
+            if meta["config_hash"] != want:
+                raise CarryMismatchError(
+                    f"carry config fingerprint {meta['config_hash']} != "
+                    f"{want} for the requested config "
+                    f"(stored: {meta.get('config')})")
+        if max_stream_pos is not None and meta["stream_pos"] > max_stream_pos:
+            raise CarryMismatchError(
+                f"carry was taken at stream position {meta['stream_pos']} "
+                f"but the current stream holds only {max_stream_pos} edges "
+                "(stale or foreign stream)")
+        prefix = _CARRY_KEY + "/"
+        carry_flat = {k[len(prefix):] if k.startswith(prefix) else k: v
+                      for k, v in flat.items()}
+        if like is None:
+            return carry_flat, meta
+        paths_leaves = _flatten_with_paths({_CARRY_KEY: like})
+        try:
+            leaves = [flat_lookup(carry_flat, k, prefix) for k, _ in paths_leaves]
+        except KeyError as e:
+            raise CarryMismatchError(
+                f"carry structure mismatch: stored checkpoint has no leaf "
+                f"{e.args[0]!r} for the requested treedef") from None
+        if len(carry_flat) != len(paths_leaves):
+            raise CarryMismatchError(
+                f"carry structure mismatch: stored checkpoint has "
+                f"{len(carry_flat)} leaves, requested treedef expects "
+                f"{len(paths_leaves)}")
+        treedef = jax.tree_util.tree_structure(like)
+        return jax.tree_util.tree_unflatten(treedef, leaves), meta
+
+    # ------------------------------------------------------------- admin
+    def steps(self) -> list[int]:
+        if not self.directory.exists():
+            return []
+        return sorted(
+            int(p.name.split("_")[1]) for p in self.directory.glob("step_*")
+            if not p.name.endswith(".tmp")
+        )
+
+    def _gc(self) -> None:
+        steps = self.steps()
+        if self.keep and len(steps) > self.keep:
+            for s in steps[:-self.keep]:
+                shutil.rmtree(self.directory / f"step_{s:08d}",
+                              ignore_errors=True)
+
+
+def flat_lookup(carry_flat: dict, full_key: str, prefix: str):
+    """Leaf for a ``carry/...`` manifest path from the stripped flat dict."""
+    key = full_key[len(prefix):] if full_key.startswith(prefix) else full_key
+    if key not in carry_flat:
+        raise KeyError(full_key)
+    return carry_flat[key]

@@ -17,6 +17,27 @@ Parallel ingest (S sharded sub-streams per pass, carries merged every
 
   python -m repro.launch.partition --graph rmat:17 --k 8 \
       --partitioner hdrf --num-streams 8 --super-chunk 8
+
+Incremental re-partitioning (warm-start replay of only the new edges; see
+``repro.incremental``):
+
+  # cold run, persist the carry bundle
+  python -m repro.launch.partition --graph community:4000 --k 8 \
+      --partitioner s5p --save-carry /data/carry
+  # absorb an insertion batch against the saved carry (drift-triggered
+  # refinement past --drift-threshold)
+  python -m repro.launch.partition --graph community:4000 --k 8 \
+      --partitioner s5p --resume-carry /data/carry --delta rmat:10
+  # out-of-core flavor: grow the shard directory in place, then resume —
+  # the delta is everything past the carry's recorded stream position
+  python -m repro.launch.partition --graph rmat:12 --write-shards /data/g \
+      --shard-edges 65536
+  python -m repro.launch.partition --graph file:/data/g/manifest.json \
+      --k 8 --partitioner hdrf --save-carry /data/carry
+  python -m repro.launch.partition --graph rmat:10 --write-shards /data/g \
+      --append
+  python -m repro.launch.partition --graph file:/data/g/manifest.json \
+      --k 8 --partitioner hdrf --resume-carry /data/carry
 """
 
 from __future__ import annotations
@@ -24,6 +45,8 @@ from __future__ import annotations
 import argparse
 import inspect
 import time
+
+import numpy as np
 
 from ..core import replication_factor, load_balance, gas_comm_bytes
 from ..core.baselines import PARTITIONERS
@@ -58,23 +81,38 @@ def open_sharded_stream(manifest: str, *, chunk_size: int = 1 << 16,
 
 
 def write_shards_cli(graph: str, out_dir: str, shard_edges: int,
-                     seed: int = 0) -> str:
-    """``--write-shards`` converter: synthetic spec → shard directory."""
-    from ..streaming import write_shards
+                     seed: int = 0, append: bool = False) -> str:
+    """``--write-shards`` converter: synthetic spec → shard directory.
+
+    With ``append=True`` the spec's edges grow an existing shard directory
+    in place (same chunk layout as a one-shot write of the concatenation —
+    see :func:`repro.streaming.append_shards`).
+    """
+    from ..streaming import append_shards, write_shards
 
     src, dst, n = load_graph(graph, seed)
     t0 = time.time()
-    mpath = write_shards(out_dir, src, dst, shard_edges=shard_edges,
-                         n_vertices=n)
-    print(f"wrote {len(src)} edges ({n} vertices) as shards of "
-          f"{shard_edges} to {mpath}  [{time.time() - t0:.1f}s]")
+    if append:
+        # append keeps the manifest's own shard size; --shard-edges is
+        # a write-time knob only
+        mpath = append_shards(out_dir, src, dst)
+        print(f"appended {len(src)} edges ({n} vertices) to {mpath}  "
+              f"[{time.time() - t0:.1f}s]")
+    else:
+        mpath = write_shards(out_dir, src, dst, shard_edges=shard_edges,
+                             n_vertices=n)
+        print(f"wrote {len(src)} edges ({n} vertices) as shards of "
+              f"{shard_edges} to {mpath}  [{time.time() - t0:.1f}s]")
     return str(mpath)
 
 
 def run(graph: str, k: int, partitioner: str = "s5p", seed: int = 0,
         compare: bool = False, *, chunk_size: int = 1 << 16,
         ordering: str = "natural", window: int = 4096,
-        num_streams: int = 1, super_chunk: int = 8):
+        num_streams: int = 1, super_chunk: int = 8,
+        save_carry: str | None = None, resume_carry: str | None = None,
+        delta: str | None = None, drift_threshold: float | None = None,
+        refine_rounds: int | None = None):
     for pname, v in (("k", k), ("chunk_size", chunk_size), ("window", window),
                      ("num_streams", num_streams), ("super_chunk", super_chunk)):
         if v < 1:
@@ -91,6 +129,18 @@ def run(graph: str, k: int, partitioner: str = "s5p", seed: int = 0,
         src, dst = stream.arrival_arrays()
     else:
         src, dst, n = load_graph(graph, seed)
+    if save_carry or resume_carry or delta:
+        try:
+            return _run_incremental_cli(
+                graph, src, dst, n, k, partitioner, seed, compare,
+                stream=stream, chunk_size=chunk_size, ordering=ordering,
+                num_streams=num_streams, super_chunk=super_chunk,
+                save_carry=save_carry, resume_carry=resume_carry,
+                delta=delta, drift_threshold=drift_threshold,
+                refine_rounds=refine_rounds)
+        finally:
+            if stream is not None:
+                stream.close()
     names = list(PARTITIONERS) if compare else [partitioner]
     rows = []
     for name in names:
@@ -125,6 +175,71 @@ def run(graph: str, k: int, partitioner: str = "s5p", seed: int = 0,
               f"{peak} ({peak / max(8 * len(src), 1):.1%} of the edge list)")
         stream.close()
     return rows
+
+
+def _run_incremental_cli(graph, src, dst, n, k, partitioner, seed, compare,
+                         *, stream, chunk_size, ordering, num_streams,
+                         super_chunk, save_carry, resume_carry, delta,
+                         drift_threshold, refine_rounds):
+    """``--save-carry`` / ``--resume-carry`` / ``--delta`` flows."""
+    import dataclasses
+
+    from ..core import S5PConfig
+    from ..incremental import cold_start, run_incremental
+
+    if compare:
+        raise ValueError("carry flows need a single --partitioner, "
+                         "not --compare")
+    if delta and not resume_carry:
+        raise ValueError("--delta needs --resume-carry (an insertion batch "
+                         "is replayed against a saved carry)")
+    if ordering != "natural":
+        raise ValueError(
+            "incremental carries assume natural (insertion-order) streams; "
+            f"a {ordering!r} reordering permutes the whole grown stream and "
+            "has no stable prefix to resume from")
+    if delta:
+        dsrc, ddst, dn = load_graph(delta, seed + 1)
+        src = np.concatenate([np.asarray(src, np.int32),
+                              np.asarray(dsrc, np.int32)])
+        dst = np.concatenate([np.asarray(dst, np.int32),
+                              np.asarray(ddst, np.int32)])
+        n = max(n, dn)
+    cfg = S5PConfig(k=k, seed=seed, chunk_size=chunk_size, ordering=ordering,
+                    num_streams=num_streams, super_chunk=super_chunk)
+    overrides = {}
+    if drift_threshold is not None:
+        overrides["drift_rf_threshold"] = drift_threshold
+    if refine_rounds is not None:
+        overrides["refine_rounds"] = refine_rounds
+    if overrides:
+        cfg = dataclasses.replace(cfg, **overrides)
+
+    if resume_carry:
+        t0 = time.time()
+        res = run_incremental(
+            resume_carry, partitioner, src, dst, n, k, seed=seed,
+            chunk_size=chunk_size, s5p_config=cfg,
+            num_streams=num_streams, super_chunk=super_chunk, save=True,
+            save_dir=save_carry)
+        dt = time.time() - t0
+        print(f"{partitioner:10s} RF={res.rf:7.3f} balance={res.balance:5.2f} "
+              f"delta={res.n_delta_edges} replay={res.replay_fraction:.1%} "
+              f"drift={res.rf_drift:+.3f} refined={res.refined} "
+              f"rounds={res.game_rounds}  {dt:6.1f}s")
+        return res
+    t0 = time.time()
+    parts, path = cold_start(save_carry, partitioner, src, dst, n, k,
+                             seed=seed, chunk_size=chunk_size,
+                             s5p_config=cfg, stream=stream,
+                             num_streams=num_streams,
+                             super_chunk=super_chunk)
+    dt = time.time() - t0
+    rf = replication_factor(src, dst, parts, n_vertices=n, k=k)
+    bal = load_balance(parts, k=k)
+    print(f"{partitioner:10s} RF={rf:7.3f} balance={bal:5.2f} "
+          f"carry→{path}  {dt:6.1f}s")
+    return [(partitioner, rf, bal, None, dt)]
 
 
 def _positive_int(value: str) -> int:
@@ -166,15 +281,40 @@ def main():
                     help="convert --graph to edge shards in DIR and exit")
     ap.add_argument("--shard-edges", type=_positive_int, default=1 << 20,
                     help="edges per shard for --write-shards")
+    ap.add_argument("--append", action="store_true",
+                    help="with --write-shards: grow the existing shard "
+                         "directory in place instead of writing fresh")
+    ap.add_argument("--save-carry", default=None, metavar="DIR",
+                    help="persist the partitioner's warm-start carry "
+                         "bundle to DIR (greedy/hdrf/grid/s5p)")
+    ap.add_argument("--resume-carry", default=None, metavar="DIR",
+                    help="warm-start from the carry in DIR; the delta is "
+                         "everything past its recorded stream position "
+                         "(grow file: graphs via --write-shards --append) "
+                         "plus any --delta batch")
+    ap.add_argument("--delta", default=None, metavar="SPEC",
+                    help="insertion batch (same specs as --graph) appended "
+                         "to the stream before resuming")
+    ap.add_argument("--drift-threshold", type=float, default=None,
+                    help="relative RF drift that triggers game refinement "
+                         "on resume (s5p; default from S5PConfig)")
+    ap.add_argument("--refine-rounds", type=int, default=None,
+                    help="refinement budget in Stackelberg rounds "
+                         "(s5p; 0 disables)")
     args = ap.parse_args()
+    if args.append and not args.write_shards:
+        ap.error("--append only makes sense with --write-shards DIR")
     if args.write_shards:
         write_shards_cli(args.graph, args.write_shards, args.shard_edges,
-                         args.seed)
+                         args.seed, append=args.append)
         return
     run(args.graph, args.k, args.partitioner, args.seed, args.compare,
         chunk_size=args.chunk_size, ordering=args.ordering,
         window=args.window, num_streams=args.num_streams,
-        super_chunk=args.super_chunk)
+        super_chunk=args.super_chunk, save_carry=args.save_carry,
+        resume_carry=args.resume_carry, delta=args.delta,
+        drift_threshold=args.drift_threshold,
+        refine_rounds=args.refine_rounds)
 
 
 if __name__ == "__main__":

@@ -76,6 +76,7 @@ from .parallel import ParallelEdgeStream, run_parallel  # noqa: F401
 from .oocstream import (  # noqa: F401
     HostBudget,
     ShardedEdgeStream,
+    append_shards,
     read_manifest,
     write_shards,
 )
@@ -83,4 +84,5 @@ from .oocstream import (  # noqa: F401
 __all__ = ["Chunk", "EdgeStream", "as_stream", "run_carry", "run_scan",
            "run_scan_batched", "PartitionerCarry", "FnCarry", "SUM", "OR",
            "MAX", "REPLICATED", "ParallelEdgeStream", "run_parallel",
-           "HostBudget", "ShardedEdgeStream", "read_manifest", "write_shards"]
+           "HostBudget", "ShardedEdgeStream", "read_manifest", "write_shards",
+           "append_shards"]

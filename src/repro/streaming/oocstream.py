@@ -50,6 +50,7 @@ order mmap is kept for extras alignment and :meth:`scatter_back`.
 from __future__ import annotations
 
 import json
+import os
 import shutil
 import tempfile
 import weakref
@@ -61,8 +62,8 @@ import numpy as np
 
 from .stream import DEFAULT_CHUNK, ORDERINGS, EdgeStream, _windowed_emit
 
-__all__ = ["HostBudget", "ShardedEdgeStream", "write_shards", "read_manifest",
-           "DEFAULT_SHARD_EDGES", "MANIFEST_NAME"]
+__all__ = ["HostBudget", "ShardedEdgeStream", "write_shards", "append_shards",
+           "read_manifest", "DEFAULT_SHARD_EDGES", "MANIFEST_NAME"]
 
 MANIFEST_NAME = "manifest.json"
 MANIFEST_VERSION = 1
@@ -172,6 +173,93 @@ def write_shards(
     }
     mpath = out / MANIFEST_NAME
     mpath.write_text(json.dumps(manifest, indent=1))
+    return mpath
+
+
+def append_shards(manifest, src, dst, *extras) -> Path:
+    """Grow an existing shard directory in place with an insertion batch.
+
+    Bit-parity contract: ``append(prefix); append(delta)`` leaves a shard
+    directory whose streamed chunks are identical to a single
+    ``write_shards(prefix + delta)`` — the partial tail shard is topped up
+    to exactly ``shard_edges`` before new shards are laid down, so shard
+    boundaries (and therefore every mmap page and chunk) match the
+    one-shot layout.  Extras must match the manifest's field list (name
+    order, dtype, trailing shape).
+
+    Commit order is crash-safe: tail-shard files are replaced first (their
+    committed prefix rows are byte-identical, and the old manifest never
+    points past them), new shard files next, the manifest last via
+    tmp + ``os.replace``.  Appending while a :class:`ShardedEdgeStream`
+    is live on the same manifest is not supported — reopen after growing.
+
+    Returns the manifest path.
+    """
+    mpath, meta = read_manifest(manifest)
+    root = mpath.parent
+    src = np.ascontiguousarray(src, np.int32)
+    dst = np.ascontiguousarray(dst, np.int32)
+    if src.ndim != 1 or src.shape != dst.shape:
+        raise ValueError("src/dst must be equal-length 1-D arrays")
+    ex = [np.ascontiguousarray(e) for e in extras]
+    fields = meta["fields"]
+    if len(ex) != len(fields) - 2:
+        raise ValueError(
+            f"manifest has {len(fields) - 2} extra fields, got {len(ex)}")
+    arrays = [src, dst, *ex]
+    for f, arr in zip(fields, arrays):
+        if arr.shape[:1] != src.shape:
+            raise ValueError("extra array length != n_edges")
+        if str(arr.dtype) != f["dtype"] or list(arr.shape[1:]) != f["shape"]:
+            raise ValueError(
+                f"field {f['name']!r} expects dtype {f['dtype']} shape "
+                f"{f['shape']}, got {arr.dtype} {list(arr.shape[1:])}")
+    names = [f["name"] for f in fields]
+    se = int(meta["shard_edges"])
+    n_new = int(src.shape[0])
+    shard_rows = list(meta["shards"])
+
+    consumed = 0
+    if n_new and shard_rows and shard_rows[-1]["n_edges"] < se:
+        tail = dict(shard_rows[-1])
+        take = min(se - tail["n_edges"], n_new)
+        for name, arr in zip(names, arrays):
+            fpath = root / tail["files"][name]
+            # slice to the manifest-recorded length: after a crash in the
+            # window between tail replacement and manifest commit, the
+            # file holds extra (uncommitted) rows that must not survive
+            # into a retried append
+            old = np.load(fpath)[: tail["n_edges"]]
+            combined = np.concatenate([old, arr[:take]])
+            tmp = fpath.with_name("tmp-" + fpath.name)  # keep the .npy suffix
+            np.save(tmp, combined)                      # (np.save appends it)
+            os.replace(tmp, fpath)
+        tail["n_edges"] += take
+        shard_rows[-1] = tail
+        consumed = take
+    next_off = (shard_rows[-1]["offset"] + shard_rows[-1]["n_edges"]
+                if shard_rows else 0)
+    sid = len(shard_rows)
+    for lo in range(consumed, n_new, se):
+        hi = min(lo + se, n_new)
+        files = {}
+        for name, arr in zip(names, arrays):
+            fname = f"shard_{sid:05d}.{name}.npy"
+            np.save(root / fname, arr[lo:hi])
+            files[name] = fname
+        shard_rows.append({"id": sid, "offset": next_off, "n_edges": hi - lo,
+                           "files": files})
+        next_off += hi - lo
+        sid += 1
+
+    n_vertices = int(meta["n_vertices"])
+    if n_new:
+        n_vertices = max(n_vertices, int(max(src.max(), dst.max())) + 1)
+    meta = dict(meta, n_edges=int(meta["n_edges"]) + n_new,
+                n_vertices=n_vertices, shards=shard_rows)
+    tmp = mpath.with_suffix(".json.tmp")
+    tmp.write_text(json.dumps(meta, indent=1))
+    os.replace(tmp, mpath)
     return mpath
 
 

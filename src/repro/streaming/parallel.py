@@ -189,6 +189,7 @@ def run_parallel(
     shard: str = "range",
     backend: str | None = None,
     mesh=None,
+    carry=None,
 ):
     """Drive ``pc`` over ``stream`` with S-way parallel ingest.
 
@@ -197,19 +198,22 @@ def run_parallel(
     ``super_chunk`` is the number of rounds (chunks per sub-stream)
     between carry merges — smaller means fresher cross-worker state,
     larger means less communication.  ``num_streams=1`` delegates to the
-    sequential driver and is bit-identical to it.
+    sequential driver and is bit-identical to it.  ``carry`` seeds the
+    drive from a restored carry instead of ``pc.init()`` (the warm-start
+    replay of ``repro.incremental``) — it becomes the first merge base,
+    so SUM fields never double-count the restored state.
     """
     if num_streams < 1:
         raise ValueError("num_streams must be >= 1")
     if super_chunk < 1:
         raise ValueError("super_chunk must be >= 1")
     if num_streams == 1 or stream.n_chunks <= 1:
-        return run_carry(stream, pc, *extras)
+        return run_carry(stream, pc, *extras, carry=carry)
 
     ps = ParallelEdgeStream(stream, num_streams, shard=shard)
     S = ps.num_streams
     backend = _resolve_backend(backend, S)
-    base = pc.init()
+    base = pc.init() if carry is None else carry
     parts_by_chunk: dict[int, jax.Array] = {}
 
     if backend == "vmap":

@@ -1,0 +1,523 @@
+"""Incremental re-partitioning subsystem: store, deltas, drift, refinement.
+
+Layers:
+
+1. *CarryStore* — save→restore is bit-identical for every PartitionerCarry
+   implementation in the repo (hypothesis-gated fuzz + seeded fallback,
+   matching tests/test_carry.py); corrupted (CRC-mismatched), config-hash-
+   mismatched, wrong-consumer, stale-position and structure-mismatched
+   checkpoints all **raise** instead of silently loading; keep-N GC.
+2. *Warm == cold* — for the composition-exact consumers (degree, Θ sketch,
+   Alg. 1 clustering, greedy, grid, Alg. 3 placement) a warm-start replay
+   of the delta reproduces the cold run over prefix+delta **bit-
+   identically** (carry and emitted parts).
+3. *Golden anchor* — resuming a saved carry and replaying an *empty* delta
+   reproduces the sequential golden hashes of tests/test_streaming.py.
+4. *Shard append* — append(prefix)+append(delta) streams bit-identically
+   to a one-shot write of the concatenation.
+5. *Pipeline quality anchor* — on the community fixture, a 10 % delta with
+   drift-triggered refinement lands within 5 % of the cold re-run's RF
+   while replaying < 25 % of the folds a cold run costs.
+6. *CLI e2e* — --save-carry / --resume-carry / --delta, including a
+   ``file:`` OOC stream grown via shard append.  Slow lane: a larger
+   two-delta drift/refinement band on R-MAT.
+"""
+
+import hashlib
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from proptest import random_graph
+from test_carry import _fold_random, _make_carry_impls, _tree_equal
+from repro.core import S5PConfig, replication_factor, s5p_partition
+from repro.core.baselines import greedy_partition, grid_partition
+from repro.core.clustering import ClusterCarry, DegreeCarry, compute_degrees
+from repro.core.cms import SketchCarry
+from repro.core.game import GameInputs, run_game
+from repro.core.postprocess import AssignCarry
+from repro.incremental import (
+    CarryMismatchError,
+    CarryStore,
+    DeltaStream,
+    cold_start,
+    grow_carry,
+    run_incremental,
+    run_incremental_carry,
+)
+from repro.streaming import (
+    EdgeStream,
+    ShardedEdgeStream,
+    append_shards,
+    run_carry,
+    run_parallel,
+    write_shards,
+)
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st_
+
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+K = 4
+
+CARRY_NAMES = sorted(_make_carry_impls(8).keys())
+
+
+def _h(a) -> str:
+    return hashlib.sha256(
+        np.ascontiguousarray(np.asarray(a)).tobytes()).hexdigest()[:16]
+
+
+def _roundtrip(name, seed, n, tmp_path):
+    pc, n_extras = _make_carry_impls(n)[name]
+    rng = np.random.default_rng(seed)
+    carry = _fold_random(pc, n_extras, n, rng)
+    store = CarryStore(tmp_path / f"{name}-{seed}-{n}")
+    store.save(carry, consumer=name, config={"n": n, "k": K},
+               stream_pos=34)
+    got, meta = store.load(like=pc.init(), consumer=name,
+                           config={"n": n, "k": K})
+    assert meta["stream_pos"] == 34
+    assert _tree_equal(got, carry), name
+    # dtypes survive too (bool bitmaps, uint32 sketch tables, f32 λ)
+    for a, b in zip(jax.tree_util.tree_leaves(got),
+                    jax.tree_util.tree_leaves(carry)):
+        assert np.asarray(a).dtype == np.asarray(b).dtype, name
+
+
+# ======================================================== 1. CarryStore
+@pytest.mark.parametrize("name", CARRY_NAMES)
+def test_store_roundtrip_bitwise(name, tmp_path):
+    _roundtrip(name, 0, 23, tmp_path)
+
+
+if HAVE_HYPOTHESIS:
+
+    @settings(max_examples=15, deadline=None)
+    @given(name=st_.sampled_from(CARRY_NAMES), seed=st_.integers(0, 255),
+           n=st_.integers(2, 48))
+    def test_store_roundtrip_fuzzed(name, seed, n, tmp_path_factory):
+        _roundtrip(name, seed, n,
+                   tmp_path_factory.mktemp("fuzz"))
+
+else:
+
+    @pytest.mark.parametrize("seed", [1, 2, 3])
+    def test_store_roundtrip_seeded(seed, tmp_path):
+        for name in CARRY_NAMES:
+            _roundtrip(name, seed, 7 + 5 * seed, tmp_path)
+
+
+def test_store_rejects_corruption(tmp_path):
+    """A bit-flipped array fails the CRC verify instead of loading."""
+    pc, _ = _make_carry_impls(16)["degree"]
+    carry = _fold_random(pc, 0, 16, np.random.default_rng(0))
+    store = CarryStore(tmp_path)
+    path = store.save(carry, consumer="degree", config={}, stream_pos=34)
+    npz = path / "arrays.npz"
+    with np.load(npz) as z:
+        arrays = {k: z[k].copy() for k in z.files}
+    key = next(k for k in arrays if k != "meta")
+    arrays[key].flat[0] += 1  # corrupt one count
+    np.savez(npz, **arrays)
+    with pytest.raises(IOError, match="corruption"):
+        store.load(like=pc.init())
+
+
+def test_store_rejects_mismatches(tmp_path):
+    pc, _ = _make_carry_impls(16)["degree"]
+    carry = _fold_random(pc, 0, 16, np.random.default_rng(0))
+    store = CarryStore(tmp_path)
+    store.save(carry, consumer="degree", config={"k": 4}, stream_pos=34)
+    with pytest.raises(CarryMismatchError, match="consumer"):
+        store.load(like=pc.init(), consumer="hdrf")
+    with pytest.raises(CarryMismatchError, match="fingerprint"):
+        store.load(like=pc.init(), config={"k": 8})
+    with pytest.raises(CarryMismatchError, match="stream position"):
+        store.load(like=pc.init(), max_stream_pos=33)
+    # structural drift: a different consumer's treedef cannot assemble
+    other, _ = _make_carry_impls(16)["hdrf"]
+    with pytest.raises(CarryMismatchError, match="structure"):
+        store.load(like=other.init())
+    # matching everything loads fine
+    got, _ = store.load(like=pc.init(), consumer="degree", config={"k": 4},
+                        max_stream_pos=34)
+    assert _tree_equal(got, carry)
+
+
+def test_store_mid_stream_checkpoint_fallback(tmp_path):
+    """A bounded load falls back to the furthest checkpoint that fits the
+    stream instead of raising on the (too-new) latest one."""
+    pc, _ = _make_carry_impls(8)["degree"]
+    store = CarryStore(tmp_path)
+    rng = np.random.default_rng(0)
+    mid = _fold_random(pc, 0, 8, rng)
+    store.save(mid, consumer="degree", config={}, stream_pos=10)
+    store.save(_fold_random(pc, 0, 8, rng), consumer="degree", config={},
+               stream_pos=20)
+    got, meta = store.load(like=pc.init(), max_stream_pos=15)
+    assert meta["stream_pos"] == 10
+    assert _tree_equal(got, mid)
+    with pytest.raises(CarryMismatchError, match="stream position"):
+        store.load(like=pc.init(), max_stream_pos=5)  # nothing fits
+
+
+def test_store_keep_n_gc_and_latest(tmp_path):
+    pc, _ = _make_carry_impls(8)["degree"]
+    store = CarryStore(tmp_path, keep=2)
+    rng = np.random.default_rng(0)
+    last = None
+    for pos in (10, 20, 30, 40):
+        last = _fold_random(pc, 0, 8, rng)
+        store.save(last, consumer="degree", config={}, stream_pos=pos)
+    assert store.steps() == [30, 40]  # keep-N dropped the oldest
+    got, meta = store.load(like=pc.init())
+    assert meta["stream_pos"] == 40  # latest = furthest-ingested
+    assert _tree_equal(got, last)
+
+
+# ================================================== 2. warm == cold
+# consumers whose padding self-loops are complete no-ops compose exactly;
+# hdrf is deliberately absent (padding feeds its partial degrees — the
+# documented approximately-incremental case)
+EXACT = ["degree", "sketch", "cluster", "greedy", "grid", "assign"]
+
+
+@pytest.mark.parametrize("name", EXACT)
+@pytest.mark.parametrize("graph_seed", [0, 1])
+def test_warm_start_equals_cold_bitwise(name, graph_seed, tmp_path):
+    src, dst, n, _ = random_graph(graph_seed)
+    E = len(src)
+    if E < 8:
+        pytest.skip("graph too small to split")
+    E0 = int(E * 0.7)
+    pc, n_extras = _make_carry_impls(n)[name]
+    extras = ()
+    if n_extras:
+        rng = np.random.default_rng(0)
+        extras = (rng.integers(0, 2, E).astype(bool),
+                  rng.integers(0, 8, E).astype(np.int32),
+                  rng.integers(0, 8, E).astype(np.int32))
+    pre_extras = tuple(e[:E0] for e in extras)
+    d_extras = tuple(e[E0:] for e in extras)
+
+    cs = 13  # deliberately unaligned with E0: padding sits mid-stream
+    pre_parts, pre = run_carry(
+        EdgeStream(src[:E0], dst[:E0], n, chunk_size=cs), pc, *pre_extras)
+    store = CarryStore(tmp_path / name)
+    store.save(pre, consumer=name, config={"n": n}, stream_pos=E0)
+    restored, _ = store.load(like=pc.init(), consumer=name,
+                             config={"n": n}, max_stream_pos=E)
+    warm_parts, warm = run_incremental_carry(
+        DeltaStream(src[E0:], dst[E0:], n, base_offset=E0, chunk_size=cs),
+        pc, *d_extras, carry=restored)
+    cold_parts, cold = run_carry(
+        EdgeStream(src, dst, n, chunk_size=cs), pc, *extras)
+    assert _tree_equal(warm, cold), name
+    if cold_parts is not None:
+        joined = np.concatenate([np.asarray(pre_parts),
+                                 np.asarray(warm_parts)])
+        assert np.array_equal(joined, np.asarray(cold_parts)), name
+
+
+def test_warm_start_parallel_ingest_linear_carries(tmp_path):
+    """run_parallel(carry=...) warm-starts exactly for SUM-only carries:
+    the restored carry is the merge base, so any S agrees with cold."""
+    src, dst, n, _ = random_graph(2)
+    E = len(src)
+    E0 = int(E * 0.6)
+    ref = np.asarray(compute_degrees(jnp.asarray(src), jnp.asarray(dst), n))
+    _, pre = run_carry(EdgeStream(src[:E0], dst[:E0], n, chunk_size=17),
+                       DegreeCarry(n))
+    for S in (1, 2, 4):
+        _, warm = run_parallel(
+            DeltaStream(src[E0:], dst[E0:], n, chunk_size=17),
+            DegreeCarry(n), num_streams=S, super_chunk=2,
+            backend="threads" if S > 1 else None, carry=pre)
+        assert np.array_equal(np.asarray(warm), ref), S
+
+
+def test_grow_carry_extends_by_identity():
+    """Growing then folding == folding at the larger vertex count from
+    scratch (the grown rows are the identity; grid's hash tables are
+    per-vertex, so the old prefix is reproduced)."""
+    src, dst, n, _ = random_graph(1)
+    n_big = n + 13
+    for name in ("greedy", "hdrf", "grid", "cluster", "degree"):
+        pc_small, _ = _make_carry_impls(n)[name]
+        pc_big, _ = _make_carry_impls(n_big)[name]
+        grown = grow_carry(name, pc_small.init(), n, n_big, k=K)
+        if name == "grid":
+            # test fixture's grid uses custom row/col tables; only check
+            # the real CLI construction (hash tables) via the driver tests
+            continue
+        assert _tree_equal(grown, pc_big.init()), name
+
+
+# ==================================================== 3. golden anchor
+# sha256[:16] golden hashes from tests/test_streaming.py: resuming a
+# saved carry and replaying an EMPTY delta must reproduce them exactly
+GOLDEN_EMPTY = {
+    (0, "hdrf"): "b4ebed498be31d51",
+    (1, "hdrf"): "dd6c23e3a17a526d",
+    (0, "greedy"): "97490d30834620fa",
+    (1, "greedy"): "ef351eb5d7f38e6e",
+    (0, "s5p"): "5c2abcabc60d546d",
+    (1, "s5p"): "173c8ab805ce8473",
+}
+
+
+@pytest.mark.parametrize("seed", [0, 1])
+@pytest.mark.parametrize("name", ["greedy", "hdrf"])
+def test_empty_delta_reproduces_goldens_scans(seed, name, tmp_path):
+    src, dst, n, _ = random_graph(seed)
+    store = tmp_path / name
+    cold_start(store, name, src, dst, n, K)
+    res = run_incremental(store, name, src, dst, n, K, save=False)
+    assert res.n_delta_edges == 0 and res.edges_replayed == 0
+    assert _h(res.parts) == GOLDEN_EMPTY[(seed, name)]
+
+
+@pytest.mark.parametrize("seed", [0, 1])
+def test_empty_delta_reproduces_goldens_s5p(seed, tmp_path):
+    src, dst, n, _ = random_graph(seed)
+    # pin the seed-era game parameters, exactly as test_streaming does
+    cfg = S5PConfig(k=K, use_cms=False, game_accept_prob=0.7,
+                    game_max_rounds=64, seed=0)
+    store = tmp_path / "s5p"
+    cold_start(store, "s5p", src, dst, n, K, s5p_config=cfg)
+    res = run_incremental(store, "s5p", src, dst, n, K, s5p_config=cfg,
+                          save=False)
+    assert res.n_delta_edges == 0 and not res.refined
+    assert _h(res.parts) == GOLDEN_EMPTY[(seed, "s5p")]
+
+
+# ===================================================== 4. shard append
+@pytest.mark.parametrize("shard_edges", [16, 64])
+def test_append_shards_parity(shard_edges, tmp_path):
+    """append(prefix)+append(delta) == one-shot write(prefix+delta):
+    same manifest geometry, bit-identical chunks, same partitions."""
+    src, dst, n, _ = random_graph(3)
+    E = len(src)
+    cut1, cut2 = int(E * 0.5), int(E * 0.8)
+
+    one = write_shards(tmp_path / "one", src, dst, shard_edges=shard_edges,
+                       n_vertices=n)
+    grown = write_shards(tmp_path / "grown", src[:cut1], dst[:cut1],
+                         shard_edges=shard_edges, n_vertices=n)
+    append_shards(grown, src[cut1:cut2], dst[cut1:cut2])
+    append_shards(grown, src[cut2:], dst[cut2:])
+
+    import json
+    m1 = json.loads(one.read_text())
+    m2 = json.loads(grown.read_text())
+    assert m1["n_edges"] == m2["n_edges"] == E
+    assert [s["n_edges"] for s in m1["shards"]] == \
+           [s["n_edges"] for s in m2["shards"]]
+    for ordering in ("natural", "dst-sorted"):
+        with ShardedEdgeStream(one, chunk_size=23, ordering=ordering) as a, \
+             ShardedEdgeStream(grown, chunk_size=23, ordering=ordering) as b:
+            for ca, cb in zip(a.chunks(), b.chunks()):
+                assert np.array_equal(np.asarray(ca.src), np.asarray(cb.src))
+                assert np.array_equal(np.asarray(ca.dst), np.asarray(cb.dst))
+                assert ca.n_valid == cb.n_valid
+    # and a partitioner fed from the grown directory matches in-memory
+    with ShardedEdgeStream(grown, chunk_size=64) as st:
+        from_disk = np.asarray(greedy_partition(src, dst, n, K, stream=st))
+    assert np.array_equal(from_disk,
+                          np.asarray(greedy_partition(src, dst, n, K,
+                                                      chunk_size=64)))
+
+
+def test_append_shards_validates_fields(tmp_path):
+    src, dst, n, _ = random_graph(0)
+    w = np.ones(len(src), np.float32)
+    man = write_shards(tmp_path, src, dst, w, shard_edges=32,
+                       field_names=["w"])
+    with pytest.raises(ValueError, match="extra fields"):
+        append_shards(man, src[:5], dst[:5])  # missing the w field
+    with pytest.raises(ValueError, match="dtype"):
+        append_shards(man, src[:5], dst[:5], np.ones(5, np.int64))
+    with pytest.raises(ValueError, match="equal-length"):
+        append_shards(man, src[:5], dst[:4], w[:5])
+    # a valid append with extras works and grows the field
+    append_shards(man, src[:5], dst[:5], w[:5])
+    with ShardedEdgeStream(man) as st:
+        assert st.n_edges == len(src) + 5
+        fv = st.open_field("w")
+        assert fv.shape[0] == len(src) + 5
+
+
+# =========================================== 5. pipeline quality anchor
+def test_incremental_s5p_quality_anchor(tmp_path):
+    """10 % delta + drift-triggered refinement: RF within 5 % of the cold
+    full re-run while replaying < 25 % of the folds a cold run costs."""
+    from repro.graphs.generators import community_graph
+
+    src, dst, n = community_graph(1200, n_communities=24, avg_degree=8,
+                                  seed=5)
+    E = len(src)
+    E0 = int(E * 0.9)
+    k = 8
+    cfg = S5PConfig(k=k, use_cms=False, chunk_size=512,
+                    drift_rf_threshold=0.0, refine_rounds=16)
+    store = tmp_path / "s5p"
+    cold_start(store, "s5p", src[:E0], dst[:E0], n, k, s5p_config=cfg)
+    res = run_incremental(store, "s5p", src, dst, n, k, s5p_config=cfg,
+                          save=False)
+    assert res.refined  # threshold 0 ⇒ the delta triggers the game
+    assert res.n_delta_edges == E - E0
+    p = res.parts
+    valid = src != dst
+    assert p.shape == src.shape
+    assert np.all(p[valid] >= 0) and np.all(p[valid] < k)
+    assert np.all(p[~valid] == -1)
+    # the paper-claim comparison: cold full re-run on prefix+delta
+    cold = s5p_partition(src, dst, n, cfg)
+    rf_cold = replication_factor(src, dst, cold.parts, n_vertices=n, k=k)
+    assert res.rf <= rf_cold * 1.05, (res.rf, rf_cold)
+    assert res.replay_fraction < 0.25, res.replay_fraction
+
+
+def test_masked_game_freezes_non_movers():
+    """move_mask semantics: frozen clusters keep their assignment exactly;
+    movable ones reach a constrained equilibrium."""
+    rng = np.random.default_rng(0)
+    C, k = 40, 4
+    sizes = rng.uniform(1, 10, C).astype(np.float32)
+    pa, pb = np.triu_indices(C, 1)
+    keep = rng.random(pa.size) < 0.2
+    pa, pb = pa[keep].astype(np.int32), pb[keep].astype(np.int32)
+    pw = rng.uniform(0.5, 3.0, pa.size).astype(np.float32)
+    inputs = GameInputs(sizes=jnp.asarray(sizes), pair_a=jnp.asarray(pa),
+                        pair_b=jnp.asarray(pb), pair_w=jnp.asarray(pw),
+                        n_head=10, k=k)
+    assign0 = (np.arange(C) % k).astype(np.int32)
+    move = np.zeros(C, bool)
+    move[::3] = True
+    res = run_game(inputs, C, assign0=assign0, max_rounds=16,
+                   leader_mask=np.arange(C) < 10, move_mask=move)
+    out = np.asarray(res.assignment)
+    assert np.array_equal(out[~move], assign0[~move])
+    assert np.all((out >= 0) & (out < k))
+    # all-frozen game is a no-op that converges immediately
+    res0 = run_game(inputs, C, assign0=assign0, max_rounds=16,
+                    leader_mask=np.arange(C) < 10,
+                    move_mask=np.zeros(C, bool))
+    assert np.array_equal(np.asarray(res0.assignment), assign0)
+    assert bool(res0.converged)
+
+
+# ============================================================ 6. CLI e2e
+def test_incremental_cli_e2e_ooc_append(tmp_path):
+    """--save-carry / --resume-carry against a file: stream grown via
+    shard append, end to end through the CLI's run()."""
+    from repro.launch import partition as cli
+
+    g = tmp_path / "g"
+    store = tmp_path / "carry"
+    cli.write_shards_cli("rmat:9", str(g), 2048)
+    rows = cli.run(f"file:{g}/manifest.json", K, "hdrf",
+                   chunk_size=1024, save_carry=str(store))
+    assert rows[0][0] == "hdrf"
+    cli.write_shards_cli("rmat:8", str(g), 2048, append=True)
+    res = cli.run(f"file:{g}/manifest.json", K, "hdrf",
+                  chunk_size=1024, resume_carry=str(store))
+    assert res.n_delta_edges > 0
+    p, (src, dst) = res.parts, ShardedEdgeStream(
+        g / "manifest.json").arrival_arrays()
+    valid = src != dst
+    assert p.shape == src.shape
+    assert np.all(p[valid] >= 0) and np.all(p[valid] < K)
+    # the grown bundle was persisted: resuming again sees an empty delta
+    res2 = cli.run(f"file:{g}/manifest.json", K, "hdrf",
+                   chunk_size=1024, resume_carry=str(store))
+    assert res2.n_delta_edges == 0
+    assert np.array_equal(res2.parts, res.parts)
+
+
+def test_incremental_cli_delta_spec_and_validation(tmp_path):
+    from repro.launch import partition as cli
+
+    store = tmp_path / "carry"
+    cli.run("toy", K, "greedy", save_carry=str(store))
+    res = cli.run("toy", K, "greedy", resume_carry=str(store),
+                  delta="rmat:5")
+    assert res.n_delta_edges > 0
+    with pytest.raises(ValueError, match="single --partitioner"):
+        cli.run("toy", K, "greedy", compare=True, save_carry=str(store))
+    with pytest.raises(ValueError, match="resume-carry"):
+        cli.run("toy", K, "greedy", delta="rmat:5")
+    with pytest.raises(ValueError, match="natural"):
+        cli.run("toy", K, "greedy", ordering="shuffled",
+                save_carry=str(store))
+    with pytest.raises(ValueError, match="incremental bundle"):
+        cli.run("toy", K, "hash", save_carry=str(tmp_path / "x"))
+    # config fingerprint guards the resume (different k)
+    with pytest.raises(CarryMismatchError):
+        cli.run("toy", 8, "greedy", resume_carry=str(store))
+
+
+def test_foreign_stream_rejected_by_prefix_crc(tmp_path):
+    """config + position alone would admit any longer stream; the prefix
+    CRC in the carry metadata catches a same-config foreign graph."""
+    src, dst, n, _ = random_graph(0)
+    store = tmp_path / "c"
+    cold_start(store, "greedy", src, dst, n, K)
+    other = np.array(src, np.int32)
+    other[0] = (other[0] + 1) % n  # same length, different first edge
+    full_src = np.concatenate([other, src[:3]])
+    full_dst = np.concatenate([np.asarray(dst, np.int32), dst[:3]])
+    with pytest.raises(CarryMismatchError, match="foreign"):
+        run_incremental(store, "greedy", full_src, full_dst, n, K,
+                        save=False)
+
+
+def test_bench_discovery_only_accepts_full_names():
+    from benchmarks.run import _module_names, discover
+
+    names = _module_names()
+    assert "incremental_bench" in names
+    mods, broken = discover("incremental_bench")
+    assert not broken and list(mods) == ["incremental"]
+    mods2, _ = discover("incremental")
+    assert list(mods2) == ["incremental"]
+    assert discover("no-such-bench") == ({}, [])
+
+
+# ====================================== slow lane: larger drift band
+@pytest.mark.slow
+def test_incremental_drift_quality_band_large(tmp_path):
+    """Two successive 10 % deltas on a skewed R-MAT stream: the second
+    resume replays only its own delta, cumulative drift stays inside the
+    refinement band, and total replay stays ≪ two cold re-runs."""
+    from repro.graphs import rmat_graph
+
+    src, dst, n = rmat_graph(13, edge_factor=8, seed=11)
+    src, dst = np.asarray(src, np.int32), np.asarray(dst, np.int32)
+    E = len(src)
+    c1, c2 = int(E * 0.8), int(E * 0.9)
+    k = 8
+    cfg = S5PConfig(k=k, chunk_size=1 << 14, drift_rf_threshold=0.02,
+                    refine_rounds=16)
+    store = tmp_path / "s5p"
+    cold_start(store, "s5p", src[:c1], dst[:c1], n, k, s5p_config=cfg)
+    r1 = run_incremental(store, "s5p", src[:c2], dst[:c2], n, k,
+                         s5p_config=cfg)
+    r2 = run_incremental(store, "s5p", src, dst, n, k, s5p_config=cfg,
+                         save=False)
+    assert r2.n_delta_edges == E - c2  # only the new suffix replayed
+    cold = s5p_partition(src, dst, n, cfg)
+    rf_cold = replication_factor(src, dst, cold.parts, n_vertices=n, k=k)
+    # cumulative band: two warm hops stay within 10 % of one cold run
+    assert r2.rf <= rf_cold * 1.10, (r1.rf, r2.rf, rf_cold)
+    assert r1.replay_fraction < 0.25 and r2.replay_fraction < 0.25
+    valid = src != dst
+    p = r2.parts
+    assert np.all(p[valid] >= 0) and np.all(p[valid] < k)
