@@ -1,0 +1,82 @@
+"""Churn study: sliding-window S5P vs cold re-partition of the window.
+
+The decremental-carry question: when a partitioner tracks the *last W
+edges* of an R-MAT stream (insert a step batch, expire the oldest,
+drift-triggered masked refinement in between), how much replication-
+factor quality does the continuously-maintained partition give up against
+re-running S5P cold on exactly the live window — and what does a churn
+step cost relative to that cold run?
+
+Churn rate = step/W: each event replaces that fraction of the window.
+Higher rates stress the approximate parts of the retraction (cluster
+volumes subtract at current clusters; ξ/κ stay frozen) harder per step.
+
+Rows: ``churn/s5p/w<W>/r<rate>`` with derived
+``rf_warm=<mean-over-steady-steps> rf_cold=<cold-on-final-window>
+ratio=<warm/cold> refined=<n> rolled=<n> compacted=<n> cold_restart=<n>``
+plus a per-step wall-clock column.  The quality acceptance band
+(ratio ≤ 1.10) is pinned by the slow-lane ``test_sliding_window_quality``
+in tests/test_window.py; timings on this container are load-noisy.
+"""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core import S5PConfig, replication_factor, s5p_partition
+from repro.graphs import rmat_graph
+from repro.incremental import s5p_sliding_window
+
+from . import common
+
+
+def _bench_rate(src, dst, n, k, W, step, cfg):
+    t0 = time.perf_counter()
+    hist, bundle = s5p_sliding_window(src, dst, n, cfg, W, step_edges=step)
+    t_warm = time.perf_counter() - t0
+    # steady state: windows at full width (skip the fill-up prefix)
+    steady = [h for h in hist
+              if h.hi - h.lo == W and not h.filling] or hist[-1:]
+    rf_warm = float(np.mean([h.rf for h in steady]))
+    last = hist[-1]
+    ws, wd = src[last.lo:last.hi], dst[last.lo:last.hi]
+    t0 = time.perf_counter()
+    cold = s5p_partition(ws, wd, n, cfg)
+    t_cold = time.perf_counter() - t0
+    rf_cold = float(replication_factor(ws, wd, cold.parts,
+                                       n_vertices=n, k=k))
+    rf_final = float(last.rf)
+    common.emit(
+        f"churn/s5p/w{W}/r{step / W:.2f}",
+        t_warm / max(len(hist), 1) * 1e6,  # µs per churn step
+        f"rf_warm={rf_warm:.3f} rf_final={rf_final:.3f} "
+        f"rf_cold={rf_cold:.3f} ratio={rf_warm / max(rf_cold, 1e-9):.3f} "
+        f"ratio_final={rf_final / max(rf_cold, 1e-9):.3f} "
+        f"steps={len(hist)} refined={sum(h.refined for h in hist)} "
+        f"rolled={sum(h.rolled_back for h in hist)} "
+        f"compacted={sum(h.n_compacted for h in hist)} "
+        f"cold_restart={sum(h.needs_cold_restart for h in hist)} "
+        f"t_cold={t_cold:.1f}s",
+    )
+
+
+def run(quick: bool = True) -> None:
+    scale = 12 if quick else 15
+    k = 8
+    src, dst, n = rmat_graph(scale, edge_factor=8, seed=11)
+    src = np.asarray(src, np.int32)
+    dst = np.asarray(dst, np.int32)
+    E = len(src)
+    W = E // 2
+    cfg = S5PConfig(k=k, chunk_size=1 << 16, drift_rf_threshold=0.02,
+                    drift_churn_threshold=0.20, refine_rounds=16)
+    common.emit(f"churn/graph/rmat{scale}", 0.0, f"E={E} V={n} W={W}")
+    rates = (0.125, 0.25) if quick else (0.0625, 0.125, 0.25, 0.5)
+    for rate in rates:
+        _bench_rate(src, dst, n, k, W, max(int(W * rate), 1), cfg)
+
+
+if __name__ == "__main__":
+    run(quick=True)

@@ -2,8 +2,11 @@
 
 All are single-pass streaming partitioners over the same edge-stream
 contract as S5P.  Scoring/sequential ones (Greedy, HDRF, Grid) run as
-jitted ``lax.scan`` with O(k|V|) carry (the replica bitmap — the same
-asymptotics as their reference C++ implementations).  Hash/DBH are
+jitted ``lax.scan`` with O(k|V|) carry (the counted replica table — the
+same asymptotics as their reference C++ implementations' bitmaps; the
+int32 counters OR-project for scoring, identically, and additionally
+support exact edge deletion via ``retract_chunk`` — see
+``repro.kernels.stream_scan`` and ``repro.incremental``).  Hash/DBH are
 one-shot vectorized.
 
 - Hash:   p = h(eid) mod k                                    [random]

@@ -15,9 +15,24 @@ early-exit branches becomes a ``jax.lax.scan`` with branchless
 ``jnp.where`` state transitions.  The carry is strictly O(|V|):
 two V2C tables, two volume arrays (≤ |V| + 1 slots each; the trailing slot
 is a write sink for masked updates), one local-degree array, two id
-counters.  The state transitions are bit-identical to the sequential
-algorithm — ``tests/test_clustering.py`` checks the scan against a
-pure-Python transcription of Algorithm 1 on randomized streams.
+counters — plus, since the decremental refactor, two **membership
+counters** (head/tail edge incidences per vertex; a vertex's assignment
+projects to "unassigned" when its counter returns to 0 — counted
+tombstones) and the head **allocation contribution** (the global degree
+added to ``vol_h`` when the vertex was allocated, so orphaning a head
+vertex can subtract exactly what its allocation added).  The insert-path
+state transitions are bit-identical to the sequential algorithm —
+``tests/test_clustering.py`` checks the scan against a pure-Python
+transcription of Algorithm 1 on randomized streams.
+
+Deletion (:meth:`ClusterCarry.retract_chunk`) is the documented
+*approximate* retraction: membership counters and local degrees subtract
+exactly, tail volumes subtract at the vertex's **current** cluster, and a
+head vertex whose counter hits 0 hands back its allocation contribution —
+but migrations are history-dependent, so volumes drift boundedly under
+churn.  The drift monitor + masked-game refinement of
+``repro.incremental`` are the quality backstop, exactly as for warm-start
+insertion replay.
 
 Global degrees come from a one-pass precompute (same contract as 2PS-L;
 the paper's head-cluster volume updates explicitly use global degrees).
@@ -32,7 +47,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from ..streaming.carry import MAX, SUM, PartitionerCarry
+from ..streaming.carry import COUNTED, SUM, PartitionerCarry
 
 __all__ = [
     "ClusterState",
@@ -41,6 +56,7 @@ __all__ = [
     "DegreeCarry",
     "init_state",
     "cluster_chunk",
+    "cluster_retract_chunk",
     "cluster_stream",
     "compact_clusters",
     "reference_cluster_python",
@@ -57,6 +73,24 @@ class ClusterState(NamedTuple):
     ld: jax.Array  # (V,) int32 streaming local degree
     next_h: jax.Array  # () int32 next head cluster id
     next_t: jax.Array  # () int32 next tail cluster id
+    cnt_h: jax.Array  # (V,) int32 counted head-edge incidences (membership)
+    cnt_t: jax.Array  # (V,) int32 counted tail-edge incidences (membership)
+    alloc_h: jax.Array  # (V,) int32 vol_h contribution added at allocation
+
+    def effective(self) -> tuple[jax.Array, jax.Array]:
+        """(v2c_h, v2c_t) with dead entries projected to ``-1``.
+
+        Dead = membership counter ≤ 0 (every incident edge deleted) or an
+        out-of-range id (the clamped resolution of a cross-worker merge
+        conflict).  On insert-only sequential streams the projection is
+        the identity on assigned entries — an assignment always arrives
+        with its first incidence — which is what keeps the golden hashes
+        unchanged.
+        """
+        ok_h = (self.cnt_h > 0) & (self.v2c_h >= 0) & (self.v2c_h < self.next_h)
+        ok_t = (self.cnt_t > 0) & (self.v2c_t >= 0) & (self.v2c_t < self.next_t)
+        return (jnp.where(ok_h, self.v2c_h, -1),
+                jnp.where(ok_t, self.v2c_t, -1))
 
 
 class ClusterResult(NamedTuple):
@@ -80,6 +114,9 @@ def init_state(n_vertices: int) -> ClusterState:
         ld=jnp.zeros((v,), jnp.int32),
         next_h=jnp.int32(0),
         next_t=jnp.int32(0),
+        cnt_h=jnp.zeros((v,), jnp.int32),
+        cnt_t=jnp.zeros((v,), jnp.int32),
+        alloc_h=jnp.zeros((v,), jnp.int32),
     )
 
 
@@ -114,6 +151,13 @@ def _edge_step(state: ClusterState, edge, *, degrees, xi, kappa, global_tail=Fal
     vol_h = vol_h.at[jnp.where(h_on & new_v, cv2, sink)].add(
         jnp.where(h_on & new_v, dv, 0)
     )
+    # counted membership + the allocation contribution deletions hand back
+    cnt_h = state.cnt_h
+    cnt_h = cnt_h.at[u].add(jnp.where(h_on, 1, 0))
+    cnt_h = cnt_h.at[v].add(jnp.where(h_on, 1, 0))
+    alloc_h = state.alloc_h
+    alloc_h = alloc_h.at[u].add(jnp.where(h_on & new_u, du, 0))
+    alloc_h = alloc_h.at[v].add(jnp.where(h_on & new_v, dv, 0))
     v2c_h = state.v2c_h
     v2c_h = v2c_h.at[u].set(jnp.where(h_on, cu2, v2c_h[u]))
     v2c_h = v2c_h.at[v].set(jnp.where(h_on, cv2, v2c_h[v]))
@@ -162,6 +206,9 @@ def _edge_step(state: ClusterState, edge, *, degrees, xi, kappa, global_tail=Fal
         ld = ld.at[v].add(jnp.where(t_on, 1, 0))
     v2c_t = state.v2c_t.at[u].set(jnp.where(t_on, tu2, state.v2c_t[u]))
     v2c_t = v2c_t.at[v].set(jnp.where(t_on, tv2, v2c_t[v]))
+    cnt_t = state.cnt_t
+    cnt_t = cnt_t.at[u].add(jnp.where(t_on, 1, 0))
+    cnt_t = cnt_t.at[v].add(jnp.where(t_on, 1, 0))
     # migration (lines 16-21): i = argmin vol; move ld(i) units
     tvu = vol_t[tu2]
     tvv = vol_t[tv2]
@@ -186,6 +233,9 @@ def _edge_step(state: ClusterState, edge, *, degrees, xi, kappa, global_tail=Fal
         ld=ld,
         next_h=next_h,
         next_t=next_t,
+        cnt_h=cnt_h,
+        cnt_t=cnt_t,
+        alloc_h=alloc_h,
     )
 
 
@@ -212,19 +262,110 @@ def cluster_chunk(
     return state
 
 
+def cluster_retract_chunk(
+    state: ClusterState,
+    src: jax.Array,
+    dst: jax.Array,
+    n_valid,
+    degrees: jax.Array | None = None,
+    *,
+    xi: int | None = None,
+    is_head: jax.Array | None = None,
+) -> ClusterState:
+    """Retract one chunk of **deleted** edges from the clustering carry.
+
+    Order-independent decremental accounting (no scan): membership
+    counters and streaming local degrees subtract exactly; tail volumes
+    subtract one unit per endpoint at the vertex's *current* tail cluster
+    (bounded staleness when the vertex migrated since insertion); a head
+    vertex orphaned by this chunk (counter reaches 0) hands its recorded
+    allocation contribution back to its current head cluster and resets
+    to unassigned, so a re-inserted head edge re-allocates it cleanly.
+
+    Head/tail classification: pass the per-edge ``is_head`` flags recorded
+    at insertion time when available (the S5P bundle stores them — the
+    retraction then mirrors exactly what insertion accounted), else the
+    frozen-ξ classification against ``degrees`` (which should be the
+    pre-deletion table so both sides see the same degrees).
+    """
+    if is_head is None:
+        if degrees is None or xi is None:
+            raise ValueError("need either is_head flags or (degrees, xi)")
+        is_head = (degrees[src] > xi) & (degrees[dst] > xi)
+    return _cluster_retract(state, src, dst, jnp.int32(n_valid),
+                            jnp.asarray(is_head))
+
+
+@jax.jit
+def _cluster_retract(state, src, dst, n_valid, is_head):
+    V = state.ld.shape[0]
+    sink = state.vol_h.shape[0] - 1
+    real = jnp.arange(src.shape[0]) < n_valid
+    valid = real & (src != dst)
+    h = (valid & is_head).astype(jnp.int32)
+    t = (valid & ~is_head).astype(jnp.int32)
+
+    cnt_h = state.cnt_h
+    cnt_h = cnt_h - jax.ops.segment_sum(h, src, num_segments=V)
+    cnt_h = cnt_h - jax.ops.segment_sum(h, dst, num_segments=V)
+    cnt_t = state.cnt_t
+    cnt_t = cnt_t - jax.ops.segment_sum(t, src, num_segments=V)
+    cnt_t = cnt_t - jax.ops.segment_sum(t, dst, num_segments=V)
+    ld = state.ld
+    ld = ld - jax.ops.segment_sum(t, src, num_segments=V)
+    ld = ld - jax.ops.segment_sum(t, dst, num_segments=V)
+
+    # tail volumes: one unit per endpoint at the current tail cluster
+    vol_t = state.vol_t
+    for vtx, w in ((src, t), (dst, t)):
+        c = state.v2c_t[vtx]
+        on = (w > 0) & (c >= 0)
+        vol_t = vol_t.at[jnp.where(on, c, sink)].add(-on.astype(jnp.int32))
+
+    # head orphans: hand back the allocation contribution, reset the id
+    orphan = (cnt_h <= 0) & (state.cnt_h > 0) & (state.v2c_h >= 0)
+    vol_h = state.vol_h.at[jnp.where(orphan, state.v2c_h, sink)].add(
+        jnp.where(orphan, -state.alloc_h, 0))
+    alloc_h = jnp.where(orphan, 0, state.alloc_h)
+    v2c_h = jnp.where(orphan, -1, state.v2c_h)
+    # tail orphans: volumes already subtracted per incidence — reset the id
+    orphan_t = (cnt_t <= 0) & (state.cnt_t > 0) & (state.v2c_t >= 0)
+    v2c_t = jnp.where(orphan_t, -1, state.v2c_t)
+
+    return ClusterState(
+        v2c_h=v2c_h, v2c_t=v2c_t, vol_h=vol_h, vol_t=vol_t, ld=ld,
+        next_h=state.next_h, next_t=state.next_t,
+        cnt_h=cnt_h, cnt_t=cnt_t, alloc_h=alloc_h,
+    )
+
+
 class ClusterCarry(PartitionerCarry):
     """Algorithm 1 as a :class:`~repro.streaming.carry.PartitionerCarry`.
 
-    Carry = :class:`ClusterState`.  Merge semantics for parallel ingest:
-    vertex→cluster tables and the id counters are monotone (``-1`` =
-    unassigned, so MAX prefers any assignment and resolves cross-worker
-    conflicts deterministically); cluster volumes and local degrees are
-    additive (SUM of per-worker deltas).  State-only — no per-edge parts.
+    Carry = :class:`ClusterState`.  Merge semantics for parallel ingest
+    are pure group ops: volumes, local degrees and the id counters are
+    additive (SUM of per-worker deltas against the shared merge base);
+    the vertex→cluster tables merge as SUM-of-transitions — when a single
+    worker reassigned a vertex the telescoped sum *is* that worker's
+    value (the overwhelmingly common case under chunk-range sharding);
+    membership counters are COUNTED.  When two workers concurrently
+    reassign the *same* vertex within one super-chunk the telescoped sum
+    is a fabricated id — out-of-range sums project to unassigned
+    (:meth:`ClusterState.effective`), in-range ones alias an unrelated
+    cluster.  Parallel cluster ingest has always been approximate by
+    design (the previous MAX resolution kept one worker's id while
+    *summing both workers' volume deltas*, an equally fictitious state);
+    the slow-lane 8-device band test pins the quality envelope, and the
+    group structure is what buys exact deletions everywhere else.
+    State-only — no per-edge parts.
     """
 
     emits_parts = False
-    # ClusterState leaf order: v2c_h, v2c_t, vol_h, vol_t, ld, next_h, next_t
-    merge_ops = (MAX, MAX, SUM, SUM, SUM, MAX, MAX)
+    supports_retract = True
+    retract_exact = False  # migrations are history-dependent (see module doc)
+    # ClusterState leaf order: v2c_h, v2c_t, vol_h, vol_t, ld, next_h,
+    # next_t, cnt_h, cnt_t, alloc_h
+    merge_ops = (SUM, SUM, SUM, SUM, SUM, SUM, SUM, COUNTED, COUNTED, SUM)
 
     def __init__(self, degrees: jax.Array, n_vertices: int, *, xi: int,
                  kappa: int, global_tail: bool = False):
@@ -243,6 +384,10 @@ class ClusterCarry(PartitionerCarry):
             global_tail=self.global_tail,
         ), None
 
+    def retract_chunk(self, carry, src, dst, n_valid, parts, *extras):
+        return cluster_retract_chunk(carry, src, dst, n_valid, self.degrees,
+                                     xi=self.xi)
+
 
 class DegreeCarry(PartitionerCarry):
     """One-pass global degree precompute as a carry (deg SUM; state-only).
@@ -252,6 +397,8 @@ class DegreeCarry(PartitionerCarry):
     them — padding entries must not)."""
 
     emits_parts = False
+    supports_retract = True
+    retract_exact = True
     merge_ops = (SUM,)
 
     def __init__(self, n_vertices: int):
@@ -262,6 +409,9 @@ class DegreeCarry(PartitionerCarry):
 
     def step_chunk(self, carry, src, dst, n_valid, *extras):
         return _degree_chunk(carry, src, dst, n_valid), None
+
+    def retract_chunk(self, carry, src, dst, n_valid, parts, *extras):
+        return carry - _degree_chunk(jnp.zeros_like(carry), src, dst, n_valid)
 
     def finalize(self, carry):
         return carry.astype(jnp.int32)
@@ -346,9 +496,12 @@ def compact_clusters(state: ClusterState, degrees: jax.Array, xi: int) -> Cluste
     Head clusters keep ids [0, n_head); tail clusters are shifted to
     [n_head, n_head + n_tail).  A vertex's *primary* cluster is its head
     cluster if it has one (head vertices lead), else its tail cluster.
+    Works on the counted projection, so vertices orphaned by deletions
+    (membership counter 0) drop out of the id space here.
     """
-    v2c_h = np.asarray(state.v2c_h)
-    v2c_t = np.asarray(state.v2c_t)
+    eff_h, eff_t = state.effective()
+    v2c_h = np.asarray(eff_h)
+    v2c_t = np.asarray(eff_t)
     deg = np.asarray(degrees)
 
     used_h = np.unique(v2c_h[v2c_h >= 0])

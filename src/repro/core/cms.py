@@ -12,6 +12,14 @@ arithmetic is uint32 and jit/vmap/scan-friendly.  The sketch is *mergeable*
 (element-wise sum), which is what lets the distributed pipeline combine
 per-shard sketches with a single ``psum`` (see core/distributed.py).
 
+Signed counting (the decremental refactor): the uint32 table is the group
+ℤ/2³² — :func:`cms_update` accepts **negative** counts (two's-complement
+wrap), so :func:`cms_retract` subtracts a deleted key's contribution
+exactly.  As long as retractions only remove previously-inserted keys,
+every cell's true value stays non-negative and point queries remain the
+usual one-sided overestimates; insert-only behaviour is bit-identical to
+the monotone sketch.
+
 A Pallas TPU kernel for the batched update/query hot loop lives in
 ``repro.kernels.cms_sketch``; this module is the reference implementation
 and the small-input path.
@@ -34,6 +42,7 @@ __all__ = [
     "make_sketch",
     "pair_key",
     "cms_update",
+    "cms_retract",
     "cms_query",
     "cms_merge",
     "suggest_params",
@@ -111,7 +120,10 @@ def _row_cols(keys: jax.Array, seeds: jax.Array, width: int) -> jax.Array:
 
 @partial(jax.jit, static_argnames=())
 def cms_update(sketch: CMSketch, keys: jax.Array, counts: jax.Array | None = None) -> CMSketch:
-    """Add ``counts`` (default 1) at ``keys``; batched, scatter-add per row."""
+    """Add ``counts`` (default 1) at ``keys``; batched, scatter-add per row.
+
+    ``counts`` may be signed — negative entries subtract in ℤ/2³²
+    (two's-complement wrap), which is how deletions retract exactly."""
     if counts is None:
         counts = jnp.ones_like(keys, dtype=jnp.uint32)
     counts = counts.astype(jnp.uint32)
@@ -137,6 +149,15 @@ def cms_merge(a: CMSketch, b: CMSketch) -> CMSketch:
     return CMSketch(table=a.table + b.table, seeds=a.seeds)
 
 
+def cms_retract(sketch: CMSketch, keys: jax.Array,
+                counts: jax.Array | None = None) -> CMSketch:
+    """Subtract ``counts`` (default 1) at ``keys`` — the exact inverse of
+    the same :func:`cms_update` (the table is the group ℤ/2³²)."""
+    if counts is None:
+        counts = jnp.ones_like(keys, dtype=jnp.int32)
+    return cms_update(sketch, keys, -counts.astype(jnp.int32))
+
+
 class SketchCarry(PartitionerCarry):
     """The Θ statistics pass as a carry: a CMS over cluster-pair keys.
 
@@ -149,6 +170,8 @@ class SketchCarry(PartitionerCarry):
     """
 
     emits_parts = False
+    supports_retract = True
+    retract_exact = True  # ℤ/2³² is a group — subtraction is exact
     merge_ops = (SUM, REPLICATED)  # CMSketch leaves: table, seeds
 
     def __init__(self, width: int, depth: int, seed: int = 0):
@@ -162,3 +185,7 @@ class SketchCarry(PartitionerCarry):
     def step_chunk(self, carry, src, dst, n_valid, *extras):
         counts = (jnp.arange(src.shape[0]) < n_valid).astype(jnp.uint32)
         return cms_update(carry, pair_key(src, dst), counts), None
+
+    def retract_chunk(self, carry, src, dst, n_valid, parts, *extras):
+        counts = (jnp.arange(src.shape[0]) < n_valid).astype(jnp.int32)
+        return cms_retract(carry, pair_key(src, dst), counts)

@@ -70,6 +70,8 @@ class AssignCarry(PartitionerCarry):
     """
 
     merge_ops = (SUM,)
+    supports_retract = True
+    retract_exact = True
 
     def __init__(self, k: int, max_load: int, c2p: jax.Array):
         self.k = int(k)
@@ -84,6 +86,18 @@ class AssignCarry(PartitionerCarry):
         load, parts = _assign_chunk(carry, self.max_load, src, dst, h, a, b,
                                     self.c2p, k=self.k)
         return load, parts
+
+    def retract_chunk(self, carry, src, dst, n_valid, parts, *extras):
+        return _retract_load(carry, src, dst, n_valid, parts)
+
+
+@jax.jit
+def _retract_load(load, src, dst, n_valid, parts):
+    """Exact inverse of a chunk's load accounting (one unit per placed edge)."""
+    w = ((jnp.arange(src.shape[0]) < n_valid) & (src != dst)
+         & (parts >= 0)).astype(jnp.int32)
+    return load - jax.ops.segment_sum(w, jnp.maximum(parts, 0),
+                                      num_segments=load.shape[0])
 
 
 def assign_edges_stream(

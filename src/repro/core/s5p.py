@@ -63,6 +63,15 @@ class S5PConfig:
     drift_rf_threshold: float = 0.05
     drift_balance_threshold: float = 0.10
     refine_rounds: int = 16
+    # decremental churn: fraction of live edges retracted (deleted or
+    # window-expired) since the last baseline that triggers refinement
+    # even when RF has not visibly drifted — retraction leaves the
+    # approximate cluster volumes behind regardless of the RF signal
+    drift_churn_threshold: float = 0.25
+    # full-refresh policy: relative drift of the frozen ξ (or κ) from the
+    # values a cold run over the live graph would choose, past which the
+    # warm chain raises needs_cold_restart (advisory — see drift.py)
+    xi_refresh_threshold: float = 0.5
 
 
 @dataclasses.dataclass

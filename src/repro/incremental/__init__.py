@@ -12,20 +12,24 @@ retained state this needs: a warm-start replay is ``run_carry`` (or
 
 Why carry-merge semantics make warm starts sound
 ------------------------------------------------
-Every consumer's carry declares per-field merge ops (SUM / OR / MAX /
-REPLICATED), and those same laws govern incremental replay:
+Every consumer's carry declares per-field merge ops (SUM / COUNTED /
+REPLICATED since the decremental refactor), and those same laws govern
+incremental replay:
 
 - **SUM fields** (degrees, loads, cluster volumes, HDRF partial degrees,
-  Θ count-min tables) are linear: state(prefix + delta) = state(prefix) +
-  state(delta).  Folding the delta onto the restored carry *is* that sum.
-- **OR fields** (replica bitmaps) are monotone unions — new edges only add
-  replicas, so the restored bitmap is a correct lower set to grow from.
-- **MAX fields** (assignment tables, id counters) are monotone
-  resolutions: ``-1`` = unassigned loses to any assignment, and counters
-  only advance — a restored table never un-assigns.
+  Θ count-min tables, assignment tables as sums of transitions) are
+  linear: state(prefix + delta) = state(prefix) + state(delta).  Folding
+  the delta onto the restored carry *is* that sum — and because a group
+  has inverses, **deleting** an edge folds the negated delta instead
+  (``retract_chunk`` / :func:`~repro.streaming.run_retract`).
+- **COUNTED fields** (replica/membership occupancy counters, standing in
+  for the old monotone OR bitmaps) OR-project (``> 0``) for scoring and
+  subtract exactly: the counter reaching 0 is the tombstone-free way an
+  assignment or replica vanishes when its last edge is deleted.
 - **REPLICATED fields** (λ, grid hash tables, the k-mask) are scenario
   constants; the config fingerprint in the
-  :class:`~repro.incremental.store.CarryStore` guarantees they match.
+  :class:`~repro.incremental.store.CarryStore` guarantees they match —
+  and its ``carry_repr`` check rejects pre-refactor monotone checkpoints.
 
 Exactly vs approximately incremental
 ------------------------------------
@@ -68,16 +72,21 @@ Pieces
 """
 
 from .delta import DeltaStream, grow_carry, run_incremental_carry  # noqa: F401
-from .drift import DriftDecision, DriftMonitor  # noqa: F401
+from .drift import DriftDecision, DriftMonitor, RefreshDecision  # noqa: F401
 from .driver import (  # noqa: F401
     INCREMENTAL_PARTITIONERS,
     SCAN_PARTITIONERS,
+    WindowStep,
     cold_start,
     run_incremental,
+    s5p_sliding_window,
 )
 from .pipeline import (  # noqa: F401
+    JOURNAL_PREFIX,
     IncrementalResult,
+    compact_bundle,
     s5p_apply_delta,
+    s5p_apply_deletion,
     s5p_cold_bundle,
     s5p_identity_config,
 )
@@ -92,12 +101,17 @@ __all__ = [
     "grow_carry",
     "DriftMonitor",
     "DriftDecision",
+    "RefreshDecision",
     "IncrementalResult",
     "s5p_cold_bundle",
     "s5p_apply_delta",
+    "s5p_apply_deletion",
+    "compact_bundle",
     "s5p_identity_config",
     "cold_start",
     "run_incremental",
+    "s5p_sliding_window",
+    "WindowStep",
     "SCAN_PARTITIONERS",
     "INCREMENTAL_PARTITIONERS",
 ]

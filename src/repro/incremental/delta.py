@@ -31,24 +31,31 @@ __all__ = ["DeltaStream", "run_incremental_carry", "grow_carry"]
 
 
 class DeltaStream(EdgeStream):
-    """An insertion batch as a standard EdgeStream.
+    """A churn batch as a standard EdgeStream, tagged ``sign`` ±1.
 
-    ``base_offset`` records where the batch sits in the logical full
-    stream (the number of edges ingested before it) — provenance a
-    caller can read back instead of threading the split point alongside
-    the stream.  Default ordering is ``natural`` — insertion order is
-    the stream order of a dynamic graph.
+    ``sign=+1`` (default) is an insertion batch; ``sign=-1`` a deletion
+    batch — the drivers fold the former through ``step_chunk`` and the
+    latter through ``retract_chunk``.  ``base_offset`` records where the
+    batch sits in the logical full stream (for insertions: the number of
+    edges ingested before it) — provenance a caller can read back instead
+    of threading the split point alongside the stream.  Default ordering
+    is ``natural`` — insertion order is the stream order of a dynamic
+    graph (and retraction is order-independent anyway).
     """
 
     def __init__(self, src, dst, n_vertices: int | None = None, *,
-                 base_offset: int = 0, chunk_size: int = DEFAULT_CHUNK,
+                 base_offset: int = 0, sign: int = +1,
+                 chunk_size: int = DEFAULT_CHUNK,
                  ordering: str = "natural", seed: int = 0,
                  window: int = 4096):
         if base_offset < 0:
             raise ValueError("base_offset must be >= 0")
+        if sign not in (+1, -1):
+            raise ValueError(f"sign must be +1 or -1, got {sign}")
         super().__init__(src, dst, n_vertices, chunk_size=chunk_size,
                          ordering=ordering, seed=seed, window=window)
         self.base_offset = int(base_offset)
+        self.sign = int(sign)
 
 
 def run_incremental_carry(stream, pc, *extras, carry, num_streams: int = 1,
@@ -84,9 +91,10 @@ def grow_carry(consumer: str, carry, n_old: int, n_new: int, *,
     """Widen a consumer's carry from ``n_old`` to ``n_new`` vertices.
 
     Identity extension per field class: assignment tables pad with ``-1``,
-    replica bitmaps with ``False``, volumes/degrees with ``0``; O(k) and
-    scalar fields pass through.  ``consumer`` ∈ {greedy, hdrf, grid,
-    cluster, degree, sketch, assign} — the repo's streaming consumers.
+    counted replica/membership tables with ``0``, volumes/degrees with
+    ``0``; O(k) and scalar fields pass through.  ``consumer`` ∈ {greedy,
+    hdrf, grid, cluster, degree, sketch, assign} — the repo's streaming
+    consumers.
     """
     if n_new < n_old:
         raise ValueError(f"cannot shrink a carry ({n_new} < {n_old})")
@@ -96,10 +104,10 @@ def grow_carry(consumer: str, carry, n_old: int, n_new: int, *,
         return jnp.asarray(_pad_rows(carry, n_new, 0))
     if consumer == "greedy":
         load, rep = carry
-        return (load, jnp.asarray(_pad_rows(rep, n_new, False)))
+        return (load, jnp.asarray(_pad_rows(rep, n_new, 0)))
     if consumer == "hdrf":
         load, rep, pd, lam, kmask = carry
-        return (load, jnp.asarray(_pad_rows(rep, n_new, False)),
+        return (load, jnp.asarray(_pad_rows(rep, n_new, 0)),
                 jnp.asarray(_pad_rows(pd, n_new, 0)), lam, kmask)
     if consumer == "grid":
         from ..core.baselines import _grid_dims, _grid_rowcol
@@ -126,6 +134,9 @@ def grow_carry(consumer: str, carry, n_old: int, n_new: int, *,
             ld=jnp.asarray(_pad_rows(st.ld, n_new, 0)),
             next_h=st.next_h,
             next_t=st.next_t,
+            cnt_h=jnp.asarray(_pad_rows(st.cnt_h, n_new, 0)),
+            cnt_t=jnp.asarray(_pad_rows(st.cnt_t, n_new, 0)),
+            alloc_h=jnp.asarray(_pad_rows(st.alloc_h, n_new, 0)),
         )
     if consumer in ("sketch", "assign"):
         return carry  # no per-vertex state

@@ -3,23 +3,30 @@
 Two bundle flavors behind one ``save``/``resume`` surface:
 
 - **scan partitioners** (greedy / hdrf / grid) — the bundle is the scoring
-  carry plus the per-edge parts; a delta replay is one
+  carry plus the per-edge parts and alive mask; a delta replay is one
   :func:`~repro.incremental.delta.run_incremental_carry` fold (greedy and
   grid compose exactly; HDRF approximately — tail-chunk padding feeds its
-  partial-degree estimates, see ``repro.incremental`` docs);
+  partial-degree estimates, see ``repro.incremental`` docs), and a
+  **deletion** is one :func:`~repro.streaming.run_retract` drive — the
+  counted carries subtract the deleted edges' accounting exactly, given
+  the stored per-edge parts;
 - **s5p** — the full pipeline bundle of
   :mod:`~repro.incremental.pipeline`, with drift-triggered masked-game
-  refinement.
+  refinement, version-rollback deletions and the ξ/κ refresh signal.
 
 ``cold_start`` runs the partitioner from scratch and persists the bundle;
 ``run_incremental`` restores the latest bundle (validated by consumer
-name + config fingerprint + stream position), replays only the suffix the
-store has not seen, and optionally persists the grown bundle.
+name + config fingerprint + stream position + carry representation),
+replays only the suffix the store has not seen, applies any requested
+deletions, and optionally persists the grown bundle.
+:func:`s5p_sliding_window` composes the same machinery with
+:class:`~repro.streaming.window.SlidingWindowStream` to track the last W
+edges of a stream continuously.
 """
 
 from __future__ import annotations
 
-from typing import Any
+from typing import Any, NamedTuple
 
 import jax
 import numpy as np
@@ -31,13 +38,16 @@ from ..kernels import stream_scan as _scan
 from .delta import DeltaStream, grow_carry, run_incremental_carry
 from .pipeline import (
     IncrementalResult,
+    compact_bundle,
     s5p_apply_delta,
+    s5p_apply_deletion,
     s5p_cold_bundle,
     s5p_identity_config,
 )
 from .store import CarryStore
 
-__all__ = ["SCAN_PARTITIONERS", "cold_start", "run_incremental"]
+__all__ = ["SCAN_PARTITIONERS", "cold_start", "run_incremental",
+           "s5p_sliding_window", "WindowStep"]
 
 SCAN_PARTITIONERS = ("greedy", "hdrf", "grid")
 INCREMENTAL_PARTITIONERS = SCAN_PARTITIONERS + ("s5p",)
@@ -130,7 +140,8 @@ def cold_start(store_dir, partitioner: str, src, dst, n_vertices: int,
     parts, carry = run_parallel(st, pc, num_streams=num_streams,
                                 super_chunk=super_chunk)
     parts = np.asarray(parts, np.int32)
-    store.save({"scan": carry, "parts": parts}, consumer=partitioner,
+    store.save({"scan": carry, "parts": parts,
+                "alive": np.ones(E, bool)}, consumer=partitioner,
                config=_scan_identity_config(partitioner, k, seed),
                stream_pos=E,
                extra_meta={"n_vertices": int(n_vertices),
@@ -143,14 +154,18 @@ def run_incremental(store_dir, partitioner: str, full_src, full_dst,
                     chunk_size: int = 1 << 16,
                     s5p_config: S5PConfig | None = None,
                     num_streams: int = 1, super_chunk: int = 8,
+                    delete=None,
                     save: bool = True, save_dir=None,
                     keep: int = 3) -> IncrementalResult:
     """Warm-start ``partitioner`` on the suffix the store has not seen.
 
     ``full_src``/``full_dst`` are the **whole** stream in arrival order;
-    the delta is everything past the persisted bundle's stream position.
-    The restored bundle is validated (consumer, config fingerprint, stream
-    position) — any mismatch raises
+    the delta is everything past the persisted bundle's stream position,
+    and ``delete`` (optional) names arrival indices to retract after the
+    insertion replay — tombstoned in place (their parts become ``-1``),
+    their accounting subtracted through the counted carry algebra.  The
+    restored bundle is validated (consumer, config fingerprint, stream
+    position, carry representation) — any mismatch raises
     :class:`~repro.incremental.store.CarryMismatchError` instead of
     silently replaying against foreign state.  The grown bundle is saved
     back to ``save_dir`` (default: the same store) unless ``save=False``.
@@ -174,14 +189,24 @@ def run_incremental(store_dir, partitioner: str, full_src, full_dst,
         _check_prefix(meta, full_src, full_dst)
         bundle, result = s5p_apply_delta(bundle, config, full_src, full_dst,
                                          meta["stream_pos"])
+        if delete is not None and len(delete):
+            bundle, dres = s5p_apply_deletion(bundle, config, full_src,
+                                              full_dst, delete)
+            result = dres._replace(
+                edges_replayed=result.edges_replayed + dres.edges_replayed,
+                game_rounds=result.game_rounds + dres.game_rounds,
+                refined=result.refined or dres.refined,
+                n_new_clusters=result.n_new_clusters,
+                n_delta_edges=result.n_delta_edges)
         if save:
+            pos = int(np.asarray(bundle["parts"]).shape[0])  # ≤ E_total
             store.save(bundle, consumer="s5p",
                        config=s5p_identity_config(config),
-                       stream_pos=E_total,
+                       stream_pos=pos,
                        extra_meta={"n_vertices": int(
                            bundle["degrees"].shape[0]),
                            "prefix_crc": _prefix_crc(full_src, full_dst,
-                                                     E_total)})
+                                                     pos)})
         return result
 
     config = _scan_identity_config(partitioner, k, seed)
@@ -191,6 +216,7 @@ def run_incremental(store_dir, partitioner: str, full_src, full_dst,
     E0 = int(meta["stream_pos"])
     n_old = int(meta.get("n_vertices", n_vertices))
     prefix_parts = np.asarray(flat.pop("parts"), np.int32)
+    alive = np.asarray(flat.pop("alive"), bool)
     # reassemble the scoring carry from its path-keyed leaves (the same
     # path-string scheme the checkpoint manager saved them under)
     proto = _scan_carry(partitioner, n_old, k, seed).init()
@@ -204,9 +230,9 @@ def run_incremental(store_dir, partitioner: str, full_src, full_dst,
     if E_delta:
         n_new = max(n_old, int(max(dsrc.max(), ddst.max())) + 1, n_vertices)
     carry = grow_carry(partitioner, carry, n_old, n_new, k=k, seed=seed)
+    pc = _scan_carry(partitioner, n_new, k, seed)
     parts = prefix_parts
     if E_delta:
-        pc = _scan_carry(partitioner, n_new, k, seed)
         stream = DeltaStream(dsrc, ddst, n_new, base_offset=E0,
                              chunk_size=chunk_size)
         delta_parts, carry = run_incremental_carry(
@@ -214,15 +240,171 @@ def run_incremental(store_dir, partitioner: str, full_src, full_dst,
             super_chunk=super_chunk)
         parts = np.concatenate([prefix_parts,
                                 np.asarray(delta_parts, np.int32)])
+        alive = np.concatenate([alive, np.ones(E_delta, bool)])
+    n_retracted = 0
+    if delete is not None and len(delete):
+        idx = np.unique(np.asarray(delete, np.int64))
+        if idx[0] < 0 or idx[-1] >= E_total:
+            raise ValueError(
+                f"deletion indices must lie in [0, {E_total})")
+        if not alive[idx].all():
+            raise ValueError("deletion names edges that are already deleted")
+        from ..streaming import run_retract
+
+        back = DeltaStream(full_src[idx], full_dst[idx], n_new, sign=-1,
+                           chunk_size=chunk_size)
+        carry = run_retract(back, pc, parts[idx], carry=carry)
+        parts = parts.copy()
+        parts[idx] = -1
+        alive = alive.copy()
+        alive[idx] = False
+        n_retracted = int(idx.size)
     rf, bal = _metrics(full_src, full_dst, parts, n_new, k)
     if save:
-        store.save({"scan": carry, "parts": parts}, consumer=partitioner,
+        store.save({"scan": carry, "parts": parts, "alive": alive},
+                   consumer=partitioner,
                    config=config, stream_pos=E_total,
                    extra_meta={"n_vertices": int(n_new),
                                "prefix_crc": _prefix_crc(full_src, full_dst,
                                                          E_total)})
     return IncrementalResult(
         parts=parts, rf=rf, balance=bal, refined=False, rf_drift=0.0,
-        balance_drift=0.0, edges_replayed=E_delta,
+        balance_drift=0.0, edges_replayed=E_delta + n_retracted,
         full_replay_cost=E_total, game_rounds=0, n_new_clusters=0,
-        n_delta_edges=E_delta)
+        n_delta_edges=E_delta, n_retracted=n_retracted)
+
+
+# ---------------------------------------------------------------------------
+# sliding-window S5P: track the last W edges continuously
+# ---------------------------------------------------------------------------
+
+
+class WindowStep(NamedTuple):
+    """Per-step record of a sliding-window run."""
+
+    step: int
+    lo: int  # live window after the step: arrival indices [lo, hi)
+    hi: int
+    rf: float
+    balance: float
+    refined: bool
+    rolled_back: bool
+    n_inserted: int
+    n_retracted: int
+    churn: float
+    needs_cold_restart: bool
+    xi_drift: float
+    n_compacted: int  # combined ids dropped by compaction this step
+    filling: bool = False  # window not yet full — no partition maintained
+
+
+def s5p_sliding_window(src, dst, n_vertices: int, config: S5PConfig,
+                       window_edges: int, *, step_edges: int | None = None,
+                       stream=None, compact_factor: float = 2.0):
+    """Maintain an S5P partition of the **last ``window_edges`` edges**.
+
+    Drives :class:`~repro.streaming.window.SlidingWindowStream` over the
+    arrival stream.  The chain cold-starts when the window **first
+    fills** (fill-phase events are recorded as ``filling`` steps without
+    a partition) so the frozen clustering closure — ξ, κ, the CMS width —
+    is sized for a full window rather than the first step batch; because
+    the live set then stays W edges wide, those frozen values remain
+    representative indefinitely (the ξ/κ refresh signal still watches
+    them).  Every later event folds its insert batch
+    (:func:`s5p_apply_delta`) and retracts its expired batch
+    (:func:`s5p_apply_deletion`) — so after step ``i`` the bundle
+    partitions exactly the window ``[lo_i, hi_i)``.  Expiry retractions
+    count toward the drift trigger, so sustained churn keeps re-settling
+    the clusters through the masked Stackelberg game.
+
+    When the append-only combined cluster id space exceeds
+    ``compact_factor ×`` its last-known live size, :func:`compact_bundle`
+    renumbers it in place (``compact_factor <= 0`` disables).
+
+    Returns ``(history, bundle)`` — one :class:`WindowStep` per event and
+    the final bundle (which covers arrival prefix ``[0, hi)`` with
+    everything before ``lo`` tombstoned).
+    """
+    from ..streaming import SlidingWindowStream, as_stream
+
+    st = as_stream(src, dst, n_vertices, stream=stream,
+                   chunk_size=config.chunk_size)
+    sw = SlidingWindowStream(st, window_edges, step_edges=step_edges)
+    n_vertices = st.n_vertices
+    # arrival prefix [0, hi), filled in place per event — one O(E) buffer
+    # for the whole run instead of O(E²) re-concatenation (for OOC
+    # streams this is the driver's single deliberate materialization; the
+    # apply/retract calls index it by arrival position)
+    buf_src = np.empty(st.n_edges, np.int32)
+    buf_dst = np.empty(st.n_edges, np.int32)
+    bundle = None
+    c_live_known = 1
+    history: list[WindowStep] = []
+    n_steps = sw.n_steps
+    for i, ev in enumerate(sw.events()):
+        buf_src[ev.start:ev.hi] = ev.src
+        buf_dst[ev.start:ev.hi] = ev.dst
+        seen_src = buf_src[:ev.hi]
+        seen_dst = buf_dst[:ev.hi]
+        if bundle is None and ev.hi < window_edges and i < n_steps - 1:
+            # window still filling: no partition yet, just accumulate
+            history.append(WindowStep(
+                step=i, lo=ev.lo, hi=ev.hi, rf=0.0, balance=0.0,
+                refined=False, rolled_back=False,
+                n_inserted=int(ev.src.shape[0]), n_retracted=0,
+                churn=0.0, needs_cold_restart=False, xi_drift=0.0,
+                n_compacted=0, filling=True))
+            continue
+        if bundle is None:
+            # first full window (or the stream ended short of one):
+            # cold-start on everything seen, then retract any already-
+            # expired prefix (only possible when step_edges > window)
+            _, bundle = s5p_cold_bundle(seen_src, seen_dst, n_vertices,
+                                        config)
+            res = None
+            rf = float(bundle["rf_baseline"])
+            bal = float(bundle["balance_baseline"])
+            refined = rolled_back = needs_cold = False
+            churn = xi_drift = 0.0
+            n_ret = 0
+            if ev.expire_idx.size:
+                bundle, res = s5p_apply_deletion(bundle, config, seen_src,
+                                                 seen_dst, ev.expire_idx)
+                rf, bal = res.rf, res.balance
+                refined, churn = res.refined, res.churn
+                xi_drift = res.xi_drift
+                needs_cold = res.needs_cold_restart
+                n_ret = int(ev.expire_idx.size)
+            c_live_known = max(int(bundle["comb_is_head"].shape[0]), 1)
+        else:
+            bundle, res = s5p_apply_delta(bundle, config, seen_src, seen_dst,
+                                          ev.start)
+            n_ret = 0
+            refined = res.refined
+            if ev.expire_idx.size:
+                bundle, dres = s5p_apply_deletion(bundle, config, seen_src,
+                                                  seen_dst, ev.expire_idx)
+                # the step refined if *either* phase did — dropping the
+                # insertion's flag would undercount game spend in the
+                # history the churn bench reports
+                refined = refined or dres.refined
+                res = dres
+                n_ret = int(ev.expire_idx.size)
+            rf, bal = res.rf, res.balance
+            rolled_back = res.rolled_back
+            churn, xi_drift = res.churn, res.xi_drift
+            needs_cold = res.needs_cold_restart
+        n_comp = 0
+        if compact_factor > 0:
+            C1 = int(np.asarray(bundle["comb_is_head"]).shape[0])
+            if C1 > compact_factor * c_live_known:
+                bundle, n_comp = compact_bundle(bundle, config)
+                c_live_known = max(
+                    int(np.asarray(bundle["comb_is_head"]).shape[0]), 1)
+        history.append(WindowStep(
+            step=i, lo=ev.lo, hi=ev.hi, rf=float(rf), balance=float(bal),
+            refined=bool(refined), rolled_back=bool(rolled_back),
+            n_inserted=int(ev.src.shape[0]), n_retracted=n_ret,
+            churn=float(churn), needs_cold_restart=bool(needs_cold),
+            xi_drift=float(xi_drift), n_compacted=int(n_comp)))
+    return history, bundle

@@ -38,6 +38,30 @@ Exact vs approximate (the warm-start semantics):
   This is precisely the quality decay the drift monitor watches; past the
   threshold a **bounded masked Stackelberg game** re-settles only the
   touched clusters and re-places only the moved clusters' edges.
+
+Deletions (the decremental refactor):
+
+- every edge of the bundle is **tombstoned, not removed**: ``alive`` masks
+  the per-edge records, a deleted edge's ``parts`` entry becomes ``-1``
+  (which every metric already ignores), and the group-structured carries
+  subtract the edge's accounting — degrees, Θ sheets, sizes and the Alg.-3
+  load exactly (stored per-edge cluster tags, including the *alt*
+  memberships, make the retraction self-contained), the Alg.-1 fold
+  approximately (:func:`repro.core.clustering.cluster_retract_chunk`);
+- the bundle is **versioned**: each insertion snapshots the O(|V|+C+P+k)
+  fields it is about to mutate (the per-edge arrays only ever append, so
+  truncation restores them).  Deleting exactly the last-inserted batch
+  rolls the version back — ``insert(δ)`` then ``delete(δ)`` restores the
+  pre-δ carry **bitwise** (pinned by tests/test_carry.py) as long as the
+  insertion did not trigger a refinement (refinement rewrites old edges'
+  parts, which invalidates the journal);
+- any other deletion takes the decremental path above, counts its
+  retractions toward the drift trigger, and — combined with
+  :class:`~repro.streaming.window.SlidingWindowStream` — yields a
+  partitioner that continuously tracks the last W edges;
+- :func:`compact_bundle` renumbers the append-only combined cluster id
+  space (deletions orphan ids that would otherwise accumulate forever)
+  and rewrites the pair list and per-edge tags.
 """
 
 from __future__ import annotations
@@ -50,7 +74,7 @@ import numpy as np
 
 from ..core import clustering as _cl
 from ..core import game as _game
-from ..core.cms import CMSketch, cms_query, cms_update, pair_key
+from ..core.cms import CMSketch, cms_query, cms_retract, cms_update, pair_key
 from ..core.metrics import load_balance, replication_factor
 from ..core.postprocess import AssignCarry
 from ..core.s5p import S5PConfig, S5POutput, s5p_partition
@@ -59,7 +83,8 @@ from .delta import DeltaStream, grow_carry, run_incremental_carry
 from .drift import DriftMonitor
 
 __all__ = ["IncrementalResult", "s5p_identity_config", "s5p_cold_bundle",
-           "s5p_apply_delta"]
+           "s5p_apply_delta", "s5p_apply_deletion", "compact_bundle",
+           "JOURNAL_PREFIX"]
 
 _INT32_MAX = 2**31 - 1
 
@@ -78,6 +103,12 @@ class IncrementalResult(NamedTuple):
     game_rounds: int  # settlement + refinement rounds spent
     n_new_clusters: int
     n_delta_edges: int
+    n_retracted: int = 0  # edges deleted/expired by this application
+    churn: float = 0.0  # cumulative retraction fraction at the drift check
+    needs_cold_restart: bool = False  # ξ/κ refresh policy (advisory)
+    xi_drift: float = 0.0  # relative drift of the frozen ξ from live value
+    kappa_drift: float = 0.0
+    rolled_back: bool = False  # deletion was served by a version rollback
 
     @property
     def replay_fraction(self) -> float:
@@ -142,13 +173,18 @@ def s5p_cold_bundle(src, dst, n_vertices: int, config: S5PConfig, *,
 
     parts = np.asarray(out.parts, np.int32)
     is_head_e = (degrees[src] > out.xi) & (degrees[dst] > out.xi)
-    e_cu = np.where(is_head_e, np.asarray(res.v2c_h)[src],
-                    np.asarray(res.v2c_t)[src]).astype(np.int32)
-    e_cv = np.where(is_head_e, np.asarray(res.v2c_h)[dst],
-                    np.asarray(res.v2c_t)[dst]).astype(np.int32)
+    comb_h = np.asarray(res.v2c_h)
+    comb_t = np.asarray(res.v2c_t)
+    e_cu = np.where(is_head_e, comb_h[src], comb_t[src]).astype(np.int32)
+    e_cv = np.where(is_head_e, comb_h[dst], comb_t[dst]).astype(np.int32)
+    # the *other*-table memberships of each endpoint — the cross-type Θ
+    # channels of cluster_statistics, stored so a deletion can retract
+    # exactly the pair keys its insertion contributed
+    e_alt_u = np.where(is_head_e, comb_t[src], comb_h[src]).astype(np.int32)
+    e_alt_v = np.where(is_head_e, comb_t[dst], comb_h[dst]).astype(np.int32)
     invalid = src == dst
-    e_cu[invalid] = -1
-    e_cv[invalid] = -1
+    for arr in (e_cu, e_cv, e_alt_u, e_alt_v):
+        arr[invalid] = -1
 
     rf = replication_factor(src, dst, parts, n_vertices=n_vertices,
                             k=config.k)
@@ -163,6 +199,9 @@ def s5p_cold_bundle(src, dst, n_vertices: int, config: S5PConfig, *,
         "ld": np.asarray(state.ld, np.int32),
         "next_h": np.int32(state.next_h),
         "next_t": np.int32(state.next_t),
+        "cnt_h": np.asarray(state.cnt_h, np.int32),
+        "cnt_t": np.asarray(state.cnt_t, np.int32),
+        "alloc_h": np.asarray(state.alloc_h, np.int32),
         "raw2comb_h": raw2comb_h,
         "raw2comb_t": raw2comb_t,
         "comb_is_head": comb_is_head,
@@ -175,8 +214,14 @@ def s5p_cold_bundle(src, dst, n_vertices: int, config: S5PConfig, *,
         "parts": parts,
         "edge_cu": e_cu,
         "edge_cv": e_cv,
+        "edge_alt_u": e_alt_u,
+        "edge_alt_v": e_alt_v,
         "edge_head": np.asarray(is_head_e, bool),
+        "alive": np.ones(parts.shape[0], bool),
         "touched": np.zeros(C, bool),
+        "retracted": np.int64(0),
+        "journal_valid": np.bool_(False),
+        "journal_pos": np.int64(-1),
         "xi": np.int32(out.xi),
         "kappa": np.int32(out.kappa),
         "rf_baseline": np.float64(rf),
@@ -195,6 +240,103 @@ def s5p_cold_bundle(src, dst, n_vertices: int, config: S5PConfig, *,
 
 def _comb_of(raw: np.ndarray, remap: np.ndarray) -> np.ndarray:
     return np.where(raw >= 0, remap[np.maximum(raw, 0)], -1).astype(np.int32)
+
+
+def _unpack_cluster_state(b: dict) -> _cl.ClusterState:
+    """The bundle's raw Algorithm-1 fields as a live ClusterState."""
+    return _cl.ClusterState(
+        v2c_h=jnp.asarray(b["v2c_h"]), v2c_t=jnp.asarray(b["v2c_t"]),
+        vol_h=jnp.asarray(b["vol_h"]), vol_t=jnp.asarray(b["vol_t"]),
+        ld=jnp.asarray(b["ld"]), next_h=jnp.int32(b["next_h"]),
+        next_t=jnp.int32(b["next_t"]), cnt_h=jnp.asarray(b["cnt_h"]),
+        cnt_t=jnp.asarray(b["cnt_t"]), alloc_h=jnp.asarray(b["alloc_h"]))
+
+
+def _pack_cluster_state(b: dict, state: _cl.ClusterState,
+                        next_h: int, next_t: int) -> None:
+    b.update(
+        v2c_h=np.asarray(state.v2c_h, np.int32),
+        v2c_t=np.asarray(state.v2c_t, np.int32),
+        vol_h=np.asarray(state.vol_h, np.int32),
+        vol_t=np.asarray(state.vol_t, np.int32),
+        ld=np.asarray(state.ld, np.int32),
+        next_h=np.int32(next_h), next_t=np.int32(next_t),
+        cnt_h=np.asarray(state.cnt_h, np.int32),
+        cnt_t=np.asarray(state.cnt_t, np.int32),
+        alloc_h=np.asarray(state.alloc_h, np.int32),
+    )
+
+
+# ---------------------------------------------------------------------------
+# bundle versioning (the journal a last-batch deletion rolls back to)
+# ---------------------------------------------------------------------------
+
+JOURNAL_PREFIX = "prev__"
+
+#: the O(|V| + C + P + k) fields an insertion may mutate in place.  The
+#: per-edge arrays (parts, edge tags, alive) only ever *append* during an
+#: insertion, so the rollback restores them by truncating to the
+#: journaled stream position — no copy needed.
+_JOURNALED = (
+    "degrees", "v2c_h", "v2c_t", "vol_h", "vol_t", "ld", "next_h", "next_t",
+    "cnt_h", "cnt_t", "alloc_h", "raw2comb_h", "raw2comb_t", "comb_is_head",
+    "sizes", "pair_a", "pair_b", "pair_w", "c2p", "load", "touched",
+    "theta_table", "theta_seeds", "rf_baseline", "balance_baseline",
+    "retracted",
+)
+
+_PER_EDGE = ("parts", "edge_cu", "edge_cv", "edge_alt_u", "edge_alt_v",
+             "edge_head", "alive")
+
+
+def _write_journal(b: dict, stream_pos: int) -> None:
+    """Snapshot the mutable small fields: the bundle's previous version."""
+    for key in _JOURNALED:
+        if key in b:
+            b[JOURNAL_PREFIX + key] = np.copy(b[key])
+    b["journal_pos"] = np.int64(stream_pos)
+    b["journal_valid"] = np.bool_(True)
+
+
+def _invalidate_journal(b: dict) -> None:
+    b["journal_valid"] = np.bool_(False)
+    for key in _JOURNALED:
+        b.pop(JOURNAL_PREFIX + key, None)
+
+
+def _rollback(b: dict) -> None:
+    """Restore the journaled version: small fields from their snapshots,
+    per-edge arrays by truncation to the journaled stream position."""
+    pos = int(b["journal_pos"])
+    for key in _JOURNALED:
+        jkey = JOURNAL_PREFIX + key
+        if jkey in b:
+            b[key] = b.pop(jkey)
+        elif key in ("theta_table", "theta_seeds"):
+            continue  # exact-Θ bundles have no sketch to restore
+    for key in _PER_EDGE:
+        b[key] = np.asarray(b[key])[:pos]
+    b["journal_valid"] = np.bool_(False)
+    b["journal_pos"] = np.int64(-1)
+
+
+def _refresh_decision(b: dict, config: S5PConfig, degrees: np.ndarray,
+                      e_live: int):
+    """ξ/κ full-refresh policy: compare the frozen clustering thresholds
+    with what a cold run over the *live* graph would choose today.
+
+    Uses the same denominator convention as the cold run (the full
+    vertex-table size, isolated vertices included) so the drift is
+    exactly 0 immediately after a cold start and moves only with real
+    |E|/|V| change — not with the isolated-vertex count."""
+    n = int(degrees.shape[0])
+    avg_deg = 2.0 * e_live / max(n, 1)
+    xi_now = min(int(config.beta * avg_deg), _INT32_MAX - 1)
+    kappa_now = (_INT32_MAX if config.bounded
+                 else max(int(math.ceil(2.0 * e_live / config.k)), 2))
+    return DriftMonitor.refresh_check(
+        float(b["xi"]), float(b["kappa"]), float(xi_now), float(kappa_now),
+        xi_refresh_threshold=config.xi_refresh_threshold)
 
 
 def _least_loaded_fill(sizes, c2p, new_ids, k):
@@ -270,6 +412,10 @@ def s5p_apply_delta(bundle: dict, config: S5PConfig, full_src, full_dst,
             n_delta_edges=0)
         return b, res
 
+    # version the bundle before the first mutation: deleting exactly this
+    # batch later rolls straight back to the snapshot (bitwise)
+    _write_journal(b, E0)
+
     # ---- vertex-set growth -------------------------------------------
     n_new = n_old
     if E_delta:
@@ -279,11 +425,7 @@ def s5p_apply_delta(bundle: dict, config: S5PConfig, full_src, full_dst,
     np.add.at(degrees, dsrc, 1)  # exact SUM update (self-loops count,
     np.add.at(degrees, ddst, 1)  # matching compute_degrees on the cold run)
 
-    state = _cl.ClusterState(
-        v2c_h=jnp.asarray(b["v2c_h"]), v2c_t=jnp.asarray(b["v2c_t"]),
-        vol_h=jnp.asarray(b["vol_h"]), vol_t=jnp.asarray(b["vol_t"]),
-        ld=jnp.asarray(b["ld"]), next_h=jnp.int32(b["next_h"]),
-        next_t=jnp.int32(b["next_t"]))
+    state = _unpack_cluster_state(b)
     state = grow_carry("cluster", state, n_old, n_new)
 
     # ---- Alg. 1 replay over the delta (frozen ξ/κ, fresh degrees) ----
@@ -336,6 +478,8 @@ def s5p_apply_delta(bundle: dict, config: S5PConfig, full_src, full_dst,
     cv[~valid] = -1
     alt_u = np.where(head_e, ct_u, ch_u).astype(np.int32)
     alt_v = np.where(head_e, ct_v, ch_v).astype(np.int32)
+    alt_u[~valid] = -1
+    alt_v[~valid] = -1
     for arr in (cu, cv):
         t = arr[arr >= 0]
         if t.size:
@@ -407,8 +551,11 @@ def s5p_apply_delta(bundle: dict, config: S5PConfig, full_src, full_dst,
             game_rounds += int(settle.rounds)
 
     # ---- Alg. 3: place only the delta edges (warm load vector) -------
+    # capacity follows the *live* edge count (tombstoned edges hold no
+    # load); identical to τ·E_total/k on insert-only streams
+    e_live_in = int(np.count_nonzero(b["alive"])) + E_delta
     max_load = (_INT32_MAX if config.bounded
-                else int(math.ceil(config.tau * E_total / k)))
+                else int(math.ceil(config.tau * e_live_in / k)))
     ac = AssignCarry(k, max_load, jnp.asarray(c2p))
     delta_parts, load = run_carry(
         delta_stream, ac, jnp.asarray(head_e), jnp.asarray(np.maximum(cu, 0)),
@@ -417,81 +564,435 @@ def s5p_apply_delta(bundle: dict, config: S5PConfig, full_src, full_dst,
                             np.asarray(delta_parts, np.int32)])
     edge_cu = np.concatenate([b["edge_cu"], cu])
     edge_cv = np.concatenate([b["edge_cv"], cv])
+    edge_alt_u = np.concatenate([b["edge_alt_u"], alt_u])
+    edge_alt_v = np.concatenate([b["edge_alt_v"], alt_v])
     edge_head = np.concatenate([b["edge_head"], head_e])
+    alive = np.concatenate([b["alive"], np.ones(E_delta, bool)])
     load = np.asarray(load, np.int32)
     edges_replayed = 4 * E_delta
 
     # ---- drift check → bounded refinement ----------------------------
+    e_live = int(np.count_nonzero(alive))
     rf = float(replication_factor(full_src, full_dst, parts,
                                   n_vertices=n_new, k=k))
     bal = float(load_balance(parts, k=k))
     monitor = DriftMonitor(
         float(b["rf_baseline"]), float(b["balance_baseline"]),
         rf_threshold=config.drift_rf_threshold,
-        balance_threshold=config.drift_balance_threshold)
-    decision = monitor.check(rf, bal)
+        balance_threshold=config.drift_balance_threshold,
+        churn_threshold=config.drift_churn_threshold,
+        retracted=int(b.get("retracted", 0)))
+    decision = monitor.check(rf, bal, live_edges=e_live)
     refined = False
     if decision.refine and config.refine_rounds > 0 and C1 > 0:
-        refine = _game.run_game(
-            inputs, C1, batch_size=bs, max_rounds=config.refine_rounds,
-            accept_prob=config.game_accept_prob, assign0=c2p,
-            seed=config.seed + 1, leader_mask=comb_is_head,
-            move_mask=touched & (sizes > 0))
-        c2p_new = np.asarray(refine.assignment)
-        game_rounds += int(refine.rounds)
-        moved = np.nonzero(c2p_new != c2p)[0]
-        if moved.size:
-            moved_mask = np.zeros(C1, bool)
-            moved_mask[moved] = True
-            ok = parts >= 0
-            aff = ok & (moved_mask[np.maximum(edge_cu, 0)]
-                        | moved_mask[np.maximum(edge_cv, 0)])
-            # lift the affected edges' load, then re-place just them in
-            # arrival order against the new cluster→partition map
-            load64 = load.astype(np.int64)
-            np.subtract.at(load64, parts[aff], 1)
-            aidx = np.nonzero(aff)[0]
-            re_stream = EdgeStream(full_src[aidx], full_dst[aidx], n_new,
-                                   chunk_size=config.chunk_size)
-            ac = AssignCarry(k, max_load, jnp.asarray(c2p_new))
-            re_parts, load = run_carry(
-                re_stream, ac, jnp.asarray(edge_head[aidx]),
-                jnp.asarray(np.maximum(edge_cu[aidx], 0)),
-                jnp.asarray(np.maximum(edge_cv[aidx], 0)),
-                carry=jnp.asarray(load64.astype(np.int32)))
-            parts = parts.copy()
-            parts[aidx] = np.asarray(re_parts, np.int32)
-            load = np.asarray(load, np.int32)
-            edges_replayed += int(aidx.size)
-            rf = float(replication_factor(full_src, full_dst, parts,
-                                          n_vertices=n_new, k=k))
-            bal = float(load_balance(parts, k=k))
-        c2p = c2p_new
+        c2p, parts, load, rounds, replayed, rf, bal = _refine_pass(
+            config, inputs, C1, bs, c2p, comb_is_head, touched, sizes,
+            parts, load, edge_cu, edge_cv, edge_head,
+            full_src, full_dst, n_new, max_load, rf, bal)
+        game_rounds += rounds
+        edges_replayed += replayed
         refined = True
         touched = np.zeros(C1, bool)
         monitor.rebase(rf, bal)
 
     # ---- pack the grown bundle ---------------------------------------
+    _pack_cluster_state(b, state, next_h, next_t)
     b.update(
         degrees=degrees,
-        v2c_h=v2c_h.astype(np.int32), v2c_t=v2c_t.astype(np.int32),
-        vol_h=np.asarray(state.vol_h, np.int32),
-        vol_t=np.asarray(state.vol_t, np.int32),
-        ld=np.asarray(state.ld, np.int32),
-        next_h=np.int32(next_h), next_t=np.int32(next_t),
         raw2comb_h=r2c_h, raw2comb_t=r2c_t,
         comb_is_head=comb_is_head, sizes=sizes,
         pair_a=pa, pair_b=pb, pair_w=pw,
         c2p=c2p.astype(np.int32), load=load, parts=parts,
-        edge_cu=edge_cu, edge_cv=edge_cv, edge_head=edge_head,
+        edge_cu=edge_cu, edge_cv=edge_cv,
+        edge_alt_u=edge_alt_u, edge_alt_v=edge_alt_v,
+        edge_head=edge_head, alive=alive,
         touched=touched,
+        retracted=np.int64(monitor.retracted),
         rf_baseline=np.float64(monitor.baseline_rf),
         balance_baseline=np.float64(monitor.baseline_balance),
     )
+    if refined:
+        # refinement re-placed old edges' parts — truncation can no
+        # longer restore the previous version, so drop the journal
+        _invalidate_journal(b)
+    refresh = _refresh_decision(b, config, degrees, e_live)
     result = IncrementalResult(
         parts=parts, rf=rf, balance=bal, refined=refined,
         rf_drift=decision.rf_drift, balance_drift=decision.balance_drift,
         edges_replayed=edges_replayed, full_replay_cost=full_cost,
         game_rounds=game_rounds, n_new_clusters=int(n_new_clusters),
-        n_delta_edges=E_delta)
+        n_delta_edges=E_delta, churn=decision.churn,
+        needs_cold_restart=refresh.needs_cold_restart,
+        xi_drift=refresh.xi_drift, kappa_drift=refresh.kappa_drift)
     return b, result
+
+
+def _refine_pass(config, inputs, C1, bs, c2p, comb_is_head, touched, sizes,
+                 parts, load, edge_cu, edge_cv, edge_head,
+                 full_src, full_dst, n_vertices, max_load, rf, bal,
+                 move_mask=None):
+    """The drift-triggered masked Stackelberg refinement, shared by the
+    insertion and deletion paths: re-settle the touched clusters (or the
+    caller's wider ``move_mask`` — the churn trigger passes every live
+    cluster, a full re-settle of the O(C) game at no stream-replay cost),
+    then lift and re-place only the moved clusters' **live** edges
+    (tombstoned edges have ``parts == -1`` and never re-enter).  Returns
+    ``(c2p, parts, load, rounds, n_replayed, rf, bal)``."""
+    k = config.k
+    if move_mask is None:
+        move_mask = touched & (sizes > 0)
+    refine = _game.run_game(
+        inputs, C1, batch_size=bs, max_rounds=config.refine_rounds,
+        accept_prob=config.game_accept_prob, assign0=c2p,
+        seed=config.seed + 1, leader_mask=comb_is_head,
+        move_mask=move_mask)
+    c2p_new = np.asarray(refine.assignment)
+    rounds = int(refine.rounds)
+    replayed = 0
+    moved = np.nonzero(c2p_new != c2p)[0]
+    if moved.size:
+        moved_mask = np.zeros(C1, bool)
+        moved_mask[moved] = True
+        ok = parts >= 0
+        aff = ok & (moved_mask[np.maximum(edge_cu, 0)]
+                    | moved_mask[np.maximum(edge_cv, 0)])
+        # lift the affected edges' load, then re-place just them in
+        # arrival order against the new cluster→partition map
+        load64 = load.astype(np.int64)
+        np.subtract.at(load64, parts[aff], 1)
+        aidx = np.nonzero(aff)[0]
+        re_stream = EdgeStream(full_src[aidx], full_dst[aidx], n_vertices,
+                               chunk_size=config.chunk_size)
+        ac = AssignCarry(k, max_load, jnp.asarray(c2p_new))
+        re_parts, load = run_carry(
+            re_stream, ac, jnp.asarray(edge_head[aidx]),
+            jnp.asarray(np.maximum(edge_cu[aidx], 0)),
+            jnp.asarray(np.maximum(edge_cv[aidx], 0)),
+            carry=jnp.asarray(load64.astype(np.int32)))
+        parts = parts.copy()
+        parts[aidx] = np.asarray(re_parts, np.int32)
+        load = np.asarray(load, np.int32)
+        replayed = int(aidx.size)
+        rf = float(replication_factor(full_src, full_dst, parts,
+                                      n_vertices=n_vertices, k=k))
+        bal = float(load_balance(parts, k=k))
+    return c2p_new, parts, load, rounds, replayed, rf, bal
+
+
+# ---------------------------------------------------------------------------
+# deletion application
+# ---------------------------------------------------------------------------
+
+
+def s5p_apply_deletion(bundle: dict, config: S5PConfig, full_src, full_dst,
+                       delete_idx) -> tuple[dict, IncrementalResult]:
+    """Delete the edges at arrival indices ``delete_idx`` from the bundle.
+
+    Two regimes:
+
+    - **version rollback** — the deleted set is exactly the last-inserted
+      batch and the bundle's journal is intact: restore the snapshot; the
+      result is bitwise the pre-insertion carry (``rolled_back=True``).
+    - **decremental retraction** — tombstone the edges (``alive`` false,
+      ``parts`` −1), subtract their degree / size / Θ / load accounting
+      exactly from the stored per-edge tags, retract the Alg.-1 fold
+      approximately (:func:`~repro.core.clustering.cluster_retract_chunk`
+      with the stored insertion-time head flags), count the retractions
+      toward drift, and run the masked refinement game when any drift
+      channel trips.
+
+    Returns ``(bundle, IncrementalResult)``; the input bundle is not
+    modified.  After a rollback the bundle covers fewer edges — callers
+    persisting it should key the save on ``len(bundle["parts"])``.
+    """
+    b = dict(bundle)
+    full_src = np.asarray(full_src, np.int32)
+    full_dst = np.asarray(full_dst, np.int32)
+    E_total = int(np.asarray(b["parts"]).shape[0])
+    if int(full_src.shape[0]) < E_total:
+        raise ValueError(
+            f"bundle covers {E_total} edges but the stream holds only "
+            f"{full_src.shape[0]}")
+    k = config.k
+    full_cost = 4 * E_total
+    idx = np.unique(np.asarray(delete_idx, np.int64))
+    n_vertices = int(np.asarray(b["degrees"]).shape[0])
+    if idx.size == 0:
+        parts = np.asarray(b["parts"], np.int32)
+        rf = float(replication_factor(full_src[:E_total], full_dst[:E_total],
+                                      parts, n_vertices=n_vertices, k=k))
+        bal = float(load_balance(parts, k=k))
+        return b, IncrementalResult(
+            parts=parts, rf=rf, balance=bal, refined=False, rf_drift=0.0,
+            balance_drift=0.0, edges_replayed=0, full_replay_cost=full_cost,
+            game_rounds=0, n_new_clusters=0, n_delta_edges=0)
+    if idx[0] < 0 or idx[-1] >= E_total:
+        raise ValueError(
+            f"deletion indices must lie in [0, {E_total}); got "
+            f"[{idx[0]}, {idx[-1]}]")
+    alive = np.asarray(b["alive"], bool)
+    if not alive[idx].all():
+        raise ValueError("deletion names edges that are already deleted")
+    D = int(idx.size)
+
+    # ---- version rollback: exactly the last-inserted batch -----------
+    jpos = int(b.get("journal_pos", -1))
+    if (bool(b.get("journal_valid", False)) and jpos >= 0
+            and D == E_total - jpos
+            and int(idx[0]) == jpos and int(idx[-1]) == E_total - 1):
+        _rollback(b)
+        parts = np.asarray(b["parts"], np.int32)
+        n_rb = int(np.asarray(b["degrees"]).shape[0])
+        rf = float(replication_factor(full_src[:jpos], full_dst[:jpos],
+                                      parts, n_vertices=n_rb, k=k))
+        bal = float(load_balance(parts, k=k))
+        return b, IncrementalResult(
+            parts=parts, rf=rf, balance=bal, refined=False, rf_drift=0.0,
+            balance_drift=0.0, edges_replayed=0, full_replay_cost=full_cost,
+            game_rounds=0, n_new_clusters=0, n_delta_edges=0,
+            n_retracted=D, rolled_back=True)
+
+    # ---- decremental retraction --------------------------------------
+    dsrc = full_src[idx]
+    ddst = full_dst[idx]
+    degrees_pre = np.asarray(b["degrees"], np.int32)
+    degrees = degrees_pre.copy()
+    np.subtract.at(degrees, dsrc, 1)  # exact inverse of the insertion's
+    np.subtract.at(degrees, ddst, 1)  # unconditional degree counting
+
+    state = _cl.cluster_retract_chunk(
+        _unpack_cluster_state(b), jnp.asarray(dsrc), jnp.asarray(ddst),
+        D, is_head=jnp.asarray(np.asarray(b["edge_head"], bool)[idx]))
+
+    cu = np.asarray(b["edge_cu"])[idx]
+    cv = np.asarray(b["edge_cv"])[idx]
+    au = np.asarray(b["edge_alt_u"])[idx]
+    av = np.asarray(b["edge_alt_v"])[idx]
+    C1 = int(np.asarray(b["comb_is_head"]).shape[0])
+
+    # sizes: subtract the same ½/1 attribution insertion added
+    sizes64 = np.asarray(b["sizes"], np.float64).copy()
+    ok = (cu >= 0) & (cv >= 0)
+    internal = ok & (cu == cv)
+    boundary = ok & (cu != cv)
+    np.subtract.at(sizes64, cu[internal], 1.0)
+    np.subtract.at(sizes64, cu[boundary], 0.5)
+    np.subtract.at(sizes64, cv[boundary], 0.5)
+    sizes = sizes64.astype(np.float32)
+
+    # Θ retraction: the same three membership pair sets insertion added
+    a_parts, b_parts = [], []
+    for a, bb in ((cu, cv), (au, cv), (cu, av)):
+        okm = (a >= 0) & (bb >= 0) & (a != bb)
+        a_parts.append(np.minimum(a, bb)[okm])
+        b_parts.append(np.maximum(a, bb)[okm])
+    da = np.concatenate(a_parts).astype(np.int32)
+    db = np.concatenate(b_parts).astype(np.int32)
+    pa = np.asarray(b["pair_a"], np.int32)
+    pb = np.asarray(b["pair_b"], np.int32)
+    if config.use_cms and "theta_table" in b:
+        sketch = CMSketch(table=jnp.asarray(b["theta_table"]),
+                          seeds=jnp.asarray(b["theta_seeds"]))
+        if da.size:
+            sketch = cms_retract(sketch, pair_key(jnp.asarray(da),
+                                                  jnp.asarray(db)))
+        pw = np.asarray(cms_query(sketch, pair_key(
+            jnp.asarray(pa), jnp.asarray(pb)))).astype(np.float32)
+        b["theta_table"] = np.asarray(sketch.table)
+        b["theta_seeds"] = np.asarray(sketch.seeds)
+    else:
+        duniq, dcount = (np.empty(0, np.int64), np.empty(0, np.float64))
+        if da.size:
+            key = da.astype(np.int64) * (C1 + 1) + db
+            duniq, dcount = np.unique(key, return_counts=True)
+            dcount = dcount.astype(np.float64)
+        pa, pb, pw = _merge_exact_counts(
+            pa, pb, np.asarray(b["pair_w"], np.float32),
+            (duniq // (C1 + 1)).astype(np.int32),
+            (duniq % (C1 + 1)).astype(np.int32), -dcount, C1)
+
+    # load / parts / alive tombstones — exact
+    parts = np.asarray(b["parts"], np.int32).copy()
+    placed = parts[idx] >= 0
+    load64 = np.asarray(b["load"], np.int64).copy()
+    np.subtract.at(load64, parts[idx][placed], 1)
+    load = load64.astype(np.int32)
+    parts[idx] = -1
+    alive = alive.copy()
+    alive[idx] = False
+    touched = np.asarray(b["touched"], bool).copy()
+    for arr in (cu, cv):
+        t = arr[arr >= 0]
+        if t.size:
+            touched[t] = True
+
+    edge_cu = np.asarray(b["edge_cu"])
+    edge_cv = np.asarray(b["edge_cv"])
+    edge_head = np.asarray(b["edge_head"], bool)
+    c2p = np.asarray(b["c2p"], np.int32)
+    comb_is_head = np.asarray(b["comb_is_head"], bool)
+    edges_replayed = D  # one retraction fold per deleted edge
+
+    # ---- drift check (retractions count) → bounded refinement --------
+    e_live = int(np.count_nonzero(alive))
+    rf = float(replication_factor(full_src[:E_total], full_dst[:E_total],
+                                  parts, n_vertices=n_vertices, k=k))
+    bal = float(load_balance(parts, k=k))
+    monitor = DriftMonitor(
+        float(b["rf_baseline"]), float(b["balance_baseline"]),
+        rf_threshold=config.drift_rf_threshold,
+        balance_threshold=config.drift_balance_threshold,
+        churn_threshold=config.drift_churn_threshold,
+        retracted=int(b.get("retracted", 0)))
+    monitor.note_retractions(D)
+    decision = monitor.check(rf, bal, live_edges=e_live)
+    refined = False
+    game_rounds = 0
+    max_load = (_INT32_MAX if config.bounded
+                else int(math.ceil(config.tau * max(e_live, 1) / k)))
+    if decision.refine and config.refine_rounds > 0 and C1 > 0:
+        inputs = _game.GameInputs(
+            sizes=jnp.asarray(sizes), pair_a=jnp.asarray(pa),
+            pair_b=jnp.asarray(pb), pair_w=jnp.asarray(pw), n_head=0, k=k)
+        bs = _game.default_batch_size(config.game_batch_size, C1)
+        # churn-tripped refinements re-settle *every* live cluster: the
+        # O(C) game is cheap next to any replay, and sustained expiry
+        # degrades clusters the touched set no longer names
+        move_mask = (sizes > 0) if decision.churn >= monitor.churn_threshold \
+            else touched & (sizes > 0)
+        c2p, parts, load, rounds, replayed, rf, bal = _refine_pass(
+            config, inputs, C1, bs, c2p, comb_is_head, touched, sizes,
+            parts, load, edge_cu, edge_cv, edge_head,
+            full_src[:E_total], full_dst[:E_total], n_vertices, max_load,
+            rf, bal, move_mask=move_mask)
+        game_rounds += rounds
+        edges_replayed += replayed
+        refined = True
+        touched = np.zeros(C1, bool)
+        monitor.rebase(rf, bal)
+
+    # ---- pack ---------------------------------------------------------
+    _pack_cluster_state(b, state, int(b["next_h"]), int(b["next_t"]))
+    b.update(
+        degrees=degrees, sizes=sizes, pair_a=pa, pair_b=pb, pair_w=pw,
+        c2p=c2p.astype(np.int32), load=load, parts=parts, alive=alive,
+        touched=touched, retracted=np.int64(monitor.retracted),
+        rf_baseline=np.float64(monitor.baseline_rf),
+        balance_baseline=np.float64(monitor.baseline_balance),
+    )
+    # any decremental deletion desynchronizes the journal snapshot
+    _invalidate_journal(b)
+    refresh = _refresh_decision(b, config, degrees, e_live)
+    result = IncrementalResult(
+        parts=parts, rf=rf, balance=bal, refined=refined,
+        rf_drift=decision.rf_drift, balance_drift=decision.balance_drift,
+        edges_replayed=edges_replayed, full_replay_cost=full_cost,
+        game_rounds=game_rounds, n_new_clusters=0, n_delta_edges=0,
+        n_retracted=D, churn=decision.churn,
+        needs_cold_restart=refresh.needs_cold_restart,
+        xi_drift=refresh.xi_drift, kappa_drift=refresh.kappa_drift)
+    return b, result
+
+
+# ---------------------------------------------------------------------------
+# carry compaction (the append-only combined id space, renumbered)
+# ---------------------------------------------------------------------------
+
+
+def compact_bundle(bundle: dict, config: S5PConfig) -> tuple[dict, int]:
+    """Renumber the combined cluster id space, dropping dead ids.
+
+    The warm chain only ever *appends* combined ids (that is what keeps
+    the pair list and per-edge tags stable across deltas), so after heavy
+    deletion churn the id space holds clusters no live edge or vertex
+    references.  This pass builds the live id set — ids tagged by any
+    live edge plus ids any vertex's counted membership still maps to —
+    renumbers them densely (order-preserving, so head-before-tail
+    blocks survive), and rewrites every id-indexed structure: the
+    raw→combined remaps, sizes / c2p / touched / leader mask, the Θ pair
+    list, and the per-edge tags (dead edges' tags become −1).  The CMS,
+    hashed over old ids, is re-materialized by re-inserting each live
+    pair at its current estimated weight — estimates stay one-sided.
+    Returns ``(bundle, n_dropped)``; invalidates the rollback journal.
+    """
+    b = dict(bundle)
+    C1 = int(np.asarray(b["comb_is_head"]).shape[0])
+    alive = np.asarray(b["alive"], bool)
+    state = _unpack_cluster_state(b)
+    eff_h, eff_t = (np.asarray(x) for x in state.effective())
+    r2c_h = np.asarray(b["raw2comb_h"], np.int32)
+    r2c_t = np.asarray(b["raw2comb_t"], np.int32)
+
+    live = np.zeros(C1, bool)
+    for tags in (np.asarray(b["edge_cu"])[alive],
+                 np.asarray(b["edge_cv"])[alive],
+                 np.asarray(b["edge_alt_u"])[alive],
+                 np.asarray(b["edge_alt_v"])[alive]):
+        t = tags[tags >= 0]
+        if t.size:
+            live[t] = True
+    for raw, remap in ((eff_h, r2c_h), (eff_t, r2c_t)):
+        r = raw[raw >= 0]
+        if r.size:
+            comb = remap[r]
+            comb = comb[comb >= 0]
+            live[comb] = True
+
+    n_live = int(np.count_nonzero(live))
+    n_dropped = C1 - n_live
+    if n_dropped == 0:
+        return b, 0
+    remap = np.full(C1 + 1, -1, np.int32)  # trailing slot: -1 passthrough
+    remap[:C1][live] = np.arange(n_live, dtype=np.int32)
+
+    def _retag(arr):
+        arr = np.asarray(arr, np.int32)
+        return np.where(arr >= 0, remap[np.maximum(arr, 0)], -1).astype(np.int32)
+
+    b["raw2comb_h"] = _retag(r2c_h)
+    b["raw2comb_t"] = _retag(r2c_t)
+    b["comb_is_head"] = np.asarray(b["comb_is_head"], bool)[live]
+    b["sizes"] = np.asarray(b["sizes"], np.float32)[live]
+    b["c2p"] = np.asarray(b["c2p"], np.int32)[live]
+    b["touched"] = np.asarray(b["touched"], bool)[live]
+    for key in ("edge_cu", "edge_cv", "edge_alt_u", "edge_alt_v"):
+        b[key] = _retag(b[key])
+
+    # pair list: drop pairs with a dead endpoint, renumber the rest
+    pa = _retag(b["pair_a"])
+    pb = _retag(b["pair_b"])
+    pw = np.asarray(b["pair_w"], np.float32)
+    keep = (pa >= 0) & (pb >= 0)
+    pa, pb, pw = pa[keep], pb[keep], pw[keep]
+    lo = np.minimum(pa, pb)
+    hi = np.maximum(pa, pb)
+    order = np.argsort(lo.astype(np.int64) * (n_live + 1) + hi, kind="stable")
+    b["pair_a"], b["pair_b"], b["pair_w"] = lo[order], hi[order], pw[order]
+
+    if config.use_cms and "theta_table" in b:
+        # the sketch hashes ids — rebuild it over the renumbered pairs at
+        # their current estimated weights (still a one-sided estimate),
+        # resized for the live cluster count (a chain cold-started on a
+        # small prefix otherwise keeps that prefix's narrow width forever)
+        from ..core.cms import suggest_params
+
+        old = CMSketch(table=jnp.asarray(b["theta_table"]),
+                       seeds=jnp.asarray(b["theta_seeds"]))
+        w, _d = suggest_params(config.cms_epsilon, config.cms_nu)
+        width = w * max(1, int(math.isqrt(max(n_live, 1))))
+        fresh = CMSketch(
+            table=jnp.zeros((old.table.shape[0], width), old.table.dtype),
+            seeds=old.seeds)
+        if b["pair_a"].size:
+            fresh = cms_update(
+                fresh, pair_key(jnp.asarray(b["pair_a"]),
+                                jnp.asarray(b["pair_b"])),
+                jnp.asarray(b["pair_w"], jnp.uint32))
+        b["theta_table"] = np.asarray(fresh.table)
+        b["theta_seeds"] = np.asarray(fresh.seeds)
+        b["pair_w"] = np.asarray(cms_query(fresh, pair_key(
+            jnp.asarray(b["pair_a"]), jnp.asarray(b["pair_b"])))
+        ).astype(np.float32)
+
+    _invalidate_journal(b)
+    return b, n_dropped

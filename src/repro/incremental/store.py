@@ -9,10 +9,13 @@ consumer name, a config fingerprint, and the stream position travel
 carry from its provenance, and the CRC layer covers the metadata too.
 
 Validation on load is strict by construction: a carry written under a
-different consumer, a different config fingerprint, or an incompatible
-stream position **raises** :class:`CarryMismatchError` instead of silently
-seeding a warm start with foreign state.  (A corrupted checkpoint already
-raises ``IOError`` from the CRC verify underneath.)
+different consumer, a different config fingerprint, an incompatible
+stream position, or a different **carry representation generation**
+(``repro.streaming.carry.CARRY_REPR`` — a pre-refactor monotone-bitmap
+checkpoint must not seed the counted algebra) **raises**
+:class:`CarryMismatchError` instead of silently seeding a warm start with
+foreign state.  (A corrupted checkpoint already raises ``IOError`` from
+the CRC verify underneath.)
 
 Steps are keyed by **stream position** (edges ingested when the carry was
 taken), so ``load()`` with no step resumes from the furthest-ingested
@@ -36,6 +39,7 @@ from ..checkpoint.manager import (
     restore_checkpoint,
     save_checkpoint,
 )
+from ..streaming.carry import CARRY_REPR
 
 __all__ = ["CarryStore", "CarryMismatchError", "config_fingerprint"]
 
@@ -98,6 +102,7 @@ class CarryStore:
         """
         meta = {
             "format": _FORMAT,
+            "carry_repr": CARRY_REPR,
             "consumer": str(consumer),
             "config_hash": config_fingerprint(config),
             "config": dict(config),
@@ -147,6 +152,17 @@ class CarryStore:
         if meta.get("format") != _FORMAT:
             raise CarryMismatchError(
                 f"unsupported carry format {meta.get('format')!r}")
+        if meta.get("carry_repr") != CARRY_REPR:
+            # a checkpoint from the pre-refactor monotone (OR/MAX bitmap)
+            # representation: its replica tables are booleans and its
+            # cluster state has no membership counters — restoring it
+            # into the counted algebra would silently mis-account every
+            # later retraction, so refuse loudly instead.
+            raise CarryMismatchError(
+                f"carry was written under representation "
+                f"{meta.get('carry_repr')!r} but this build speaks the "
+                f"counted (group-structured) representation {CARRY_REPR}; "
+                "re-run the cold start to produce a compatible carry")
         if consumer is not None and meta["consumer"] != consumer:
             raise CarryMismatchError(
                 f"carry was written by consumer {meta['consumer']!r}, "

@@ -15,8 +15,11 @@ from .ops import (  # noqa: F401
 from .ref import (  # noqa: F401
     greedy_chunk,
     greedy_init,
+    greedy_retract_chunk,
     grid_chunk,
     grid_init,
+    grid_retract_chunk,
     hdrf_chunk,
     hdrf_init,
+    hdrf_retract_chunk,
 )

@@ -9,10 +9,19 @@ produce bit-identical parts (tests/test_streaming.py).
 The scoring baselines' :class:`~repro.streaming.carry.PartitionerCarry`
 implementations live here too (``GreedyCarry`` / ``HdrfCarry`` /
 ``GridCarry``): they wrap the oracle/kernel dispatch as ``step_chunk`` and
-declare the parallel-ingest merge algebra — replica bitmaps OR, loads and
-partial degrees SUM, scenario constants (λ, k-mask, grid tables)
+declare the parallel-ingest merge algebra — counted replica tables and
+loads/partial degrees SUM, scenario constants (λ, k-mask, grid tables)
 replicated — so oracle and kernel stay in lockstep behind one protocol
-surface.
+surface.  All three implement :meth:`~repro.streaming.carry
+.PartitionerCarry.retract_chunk` **exactly**: given the per-edge parts
+recorded at insertion, deleting an edge subtracts precisely the load /
+replica-count / partial-degree accounting its insertion added.
+
+Kernel note: the fused kernel scores against the OR-projection (``> 0``)
+of the counted replica table — which is all scoring ever reads — and
+writes back a saturated 0/1 table; the wrapper therefore keeps the exact
+counters itself with one vectorized scatter-add over the chunk's picks,
+so kernel and oracle paths maintain identical counted state.
 """
 
 from __future__ import annotations
@@ -20,7 +29,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from ...streaming.carry import OR, REPLICATED, SUM, PartitionerCarry
+from ...streaming.carry import COUNTED, REPLICATED, SUM, PartitionerCarry
 from .kernel import stream_scan_tpu
 from . import ref as _ref
 
@@ -35,25 +44,35 @@ def kernel_fits(n_vertices: int, k: int, chunk_size: int) -> bool:
     return state <= _VMEM_STATE_BUDGET
 
 
+@jax.jit
+def _recount(rep, src, dst, parts):
+    """Fold a chunk's picks into the counted replica table (kernel path)."""
+    w = ((src != dst) & (parts >= 0)).astype(jnp.int32)
+    p = jnp.maximum(parts, 0)
+    rep = rep.at[src, p].add(w)
+    rep = rep.at[dst, p].add(w)
+    return rep
+
+
 def _greedy_kernel_chunk(carry, src, dst):
     load, rep = carry
     if not kernel_fits(rep.shape[0], rep.shape[1], src.shape[0]):
         return _ref.greedy_chunk(carry, src, dst)  # VMEM-gated fallback
-    parts, load2, rep2, _ = stream_scan_tpu(
-        src, dst, load, rep.astype(jnp.int32),
+    parts, load2, _, _ = stream_scan_tpu(
+        src, dst, load, rep,
         jnp.zeros((rep.shape[0],), jnp.int32), jnp.float32(0.0), mode="greedy",
     )
-    return (load2, rep2 > 0), parts
+    return (load2, _recount(rep, src, dst, parts)), parts
 
 
 def _hdrf_kernel_chunk(carry, src, dst):
     load, rep, pd, lam, kmask = carry
     if not kernel_fits(rep.shape[0], rep.shape[1], src.shape[0]):
         return _ref.hdrf_chunk(carry, src, dst)  # VMEM-gated fallback
-    parts, load2, rep2, pd2 = stream_scan_tpu(
-        src, dst, load, rep.astype(jnp.int32), pd, lam, mode="hdrf",
+    parts, load2, _, pd2 = stream_scan_tpu(
+        src, dst, load, rep, pd, lam, mode="hdrf",
     )
-    return (load2, rep2 > 0, pd2, lam, kmask), parts
+    return (load2, _recount(rep, src, dst, parts), pd2, lam, kmask), parts
 
 
 def make_chunk_fn(mode: str, *, use_kernel: bool | None = None):
@@ -81,9 +100,11 @@ def make_chunk_fn(mode: str, *, use_kernel: bool | None = None):
 
 
 class GreedyCarry(PartitionerCarry):
-    """PowerGraph Greedy as a carry: (load SUM, replica bitmap OR)."""
+    """PowerGraph Greedy as a carry: (load SUM, replica counters COUNTED)."""
 
-    merge_ops = (SUM, OR)
+    merge_ops = (SUM, COUNTED)
+    supports_retract = True
+    retract_exact = True
 
     def __init__(self, n_vertices: int, k: int, *, use_kernel: bool | None = None):
         self.n_vertices = int(n_vertices)
@@ -96,12 +117,17 @@ class GreedyCarry(PartitionerCarry):
     def step_chunk(self, carry, src, dst, n_valid, *extras):
         return self._chunk_fn(carry, src, dst)
 
+    def retract_chunk(self, carry, src, dst, n_valid, parts, *extras):
+        return _ref.greedy_retract_chunk(carry, src, dst, n_valid, parts)
+
 
 class HdrfCarry(PartitionerCarry):
-    """HDRF as a carry: (load SUM, replica bitmap OR, partial degrees SUM,
-    λ replicated, active-partition mask replicated)."""
+    """HDRF as a carry: (load SUM, replica counters COUNTED, partial
+    degrees SUM, λ replicated, active-partition mask replicated)."""
 
-    merge_ops = (SUM, OR, SUM, REPLICATED, REPLICATED)
+    merge_ops = (SUM, COUNTED, SUM, REPLICATED, REPLICATED)
+    supports_retract = True
+    retract_exact = True
 
     def __init__(self, n_vertices: int, k: int, lam: float = 1.1, *,
                  k_active: int | None = None, use_kernel: bool | None = None):
@@ -118,11 +144,16 @@ class HdrfCarry(PartitionerCarry):
     def step_chunk(self, carry, src, dst, n_valid, *extras):
         return self._chunk_fn(carry, src, dst)
 
+    def retract_chunk(self, carry, src, dst, n_valid, parts, *extras):
+        return _ref.hdrf_retract_chunk(carry, src, dst, n_valid, parts)
+
 
 class GridCarry(PartitionerCarry):
     """Grid partitioning as a carry: (load SUM, row/col/#cols replicated)."""
 
     merge_ops = (SUM, REPLICATED, REPLICATED, REPLICATED)
+    supports_retract = True
+    retract_exact = True
 
     def __init__(self, k: int, row, col, n_cols: int):
         self.k = int(k)
@@ -135,3 +166,6 @@ class GridCarry(PartitionerCarry):
 
     def step_chunk(self, carry, src, dst, n_valid, *extras):
         return _ref.grid_chunk(carry, src, dst)
+
+    def retract_chunk(self, carry, src, dst, n_valid, parts, *extras):
+        return _ref.grid_retract_chunk(carry, src, dst, n_valid, parts)

@@ -28,6 +28,19 @@ Incremental re-partitioning (warm-start replay of only the new edges; see
   # refinement past --drift-threshold)
   python -m repro.launch.partition --graph community:4000 --k 8 \
       --partitioner s5p --resume-carry /data/carry --delta rmat:10
+  # delete edges against the saved carry: the oldest 10 %, a seeded
+  # random 5 %, or the most recent 2000 (exact counted retraction for
+  # greedy/hdrf/grid; tombstoned + drift-refined for s5p)
+  python -m repro.launch.partition --graph community:4000 --k 8 \
+      --partitioner s5p --resume-carry /data/carry --delete first:0.1
+  python -m repro.launch.partition --graph community:4000 --k 8 \
+      --partitioner hdrf --resume-carry /data/carry --delete frac:0.05
+
+Sliding-window streaming (track the last W edges continuously; see
+``repro.streaming.window`` + ``repro.incremental.s5p_sliding_window``):
+
+  python -m repro.launch.partition --graph rmat:14 --k 8 \
+      --partitioner s5p --window-edges 65536 --window-step 8192
   # out-of-core flavor: grow the shard directory in place, then resume —
   # the delta is everything past the carry's recorded stream position
   python -m repro.launch.partition --graph rmat:12 --write-shards /data/g \
@@ -106,13 +119,43 @@ def write_shards_cli(graph: str, out_dir: str, shard_edges: int,
     return str(mpath)
 
 
+def _parse_delete(spec: str, n_edges: int, seed: int) -> np.ndarray:
+    """``--delete`` spec → arrival indices.
+
+    ``first:X`` / ``last:X`` — the oldest / most recent X edges (a count,
+    or a fraction when X < 1); ``frac:F`` — a seeded random fraction.
+    """
+    kind, _, arg = spec.partition(":")
+    try:
+        x = float(arg)
+    except ValueError:
+        raise ValueError(f"--delete {spec!r}: expected a number after ':'")
+    if kind in ("first", "last"):
+        count = int(round(x * n_edges)) if 0 < x < 1 else int(x)
+        count = max(0, min(count, n_edges))
+        return (np.arange(count, dtype=np.int64) if kind == "first"
+                else np.arange(n_edges - count, n_edges, dtype=np.int64))
+    if kind == "frac":
+        if not 0 <= x <= 1:
+            raise ValueError(f"--delete frac: needs a fraction in [0, 1]")
+        rng = np.random.default_rng(seed + 0x5EED)
+        count = int(round(x * n_edges))
+        return np.sort(rng.choice(n_edges, size=count, replace=False)
+                       ).astype(np.int64)
+    raise ValueError(
+        f"unknown --delete spec {spec!r}; one of first:X | last:X | frac:F")
+
+
 def run(graph: str, k: int, partitioner: str = "s5p", seed: int = 0,
         compare: bool = False, *, chunk_size: int = 1 << 16,
         ordering: str = "natural", window: int = 4096,
         num_streams: int = 1, super_chunk: int = 8,
         save_carry: str | None = None, resume_carry: str | None = None,
-        delta: str | None = None, drift_threshold: float | None = None,
-        refine_rounds: int | None = None):
+        delta: str | None = None, delete: str | None = None,
+        drift_threshold: float | None = None,
+        refine_rounds: int | None = None,
+        xi_refresh_threshold: float | None = None,
+        window_edges: int | None = None, window_step: int | None = None):
     for pname, v in (("k", k), ("chunk_size", chunk_size), ("window", window),
                      ("num_streams", num_streams), ("super_chunk", super_chunk)):
         if v < 1:
@@ -129,15 +172,42 @@ def run(graph: str, k: int, partitioner: str = "s5p", seed: int = 0,
         src, dst = stream.arrival_arrays()
     else:
         src, dst, n = load_graph(graph, seed)
-    if save_carry or resume_carry or delta:
+    if window_edges is not None:
+        if compare:
+            raise ValueError("--window-edges runs a single partitioner, "
+                             "not --compare")
+        if num_streams > 1:
+            raise ValueError("--window-edges is sequential (the per-step "
+                             "delta/retract batches are not sharded); drop "
+                             "--num-streams")
+        for flag, val in (("--save-carry", save_carry),
+                          ("--resume-carry", resume_carry),
+                          ("--delta", delta), ("--delete", delete)):
+            if val:
+                raise ValueError(
+                    f"{flag} does not combine with --window-edges (the "
+                    "window loop manages its own bundle in memory)")
+        try:
+            return _run_window_cli(
+                src, dst, n, k, partitioner, seed, window_edges, window_step,
+                stream=stream, chunk_size=chunk_size, ordering=ordering,
+                drift_threshold=drift_threshold,
+                refine_rounds=refine_rounds,
+                xi_refresh_threshold=xi_refresh_threshold)
+        finally:
+            if stream is not None:
+                stream.close()
+    if save_carry or resume_carry or delta or delete:
         try:
             return _run_incremental_cli(
                 graph, src, dst, n, k, partitioner, seed, compare,
                 stream=stream, chunk_size=chunk_size, ordering=ordering,
                 num_streams=num_streams, super_chunk=super_chunk,
                 save_carry=save_carry, resume_carry=resume_carry,
-                delta=delta, drift_threshold=drift_threshold,
-                refine_rounds=refine_rounds)
+                delta=delta, delete=delete,
+                drift_threshold=drift_threshold,
+                refine_rounds=refine_rounds,
+                xi_refresh_threshold=xi_refresh_threshold)
         finally:
             if stream is not None:
                 stream.close()
@@ -177,14 +247,66 @@ def run(graph: str, k: int, partitioner: str = "s5p", seed: int = 0,
     return rows
 
 
-def _run_incremental_cli(graph, src, dst, n, k, partitioner, seed, compare,
-                         *, stream, chunk_size, ordering, num_streams,
-                         super_chunk, save_carry, resume_carry, delta,
-                         drift_threshold, refine_rounds):
-    """``--save-carry`` / ``--resume-carry`` / ``--delta`` flows."""
+def _s5p_cfg(k, seed, chunk_size, ordering, num_streams, super_chunk,
+             drift_threshold, refine_rounds, xi_refresh_threshold):
     import dataclasses
 
     from ..core import S5PConfig
+
+    cfg = S5PConfig(k=k, seed=seed, chunk_size=chunk_size, ordering=ordering,
+                    num_streams=num_streams, super_chunk=super_chunk)
+    overrides = {}
+    if drift_threshold is not None:
+        overrides["drift_rf_threshold"] = drift_threshold
+    if refine_rounds is not None:
+        overrides["refine_rounds"] = refine_rounds
+    if xi_refresh_threshold is not None:
+        overrides["xi_refresh_threshold"] = xi_refresh_threshold
+    return dataclasses.replace(cfg, **overrides) if overrides else cfg
+
+
+def _run_window_cli(src, dst, n, k, partitioner, seed, window_edges,
+                    window_step, *, stream, chunk_size, ordering,
+                    drift_threshold, refine_rounds, xi_refresh_threshold):
+    """``--window-edges`` flow: continuous sliding-window partitioning."""
+    from ..incremental import s5p_sliding_window
+
+    if partitioner != "s5p":
+        raise ValueError("--window-edges drives the s5p pipeline; use "
+                         "--partitioner s5p (scan partitioners delete via "
+                         "--resume-carry --delete)")
+    if ordering != "natural":
+        raise ValueError("sliding windows are defined over arrival order; "
+                         "drop --ordering")
+    cfg = _s5p_cfg(k, seed, chunk_size, ordering, 1, 8, drift_threshold,
+                   refine_rounds, xi_refresh_threshold)
+    t0 = time.time()
+    history, _ = s5p_sliding_window(src, dst, n, cfg, window_edges,
+                                    step_edges=window_step, stream=stream)
+    dt = time.time() - t0
+    for st_ in history:
+        flags = "".join((
+            "F" if st_.filling else "-",
+            "R" if st_.refined else "-",
+            "B" if st_.rolled_back else "-",
+            "C" if st_.n_compacted else "-",
+            "X" if st_.needs_cold_restart else "-",
+        ))
+        print(f"step {st_.step:4d} window=[{st_.lo},{st_.hi}) "
+              f"RF={st_.rf:7.3f} balance={st_.balance:5.2f} "
+              f"+{st_.n_inserted}/-{st_.n_retracted} churn={st_.churn:.2f} "
+              f"xi_drift={st_.xi_drift:.2f} [{flags}]")
+    print(f"[window] {len(history)} steps, {dt:.1f}s total "
+          f"({dt / max(len(history), 1):.2f}s/step)")
+    return history
+
+
+def _run_incremental_cli(graph, src, dst, n, k, partitioner, seed, compare,
+                         *, stream, chunk_size, ordering, num_streams,
+                         super_chunk, save_carry, resume_carry, delta,
+                         delete, drift_threshold, refine_rounds,
+                         xi_refresh_threshold):
+    """``--save-carry`` / ``--resume-carry`` / ``--delta`` / ``--delete``."""
     from ..incremental import cold_start, run_incremental
 
     if compare:
@@ -193,6 +315,9 @@ def _run_incremental_cli(graph, src, dst, n, k, partitioner, seed, compare,
     if delta and not resume_carry:
         raise ValueError("--delta needs --resume-carry (an insertion batch "
                          "is replayed against a saved carry)")
+    if delete and not resume_carry:
+        raise ValueError("--delete needs --resume-carry (deletions retract "
+                         "against a saved carry)")
     if ordering != "natural":
         raise ValueError(
             "incremental carries assume natural (insertion-order) streams; "
@@ -205,28 +330,26 @@ def _run_incremental_cli(graph, src, dst, n, k, partitioner, seed, compare,
         dst = np.concatenate([np.asarray(dst, np.int32),
                               np.asarray(ddst, np.int32)])
         n = max(n, dn)
-    cfg = S5PConfig(k=k, seed=seed, chunk_size=chunk_size, ordering=ordering,
-                    num_streams=num_streams, super_chunk=super_chunk)
-    overrides = {}
-    if drift_threshold is not None:
-        overrides["drift_rf_threshold"] = drift_threshold
-    if refine_rounds is not None:
-        overrides["refine_rounds"] = refine_rounds
-    if overrides:
-        cfg = dataclasses.replace(cfg, **overrides)
+    cfg = _s5p_cfg(k, seed, chunk_size, ordering, num_streams, super_chunk,
+                   drift_threshold, refine_rounds, xi_refresh_threshold)
 
     if resume_carry:
+        delete_idx = _parse_delete(delete, len(src), seed) if delete else None
         t0 = time.time()
         res = run_incremental(
             resume_carry, partitioner, src, dst, n, k, seed=seed,
-            chunk_size=chunk_size, s5p_config=cfg,
+            chunk_size=chunk_size, s5p_config=cfg, delete=delete_idx,
             num_streams=num_streams, super_chunk=super_chunk, save=True,
             save_dir=save_carry)
         dt = time.time() - t0
+        cold_note = (" NEEDS-COLD-RESTART"
+                     if res.needs_cold_restart else "")
         print(f"{partitioner:10s} RF={res.rf:7.3f} balance={res.balance:5.2f} "
-              f"delta={res.n_delta_edges} replay={res.replay_fraction:.1%} "
-              f"drift={res.rf_drift:+.3f} refined={res.refined} "
-              f"rounds={res.game_rounds}  {dt:6.1f}s")
+              f"delta={res.n_delta_edges} deleted={res.n_retracted} "
+              f"replay={res.replay_fraction:.1%} "
+              f"drift={res.rf_drift:+.3f} churn={res.churn:.2f} "
+              f"refined={res.refined} rolled_back={res.rolled_back} "
+              f"rounds={res.game_rounds}  {dt:6.1f}s{cold_note}")
         return res
     t0 = time.time()
     parts, path = cold_start(save_carry, partitioner, src, dst, n, k,
@@ -295,12 +418,26 @@ def main():
     ap.add_argument("--delta", default=None, metavar="SPEC",
                     help="insertion batch (same specs as --graph) appended "
                          "to the stream before resuming")
+    ap.add_argument("--delete", default=None, metavar="SPEC",
+                    help="deletion batch against a resumed carry: first:X | "
+                         "last:X (count, or fraction when X < 1) | frac:F "
+                         "(seeded random fraction)")
+    ap.add_argument("--window-edges", type=_positive_int, default=None,
+                    help="sliding-window mode: continuously partition the "
+                         "last W edges of the stream (s5p)")
+    ap.add_argument("--window-step", type=_positive_int, default=None,
+                    help="edges admitted per sliding-window step "
+                         "(default: min(chunk-size, window-edges))")
     ap.add_argument("--drift-threshold", type=float, default=None,
                     help="relative RF drift that triggers game refinement "
                          "on resume (s5p; default from S5PConfig)")
     ap.add_argument("--refine-rounds", type=int, default=None,
                     help="refinement budget in Stackelberg rounds "
                          "(s5p; 0 disables)")
+    ap.add_argument("--xi-refresh-threshold", type=float, default=None,
+                    help="relative ξ/κ drift past which a warm chain "
+                         "reports needs_cold_restart (s5p; default from "
+                         "S5PConfig)")
     args = ap.parse_args()
     if args.append and not args.write_shards:
         ap.error("--append only makes sense with --write-shards DIR")
@@ -313,8 +450,10 @@ def main():
         window=args.window, num_streams=args.num_streams,
         super_chunk=args.super_chunk, save_carry=args.save_carry,
         resume_carry=args.resume_carry, delta=args.delta,
-        drift_threshold=args.drift_threshold,
-        refine_rounds=args.refine_rounds)
+        delete=args.delete, drift_threshold=args.drift_threshold,
+        refine_rounds=args.refine_rounds,
+        xi_refresh_threshold=args.xi_refresh_threshold,
+        window_edges=args.window_edges, window_step=args.window_step)
 
 
 if __name__ == "__main__":

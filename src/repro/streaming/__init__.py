@@ -29,19 +29,27 @@ structure of Fig. 2 (clustering pass, Θ pass, placement pass are three
 replays of one stream); *orderings* model arrival-order robustness (§6.5
 studies stream order sensitivity).
 
-Carry protocol + parallel ingest
---------------------------------
-``carry`` defines :class:`PartitionerCarry` — ``init / step_chunk / merge /
-finalize`` with per-field merge semantics (replica bitmaps OR, loads and
-cluster volumes SUM, HDRF degree estimates SUM, Θ sketch tables SUM,
-assignment tables MAX) — and every streaming consumer in the repo (the
-greedy/HDRF/grid scoring scans, Alg. 1 clustering, the Θ pass, Alg. 3
-placement, the degree precompute) is an implementation of it.  ``parallel``
-shards one logical stream into S sub-streams (:class:`ParallelEdgeStream`)
-and drives any carry over them (:func:`run_parallel`) with carry
-all-reduces at super-chunk boundaries — single-device vmapped lanes or one
-lane per device under ``shard_map``; ``num_streams=1`` is bit-identical to
-the sequential driver by construction.
+Carry protocol + parallel ingest + deletions
+--------------------------------------------
+``carry`` defines :class:`PartitionerCarry` — ``init / step_chunk /
+retract_chunk / merge / finalize`` with per-field merge semantics that
+form an abelian **group** since the decremental refactor (replica tables
+are COUNTED occupancy counters that OR-project for scoring, loads /
+volumes / degree estimates / Θ sheets / assignment-table transitions
+SUM) — and every streaming consumer in the repo (the greedy/HDRF/grid
+scoring scans, Alg. 1 clustering, the Θ pass, Alg. 3 placement, the
+degree precompute) is an implementation of it.  ``parallel`` shards one
+logical stream into S sub-streams (:class:`ParallelEdgeStream`) and
+drives any carry over them (:func:`run_parallel`) with carry all-reduces
+at super-chunk boundaries — single-device vmapped lanes or one lane per
+device under ``shard_map``; ``num_streams=1`` is bit-identical to the
+sequential driver by construction.  The group structure is what makes
+**edge deletion** exact: :func:`run_retract` drives ``retract_chunk``
+over a deletion batch, subtracting precisely the accounting those edges'
+insertion added (given their recorded per-edge parts), and
+:class:`SlidingWindowStream` (``window``) turns any arrival-ordered
+stream into paired insert/expire events so a partitioner tracks the last
+W edges continuously.
 
 Out-of-core (graphs ≫ RAM)
 --------------------------
@@ -64,6 +72,8 @@ O(shard_edges + chunk + window).  CLI: ``python -m repro.launch.partition
 
 from .stream import Chunk, EdgeStream  # noqa: F401
 from .carry import (  # noqa: F401
+    CARRY_REPR,
+    COUNTED,
     MAX,
     OR,
     REPLICATED,
@@ -71,7 +81,13 @@ from .carry import (  # noqa: F401
     FnCarry,
     PartitionerCarry,
 )
-from .engine import as_stream, run_carry, run_scan, run_scan_batched  # noqa: F401
+from .engine import (  # noqa: F401
+    as_stream,
+    run_carry,
+    run_retract,
+    run_scan,
+    run_scan_batched,
+)
 from .parallel import ParallelEdgeStream, run_parallel  # noqa: F401
 from .oocstream import (  # noqa: F401
     HostBudget,
@@ -80,9 +96,11 @@ from .oocstream import (  # noqa: F401
     read_manifest,
     write_shards,
 )
+from .window import SlidingWindowStream, WindowEvent  # noqa: F401
 
-__all__ = ["Chunk", "EdgeStream", "as_stream", "run_carry", "run_scan",
-           "run_scan_batched", "PartitionerCarry", "FnCarry", "SUM", "OR",
-           "MAX", "REPLICATED", "ParallelEdgeStream", "run_parallel",
-           "HostBudget", "ShardedEdgeStream", "read_manifest", "write_shards",
-           "append_shards"]
+__all__ = ["Chunk", "EdgeStream", "as_stream", "run_carry", "run_retract",
+           "run_scan", "run_scan_batched", "PartitionerCarry", "FnCarry",
+           "SUM", "COUNTED", "OR", "MAX", "REPLICATED", "CARRY_REPR",
+           "ParallelEdgeStream", "run_parallel", "HostBudget",
+           "ShardedEdgeStream", "read_manifest", "write_shards",
+           "append_shards", "SlidingWindowStream", "WindowEvent"]

@@ -18,22 +18,46 @@ leaf of the carry pytree in ``jax.tree_util`` flattening order:
   HDRF partial-degree estimates, Θ count-min tables, degree counts.  Merging
   carries that diverged from a common ``base`` sums their *deltas*
   (``base + Σ (cᵢ − base)``), so the base is never double-counted.
-- ``OR``         — monotone union: replica bitmaps (a vertex is replicated on
-  a partition if *any* sub-stream put it there).  Implemented as elementwise
-  maximum, which is ∨ on bools and works for int-encoded bitmaps.
-- ``MAX``        — monotone resolution for assignment tables and id counters:
-  vertex→cluster entries are ``-1`` when unassigned, so ``max`` prefers any
-  assignment over none and breaks conflicting assignments deterministically.
+- ``COUNTED``    — occupancy counters standing in for what used to be a
+  monotone set: replica "bitmaps" are small per-(vertex, partition) int
+  counters that **OR-project** (``> 0``) for scoring — the projection is
+  bit-identical to the old boolean bitmap on insert-only streams, and the
+  counter itself is an abelian-group element, so deletions subtract
+  exactly (count hits 0 ⇒ the replica vanishes, no tombstone scan).
+  Merge semantics are SUM.
 - ``REPLICATED`` — scenario constants threaded through the carry (HDRF λ,
   the padded-k mask, grid row/col tables): identical in every sub-stream,
   merged by taking the first.
+- ``OR``/``MAX`` — the legacy monotone ops (boolean union, prefer-any-
+  assignment).  Kept for external ``FnCarry``-style consumers, but **no
+  in-repo carry declares them anymore**: the decremental refactor moved
+  every bitmap to ``COUNTED`` and every assignment/id-counter table to
+  ``SUM``-of-transitions (the merged value telescopes ``base + Σ (cᵢ −
+  base)``, which equals the writer's value when one sub-stream wrote it
+  and a deterministic — clamped-at-projection — resolution otherwise).
 
-Why these laws matter: ``SUM``/``OR``/``MAX`` over integer/bool arrays are
-associative and commutative, and ``init()`` is their identity — so the
-merged carry is independent of worker count, merge tree shape, and arrival
-interleaving of the merge itself (``tests/test_carry.py`` pins this
-algebra property-based).  That is exactly the licence ``run_parallel``
-needs to all-reduce carries with one collective per super-chunk.
+Why these laws matter twice over:
+
+1. *Parallel ingest* — ``SUM``/``COUNTED`` over integer arrays are
+   associative and commutative with a shared merge base, so the merged
+   carry is independent of worker count, merge tree shape, and arrival
+   interleaving (``tests/test_carry.py`` pins this property-based).  That
+   is the licence ``run_parallel`` needs to all-reduce carries with one
+   collective per super-chunk.
+2. *Deletions* — every non-replicated field now lives in an abelian
+   **group**, not just a monoid: :meth:`PartitionerCarry.signed_delta`
+   forms the difference of two carries, :meth:`~PartitionerCarry.negate`
+   inverts it, and ``merge(merge(c, δ), −δ) == c`` holds **bitwise**
+   (integer arithmetic; uint32 sketch tables are the group ℤ/2³²).
+   :meth:`~PartitionerCarry.retract_chunk` is the per-chunk face of the
+   same algebra: it subtracts exactly the accounting ``step_chunk`` added
+   for those edges (given their recorded per-edge ``parts``), which is
+   what makes edge deletion and sliding-window expiry exact for the
+   scoring carries.
+
+``CARRY_REPR`` names this representation generation; persisted carries
+record it so a pre-refactor (monotone-bitmap) checkpoint is rejected with
+a clear error instead of mis-restoring (see ``repro.incremental.store``).
 """
 
 from __future__ import annotations
@@ -45,20 +69,32 @@ import jax.numpy as jnp
 
 __all__ = [
     "SUM",
+    "COUNTED",
     "OR",
     "MAX",
     "REPLICATED",
     "MERGE_OPS",
+    "CARRY_REPR",
     "PartitionerCarry",
     "FnCarry",
 ]
 
 SUM = "sum"
+COUNTED = "counted"
 OR = "or"
 MAX = "max"
 REPLICATED = "replicated"
 
-MERGE_OPS = (SUM, OR, MAX, REPLICATED)
+MERGE_OPS = (SUM, COUNTED, OR, MAX, REPLICATED)
+
+#: group ops — fields whose values form an abelian group under merge
+#: (exact negation / subtraction; the substrate of edge deletion)
+GROUP_OPS = (SUM, COUNTED)
+
+#: representation generation of the carry algebra.  2 = the counted /
+#: group-structured representation (decremental); 1 was the monotone
+#: OR/MAX generation, whose checkpoints must not seed this code.
+CARRY_REPR = 2
 
 
 def _or_leaf(a, b):
@@ -98,6 +134,15 @@ class PartitionerCarry:
     #: False for state-only consumers whose step_chunk returns parts=None
     emits_parts: bool = True
 
+    #: True once the consumer implements :meth:`retract_chunk`
+    supports_retract: bool = False
+
+    #: True when ``retract_chunk(step_chunk(c, chunk), chunk, parts) == c``
+    #: holds bitwise for unpadded chunks (the scoring carries); False for
+    #: consumers whose retraction is a documented approximation (Alg. 1
+    #: clustering — migrations are history-dependent).
+    retract_exact: bool = False
+
     # ------------------------------------------------------------ protocol
     def init(self):
         raise NotImplementedError
@@ -105,8 +150,79 @@ class PartitionerCarry:
     def step_chunk(self, carry, src, dst, n_valid, *extras):
         raise NotImplementedError
 
+    def retract_chunk(self, carry, src, dst, n_valid, parts, *extras):
+        """Undo the accounting ``step_chunk`` performed for these edges.
+
+        ``parts`` is the per-edge result recorded when the edges were
+        ingested (``None`` for state-only consumers).  Only entries with
+        index ``< n_valid`` are retracted — chunk padding is never
+        touched, so a deletion batch may be chunked arbitrarily.
+        Retraction is order-independent (pure subtraction on the group
+        fields), so chunks may be retracted in any order."""
+        raise NotImplementedError(
+            f"{type(self).__name__} does not support edge deletion")
+
     def finalize(self, carry):
         return carry
+
+    # -------------------------------------------------------- group algebra
+    def signed_delta(self, after, before):
+        """The group difference ``after ⊖ before`` per field.
+
+        SUM/COUNTED fields subtract (ℤ, or ℤ/2³² for unsigned leaves);
+        REPLICATED fields pass ``after`` through unchanged.  Raises for
+        the legacy monotone ops — they have no inverse."""
+        fa, treedef = jax.tree_util.tree_flatten(after)
+        fb = jax.tree_util.tree_leaves(before)
+        _check_ops(self.merge_ops, len(fa))
+        out = []
+        for op, a, b in zip(self.merge_ops, fa, fb):
+            if op in GROUP_OPS:
+                out.append(jnp.asarray(a) - jnp.asarray(b))
+            elif op == REPLICATED:
+                out.append(a)
+            else:
+                raise ValueError(
+                    f"merge op {op!r} is monotone — it has no signed delta")
+        return jax.tree_util.tree_unflatten(treedef, out)
+
+    def negate(self, delta):
+        """The group inverse of a signed delta (identity on REPLICATED)."""
+        flat, treedef = jax.tree_util.tree_flatten(delta)
+        _check_ops(self.merge_ops, len(flat))
+        out = []
+        for op, x in zip(self.merge_ops, flat):
+            if op in GROUP_OPS:
+                x = jnp.asarray(x)
+                # unsigned leaves negate in ℤ/2³² (two's complement)
+                out.append((jnp.zeros((), x.dtype) - x).astype(x.dtype))
+            elif op == REPLICATED:
+                out.append(x)
+            else:
+                raise ValueError(
+                    f"merge op {op!r} is monotone — it has no inverse")
+        return jax.tree_util.tree_unflatten(treedef, out)
+
+    def apply_delta(self, carry, delta):
+        """``carry ⊕ delta``: add group fields, keep replicated ones.
+
+        ``apply_delta(apply_delta(c, δ), negate(δ)) == c`` bitwise — the
+        group law every decremental consumer builds on."""
+        fc, treedef = jax.tree_util.tree_flatten(carry)
+        fd = jax.tree_util.tree_leaves(delta)
+        _check_ops(self.merge_ops, len(fc))
+        out = []
+        for op, c, d in zip(self.merge_ops, fc, fd):
+            if op in GROUP_OPS:
+                c = jnp.asarray(c)
+                out.append((c + jnp.asarray(d)).astype(c.dtype))
+            elif op == REPLICATED:
+                out.append(c)
+            else:
+                raise ValueError(
+                    f"merge op {op!r} is monotone — signed deltas do not "
+                    "apply")
+        return jax.tree_util.tree_unflatten(treedef, out)
 
     # ------------------------------------------------------------- merging
     def merge(self, carries: Iterable[Any], base: Any | None = None):
@@ -131,7 +247,7 @@ class PartitionerCarry:
         out = []
         for i, op in enumerate(self.merge_ops):
             leaves = [jnp.asarray(c[i]) for c in cols]
-            if op == SUM:
+            if op in GROUP_OPS:
                 acc = leaves[0]
                 for x in leaves[1:]:
                     acc = acc + x
@@ -158,7 +274,7 @@ class PartitionerCarry:
         out = []
         for i, op in enumerate(self.merge_ops):
             x = jnp.asarray(flat[i])
-            if op == SUM:
+            if op in GROUP_OPS:
                 acc = jnp.sum(x, axis=0)
                 if base_flat is not None:
                     b = jnp.asarray(base_flat[i])
@@ -183,7 +299,7 @@ class PartitionerCarry:
         out = []
         for i, op in enumerate(self.merge_ops):
             x = flat[i]
-            if op == SUM:
+            if op in GROUP_OPS:
                 b = base_flat[i].astype(x.dtype)
                 out.append(b + jax.lax.psum(x - b, axis))
             elif op in (OR, MAX):

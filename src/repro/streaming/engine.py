@@ -29,7 +29,8 @@ import jax.numpy as jnp
 from .carry import FnCarry, PartitionerCarry
 from .stream import DEFAULT_CHUNK, EdgeStream
 
-__all__ = ["as_stream", "run_carry", "run_scan", "run_scan_batched"]
+__all__ = ["as_stream", "run_carry", "run_retract", "run_scan",
+           "run_scan_batched"]
 
 
 def as_stream(src, dst, n_vertices=None, *, stream=None, chunk_size=None):
@@ -66,6 +67,29 @@ def run_carry(stream: EdgeStream, pc: PartitionerCarry, *extras, carry=None):
         return None, result
     parts = outs[0] if len(outs) == 1 else jnp.concatenate(outs)
     return stream.scatter_back(parts), result
+
+
+def run_retract(stream: EdgeStream, pc: PartitionerCarry, parts, *extras,
+                carry):
+    """Drive ``pc.retract_chunk`` over every chunk of ``stream``.
+
+    The inverse-direction driver of :func:`run_carry`: ``stream`` holds
+    the edges being **deleted**, ``parts`` their recorded per-edge results
+    (``None`` for state-only consumers), and ``carry`` the live state the
+    deletion is subtracted from.  Retraction is pure subtraction on the
+    carry's group fields, so the deletion batch may be chunked and
+    ordered arbitrarily.  Returns the retracted carry (not finalized —
+    retraction composes with further folds)."""
+    if parts is None:
+        for ch in stream.chunks(*extras):
+            carry = pc.retract_chunk(carry, ch.src, ch.dst,
+                                     jnp.int32(ch.n_valid), None, *ch.extras)
+        return carry
+    for ch in stream.chunks(parts, *extras):
+        carry = pc.retract_chunk(carry, ch.src, ch.dst,
+                                 jnp.int32(ch.n_valid), ch.extras[0],
+                                 *ch.extras[1:])
+    return carry
 
 
 def run_scan(

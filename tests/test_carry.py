@@ -104,25 +104,53 @@ def _fold_random(pc, n_extras, n, rng, n_chunks=2, chunk=17):
 
 
 def _check_merge_algebra(name, pc, n_extras, n, seed):
+    """The base-relative merge algebra every backend relies on.
+
+    Since the decremental refactor all non-replicated fields are group
+    elements merged as base + Σ(cᵢ − base) — so the laws are stated
+    against a shared merge base (``run_parallel`` always supplies one;
+    assignment tables init to −1, which is not the group identity)."""
     rng = np.random.default_rng(seed)
+    base = pc.init()
     c1 = _fold_random(pc, n_extras, n, rng)
     c2 = _fold_random(pc, n_extras, n, rng)
     c3 = _fold_random(pc, n_extras, n, rng)
     m = pc.merge
     # singleton merge is the bitwise identity
     assert _tree_equal(m([c1]), c1), name
-    # idempotent-safe w.r.t. the identity carry
-    assert _tree_equal(m([c1, pc.init()]), c1), name
-    assert _tree_equal(m([pc.init(), c1]), c1), name
+    # the base itself is the merge identity: base + (c1 − base) == c1
+    assert _tree_equal(m([c1, base], base=base), c1), name
+    assert _tree_equal(m([base, c1], base=base), c1), name
     # commutative
-    assert _tree_equal(m([c1, c2]), m([c2, c1])), name
-    # associative
-    assert _tree_equal(m([m([c1, c2]), c3]), m([c1, m([c2, c3])])), name
-    # flat n-ary merge == any fold
-    assert _tree_equal(m([c1, c2, c3]), m([m([c1, c2]), c3])), name
+    assert _tree_equal(m([c1, c2], base=base), m([c2, c1], base=base)), name
+    # associative: merging a merged pair against the same base equals the
+    # flat n-ary merge (the merged pair re-enters as one diverged carry)
+    flat = m([c1, c2, c3], base=base)
+    assert _tree_equal(m([m([c1, c2], base=base), c3], base=base), flat), name
+    assert _tree_equal(m([c1, m([c2, c3], base=base)], base=base), flat), name
     # stacked reduction agrees with the list form
     stacked = jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), c1, c2, c3)
-    assert _tree_equal(pc.merge_stacked(stacked), m([c1, c2, c3])), name
+    assert _tree_equal(pc.merge_stacked(stacked, base=base),
+                       m([c1, c2, c3], base=base)), name
+
+
+def _check_group_laws(name, pc, n_extras, n, seed):
+    """merge(c, δ) ∘ merge(·, −δ) is the identity for every carry type:
+    signed deltas form a group, bitwise (integer / ℤ-2³² arithmetic)."""
+    rng = np.random.default_rng(seed)
+    c = _fold_random(pc, n_extras, n, rng)
+    after = _fold_random(pc, n_extras, n, rng, n_chunks=3)
+    delta = pc.signed_delta(after, c)
+    # applying the delta reconstructs `after` exactly...
+    assert _tree_equal(pc.apply_delta(c, delta), after), name
+    # ...and applying its inverse is the identity, both ways round
+    assert _tree_equal(pc.apply_delta(pc.apply_delta(c, delta),
+                                      pc.negate(delta)), c), name
+    assert _tree_equal(
+        pc.apply_delta(pc.apply_delta(after, pc.negate(delta)), delta),
+        after), name
+    # double negation is the identity on the delta itself
+    assert _tree_equal(pc.negate(pc.negate(delta)), delta), name
 
 
 CARRY_NAMES = sorted(_make_carry_impls(8).keys())
@@ -137,6 +165,14 @@ def test_merge_algebra(name, seed):
     _check_merge_algebra(name, pc, n_extras, n, seed)
 
 
+@pytest.mark.parametrize("name", CARRY_NAMES)
+@pytest.mark.parametrize("seed", [0, 1])
+def test_group_laws(name, seed):
+    n = 23
+    pc, n_extras = _make_carry_impls(n)[name]
+    _check_group_laws(name, pc, n_extras, n, seed)
+
+
 if HAVE_HYPOTHESIS:
 
     @settings(max_examples=20, deadline=None)
@@ -145,6 +181,83 @@ if HAVE_HYPOTHESIS:
     def test_merge_algebra_fuzzed(name, seed, n):
         pc, n_extras = _make_carry_impls(n)[name]
         _check_merge_algebra(name, pc, n_extras, n, seed)
+
+    @settings(max_examples=20, deadline=None)
+    @given(name=st_.sampled_from(CARRY_NAMES), seed=st_.integers(0, 255),
+           n=st_.integers(2, 64))
+    def test_group_laws_fuzzed(name, seed, n):
+        pc, n_extras = _make_carry_impls(n)[name]
+        _check_group_laws(name, pc, n_extras, n, seed)
+
+
+# =================================================== 1b. exact retraction
+@pytest.mark.parametrize("name", CARRY_NAMES)
+@pytest.mark.parametrize("seed", [0, 7])
+def test_retract_is_exact_inverse_of_step(name, seed):
+    """For the exact-retract carries, inserting a batch and then deleting
+    it bitwise-restores the pre-batch carry — in any retraction order."""
+    n = 23
+    pc, n_extras = _make_carry_impls(n)[name]
+    if not pc.supports_retract:
+        pytest.skip(f"{name} does not retract")
+    rng = np.random.default_rng(seed)
+    before = _fold_random(pc, n_extras, n, rng)
+    after, log = _fold_chunks_from(pc, n_extras, n, rng, before)
+    if not pc.retract_exact:
+        # cluster: retraction is the documented approximation — check the
+        # exactly-counted fields (membership counters, local degrees)
+        got = after
+        for src, dst, parts, extras in reversed(log):
+            got = pc.retract_chunk(got, src, dst, jnp.int32(src.shape[0]),
+                                   parts, *extras)
+        assert np.array_equal(np.asarray(got.cnt_h), np.asarray(before.cnt_h))
+        assert np.array_equal(np.asarray(got.cnt_t), np.asarray(before.cnt_t))
+        assert np.array_equal(np.asarray(got.ld), np.asarray(before.ld))
+        return
+    # exact carries restore bitwise — and retraction order cannot matter
+    for order in (reversed(log), log):
+        got = after
+        for src, dst, parts, extras in order:
+            got = pc.retract_chunk(got, src, dst, jnp.int32(src.shape[0]),
+                                   parts, *extras)
+        assert _tree_equal(got, before), name
+
+
+def _fold_chunks_from(pc, n_extras, n, rng, carry, n_chunks=3, chunk=17):
+    log = []
+    for _ in range(n_chunks):
+        src = jnp.asarray(rng.integers(0, n, chunk).astype(np.int32))
+        dst = jnp.asarray(rng.integers(0, n, chunk).astype(np.int32))
+        extras = []
+        if n_extras:
+            extras = [
+                jnp.asarray(rng.integers(0, 2, chunk).astype(bool)),
+                jnp.asarray(rng.integers(0, 8, chunk).astype(np.int32)),
+                jnp.asarray(rng.integers(0, 8, chunk).astype(np.int32)),
+            ]
+        carry, parts = pc.step_chunk(carry, src, dst, jnp.int32(chunk), *extras)
+        log.append((src, dst, parts, extras))
+    return carry, log
+
+
+def test_run_retract_driver_roundtrip():
+    """run_carry over a deletion batch then run_retract with the recorded
+    parts is the identity on the carry (greedy, chunked arbitrarily)."""
+    from repro.streaming import run_retract
+
+    src, dst, n, _ = random_graph(1)
+    if len(src) < 64:
+        pytest.skip("graph too small")
+    cut = len(src) // 2
+    pc = GreedyCarry(n, K)
+    st_prefix = EdgeStream(src[:cut], dst[:cut], n, chunk_size=29)
+    _, before = run_carry(st_prefix, pc)
+    st_delta = EdgeStream(src[cut:], dst[cut:], n, chunk_size=29)
+    delta_parts, after = run_carry(st_delta, pc, carry=before)
+    # retract the delta through a *different* chunking than it arrived in
+    st_back = EdgeStream(src[cut:], dst[cut:], n, chunk_size=13)
+    got = run_retract(st_back, pc, np.asarray(delta_parts), carry=after)
+    assert _tree_equal(got, before)
 
 
 def test_merge_with_base_subtracts_deltas():
@@ -350,6 +463,71 @@ def test_cli_rejects_nonpositive_sizes(monkeypatch, capsys):
     # the library-level entry validates too (not just argparse)
     with pytest.raises(ValueError, match="num_streams"):
         cli.run("toy", 4, "hdrf", num_streams=0)
+
+
+# ===================== 4b. S5P bundle round-trip + repr-version guard
+def test_s5p_insert_then_delete_restores_carry_golden():
+    """Inserting a 10 % delta then deleting it bitwise-restores the
+    pre-delta S5P carry bundle, golden-anchored: the restored parts hash
+    is the pinned sequential golden of tests/test_streaming.py."""
+    import hashlib
+
+    from repro.core import S5PConfig
+    from repro.incremental import (
+        JOURNAL_PREFIX,
+        s5p_apply_delta,
+        s5p_apply_deletion,
+        s5p_cold_bundle,
+    )
+
+    def _h(a):
+        return hashlib.sha256(
+            np.ascontiguousarray(np.asarray(a)).tobytes()).hexdigest()[:16]
+
+    src, dst, n, _ = random_graph(0)
+    # the seed-era game parameters of the pinned goldens; refinement off so
+    # the insertion keeps its rollback journal intact
+    cfg = S5PConfig(k=4, use_cms=False, game_accept_prob=0.7,
+                    game_max_rounds=64, seed=0,
+                    drift_rf_threshold=float("inf"),
+                    drift_balance_threshold=float("inf"),
+                    drift_churn_threshold=float("inf"))
+    _, before = s5p_cold_bundle(src, dst, n, cfg)
+    assert _h(before["parts"]) == "5c2abcabc60d546d"  # GOLDEN[(0, "s5p")]
+    E0 = len(src)
+    rng = np.random.default_rng(9)
+    m = max(E0 // 10, 4)
+    full_src = np.concatenate([src, rng.integers(0, n, m).astype(np.int32)])
+    full_dst = np.concatenate([dst, rng.integers(0, n, m).astype(np.int32)])
+    mid, _ = s5p_apply_delta(before, cfg, full_src, full_dst, E0)
+    assert bool(mid["journal_valid"])
+    after, res = s5p_apply_deletion(mid, cfg, full_src, full_dst,
+                                    np.arange(E0, E0 + m))
+    assert res.rolled_back and res.n_retracted == m
+    skip = ("journal_valid", "journal_pos")
+    keys = {k_ for k_ in list(before) + list(after)
+            if not k_.startswith(JOURNAL_PREFIX) and k_ not in skip}
+    for key in sorted(keys):
+        a = np.asarray(before[key])
+        b = np.asarray(after[key])
+        assert a.shape == b.shape and np.array_equal(a, b), key
+    assert _h(after["parts"]) == "5c2abcabc60d546d"
+
+
+def test_store_rejects_pre_refactor_monotone_checkpoint(tmp_path,
+                                                        monkeypatch):
+    """A carry persisted under the old monotone (OR/MAX) representation
+    must raise CarryMismatchError, not silently mis-restore."""
+    from repro.incremental import CarryMismatchError, CarryStore
+    from repro.incremental import store as store_mod
+
+    pc = DegreeCarry(8)
+    st = CarryStore(tmp_path)
+    with monkeypatch.context() as mp:
+        mp.setattr(store_mod, "CARRY_REPR", 1)  # simulate a v1 writer
+        st.save(pc.init(), consumer="degree", config={"n": 8}, stream_pos=0)
+    with pytest.raises(CarryMismatchError, match="representation"):
+        st.load(consumer="degree", config={"n": 8})
 
 
 # ================================== 5. 8-device mesh quality (slow lane)

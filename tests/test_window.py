@@ -1,0 +1,278 @@
+"""Sliding-window streams + decremental partitioning end-to-end.
+
+Layers:
+
+1. *SlidingWindowStream* — event bookkeeping: inserts cover the stream
+   exactly once in arrival order, expiry is FIFO, the live window is
+   always the last W arrivals; OOC manifests stream identically; only
+   natural ordering is accepted.
+2. *Scan deletion* — greedy's counted retraction is exact end-to-end:
+   ingest the full stream then delete the suffix ⇒ the carry equals the
+   prefix-only cold start **bitwise** (and the driver's tombstones mark
+   exactly the deleted edges).
+3. *S5P window* — the warm chain maintains exactly the live window
+   (tombstoned parts outside, valid partitions inside), retractions count
+   toward drift, compaction keeps the combined id space bounded and
+   preserves the partition, and the ξ/κ refresh signal fires under
+   degree-shifting churn.
+4. *Slow lane* — the churn quality band: steady-state sliding-window RF
+   within 1.10× of a cold re-partition of the same window contents.
+"""
+
+import numpy as np
+import pytest
+
+from proptest import random_graph
+from repro.core import S5PConfig, replication_factor, s5p_partition
+from repro.incremental import (
+    compact_bundle,
+    run_incremental,
+    s5p_apply_deletion,
+    s5p_cold_bundle,
+    s5p_sliding_window,
+)
+from repro.incremental.driver import cold_start
+from repro.incremental.store import CarryStore
+from repro.streaming import EdgeStream, SlidingWindowStream, write_shards
+from repro.streaming.oocstream import ShardedEdgeStream
+
+K = 4
+
+
+# ================================================ 1. window stream events
+def test_window_events_cover_stream_fifo():
+    src, dst, n, _ = random_graph(1)
+    if len(src) < 64:
+        pytest.skip("graph too small")
+    st = EdgeStream(src, dst, n, chunk_size=1 << 16)
+    W, B = 40, 16
+    sw = SlidingWindowStream(st, W, step_edges=B)
+    seen, expired = [], []
+    for ev in sw.events():
+        assert ev.start == len(seen)
+        seen.extend(range(ev.start, ev.start + len(ev.src)))
+        np.testing.assert_array_equal(ev.src, src[ev.start:ev.hi])
+        np.testing.assert_array_equal(ev.expire_src, src[ev.expire_idx])
+        np.testing.assert_array_equal(ev.expire_dst, dst[ev.expire_idx])
+        expired.extend(ev.expire_idx.tolist())
+        # live window is exactly the last W arrivals (fewer while filling)
+        assert ev.hi - ev.lo == min(ev.hi, W)
+        assert expired == list(range(ev.lo))
+    assert seen == list(range(len(src)))
+    assert sw.n_steps == len(list(sw.events()))
+
+
+def test_window_stream_ooc_matches_in_memory(tmp_path):
+    src, dst, n, _ = random_graph(1)
+    if len(src) < 64:
+        pytest.skip("graph too small")
+    man = write_shards(tmp_path, src, dst, shard_edges=32, n_vertices=n)
+    with ShardedEdgeStream(man, chunk_size=1 << 16) as ooc:
+        evs_mem = list(SlidingWindowStream(
+            EdgeStream(src, dst, n), 48, step_edges=16).events())
+        evs_ooc = list(SlidingWindowStream(ooc, 48, step_edges=16).events())
+    assert len(evs_mem) == len(evs_ooc)
+    for a, b in zip(evs_mem, evs_ooc):
+        np.testing.assert_array_equal(a.src, b.src)
+        np.testing.assert_array_equal(a.dst, b.dst)
+        np.testing.assert_array_equal(a.expire_idx, b.expire_idx)
+        assert (a.lo, a.hi) == (b.lo, b.hi)
+
+
+def test_window_stream_validation():
+    src, dst, n, _ = random_graph(0)
+    st = EdgeStream(src, dst, n)
+    with pytest.raises(ValueError, match="window_edges"):
+        SlidingWindowStream(st, 0)
+    with pytest.raises(ValueError, match="step_edges"):
+        SlidingWindowStream(st, 8, step_edges=0)
+    shuffled = EdgeStream(src, dst, n, ordering="shuffled")
+    with pytest.raises(ValueError, match="arrival order"):
+        SlidingWindowStream(shuffled, 8)
+
+
+# ================================================== 2. scan deletion
+@pytest.mark.parametrize("name", ["greedy", "grid"])
+def test_scan_suffix_deletion_equals_prefix_cold_start(name, tmp_path):
+    """Exact counted retraction: ingest all, delete the suffix ⇒ the carry
+    bitwise-equals a cold start on the prefix alone."""
+    import jax
+
+    src, dst, n, _ = random_graph(1)
+    if len(src) < 64:
+        pytest.skip("graph too small")
+    E = len(src)
+    cut = int(E * 0.8)
+    cold_start(tmp_path / "full", name, src, dst, n, K, chunk_size=37)
+    res = run_incremental(tmp_path / "full", name, src, dst, n, K,
+                          chunk_size=37,
+                          delete=np.arange(cut, E), save=True)
+    assert res.n_retracted == E - cut
+    # tombstones: deleted parts are -1, prefix parts are untouched
+    cold_start(tmp_path / "prefix", name, src[:cut], dst[:cut], n, K,
+               chunk_size=37)
+    flat_full, _ = CarryStore(tmp_path / "full").load()
+    flat_pref, _ = CarryStore(tmp_path / "prefix").load()
+    np.testing.assert_array_equal(
+        np.asarray(flat_full["parts"])[:cut], flat_pref["parts"])
+    assert np.all(np.asarray(flat_full["parts"])[cut:] == -1)
+    for key in flat_pref:
+        if key in ("parts", "alive"):
+            continue
+        np.testing.assert_array_equal(
+            np.asarray(flat_full[key]), np.asarray(flat_pref[key]),
+            err_msg=f"{name}/{key}")
+
+
+def test_hdrf_deletion_keeps_valid_partitions(tmp_path):
+    src, dst, n, _ = random_graph(2)
+    if len(src) < 64:
+        pytest.skip("graph too small")
+    E = len(src)
+    rng = np.random.default_rng(0)
+    idx = np.sort(rng.choice(E, size=E // 5, replace=False))
+    cold_start(tmp_path, "hdrf", src, dst, n, K, chunk_size=41)
+    res = run_incremental(tmp_path, "hdrf", src, dst, n, K, chunk_size=41,
+                          delete=idx, save=True)
+    parts = np.asarray(res.parts)
+    assert np.all(parts[idx] == -1)
+    live = np.ones(E, bool)
+    live[idx] = False
+    live &= src != dst
+    assert np.all(parts[live] >= 0) and np.all(parts[live] < K)
+    # double deletion is rejected, in range is enforced
+    with pytest.raises(ValueError, match="already deleted"):
+        run_incremental(tmp_path, "hdrf", src, dst, n, K, chunk_size=41,
+                        delete=idx[:3], save=False)
+
+
+# ==================================================== 3. s5p windowing
+def _cfg(**kw):
+    base = dict(k=K, use_cms=True, seed=0, drift_rf_threshold=0.02,
+                drift_churn_threshold=0.2, refine_rounds=8)
+    base.update(kw)
+    return S5PConfig(**base)
+
+
+def test_s5p_sliding_window_tracks_live_set():
+    src, dst, n, _ = random_graph(1)
+    if len(src) < 200:
+        pytest.skip("graph too small")
+    W, B = 128, 48
+    hist, bundle = s5p_sliding_window(src, dst, n, _cfg(), W, step_edges=B)
+    assert len(hist) == -(-len(src) // B)
+    last = hist[-1]
+    alive = np.asarray(bundle["alive"], bool)
+    # the live set is exactly the last W arrivals
+    expect = np.zeros(last.hi, bool)
+    expect[last.lo:last.hi] = True
+    np.testing.assert_array_equal(alive, expect)
+    parts = np.asarray(bundle["parts"])
+    assert np.all(parts[~alive] == -1)
+    valid = alive & (src[:last.hi] != dst[:last.hi])
+    assert np.all(parts[valid] >= 0) and np.all(parts[valid] < K)
+    # expiry counted toward drift in at least one steady step
+    assert any(h.n_retracted > 0 for h in hist)
+    assert all(h.hi - h.lo <= W for h in hist)
+
+
+def test_s5p_deletion_decremental_path_counts_churn():
+    src, dst, n, _ = random_graph(1)
+    if len(src) < 100:
+        pytest.skip("graph too small")
+    cfg = _cfg(drift_rf_threshold=float("inf"),
+               drift_balance_threshold=float("inf"),
+               drift_churn_threshold=float("inf"))
+    _, b = s5p_cold_bundle(src, dst, n, cfg)
+    rng = np.random.default_rng(3)
+    idx = np.sort(rng.choice(len(src), size=len(src) // 10, replace=False))
+    b2, res = s5p_apply_deletion(b, cfg, src, dst, idx)
+    assert not res.rolled_back and not res.refined
+    assert res.n_retracted == idx.size
+    assert res.churn > 0
+    parts = np.asarray(b2["parts"])
+    assert np.all(parts[idx] == -1)
+    # degrees subtracted exactly
+    deg = np.asarray(b["degrees"]).copy()
+    np.subtract.at(deg, src[idx], 1)
+    np.subtract.at(deg, dst[idx], 1)
+    np.testing.assert_array_equal(np.asarray(b2["degrees"]), deg)
+    # deleting again raises
+    with pytest.raises(ValueError, match="already deleted"):
+        s5p_apply_deletion(b2, cfg, src, dst, idx[:1])
+
+
+def test_compact_bundle_preserves_partition():
+    src, dst, n, _ = random_graph(1)
+    if len(src) < 100:
+        pytest.skip("graph too small")
+    cfg = _cfg(refine_rounds=0)
+    _, b = s5p_cold_bundle(src, dst, n, cfg)
+    # delete a big chunk so some clusters die
+    idx = np.arange(0, len(src) // 2)
+    b, _ = s5p_apply_deletion(b, cfg, src, dst, idx)
+    C_before = int(b["comb_is_head"].shape[0])
+    b2, dropped = compact_bundle(b, cfg)
+    assert dropped >= 0
+    assert int(b2["comb_is_head"].shape[0]) == C_before - dropped
+    # the partition itself is untouched by compaction
+    np.testing.assert_array_equal(b2["parts"], b["parts"])
+    np.testing.assert_array_equal(b2["load"], b["load"])
+    # tags stay consistent: live edges' clusters exist and keep their c2p
+    alive = np.asarray(b2["alive"], bool)
+    cu = np.asarray(b2["edge_cu"])[alive]
+    ok = cu >= 0
+    assert np.all(cu[ok] < int(b2["comb_is_head"].shape[0]))
+    old_cu = np.asarray(b["edge_cu"])[alive]
+    old_c2p = np.asarray(b["c2p"])
+    new_c2p = np.asarray(b2["c2p"])
+    np.testing.assert_array_equal(new_c2p[cu[ok]], old_c2p[old_cu[ok]])
+    # idempotent: a second pass drops nothing
+    b3, dropped2 = compact_bundle(b2, cfg)
+    assert dropped2 == 0
+
+
+def test_refresh_signal_fires_under_heavy_growth():
+    """Doubling the stream with denser edges drifts ξ past the threshold."""
+    src, dst, n, _ = random_graph(1)
+    if len(src) < 100:
+        pytest.skip("graph too small")
+    from repro.incremental import s5p_apply_delta
+
+    cfg = _cfg(xi_refresh_threshold=0.2, refine_rounds=0,
+               drift_rf_threshold=float("inf"),
+               drift_balance_threshold=float("inf"),
+               drift_churn_threshold=float("inf"))
+    E0 = len(src) // 3
+    _, b = s5p_cold_bundle(src[:E0], dst[:E0], n, cfg)
+    b, res = s5p_apply_delta(b, cfg, src, dst, E0)
+    assert res.xi_drift > 0.2
+    assert res.needs_cold_restart
+
+
+# ===================================================== 4. slow-lane band
+@pytest.mark.slow
+def test_sliding_window_quality_band():
+    """Steady-state sliding-window S5P stays within the churn-bench
+    acceptance band: RF ≤ 1.10× a cold re-partition of the same window."""
+    from repro.graphs import rmat_graph
+
+    src, dst, n = rmat_graph(11, edge_factor=8, seed=3)
+    src = np.asarray(src, np.int32)
+    dst = np.asarray(dst, np.int32)
+    cfg = S5PConfig(k=K, drift_rf_threshold=0.02, refine_rounds=16,
+                    drift_churn_threshold=0.2)
+    W = 4096
+    for rate in (0.125, 0.25):
+        B = int(W * rate)
+        hist, _ = s5p_sliding_window(src, dst, n, cfg, W, step_edges=B)
+        steady = [h for h in hist if h.hi - h.lo == W and not h.filling]
+        ratios = []
+        for h in (steady[len(steady) // 2], steady[-1]):
+            ws, wd = src[h.lo:h.hi], dst[h.lo:h.hi]
+            cold = s5p_partition(ws, wd, n, cfg)
+            rf_cold = float(replication_factor(ws, wd, cold.parts,
+                                               n_vertices=n, k=K))
+            ratios.append(h.rf / max(rf_cold, 1e-9))
+        assert float(np.mean(ratios)) <= 1.10, (rate, ratios)
+        assert max(ratios) <= 1.15, (rate, ratios)
