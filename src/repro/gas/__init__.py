@@ -1,1 +1,11 @@
-from .engine import GASGraph, build_gas_graph, pagerank, CommStats  # noqa: F401
+from .engine import (  # noqa: F401
+    CommStats,
+    GASGraph,
+    build_gas_graph,
+    carry_values,
+    comm_stats,
+    label_propagation,
+    out_degree_inv,
+    pagerank,
+    pagerank_step,
+)

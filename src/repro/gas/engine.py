@@ -32,7 +32,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-__all__ = ["GASGraph", "CommStats", "build_gas_graph", "pagerank"]
+__all__ = ["GASGraph", "CommStats", "build_gas_graph", "pagerank",
+           "pagerank_step", "out_degree_inv", "carry_values",
+           "label_propagation", "comm_stats"]
 
 
 class GASGraph(NamedTuple):
@@ -147,17 +149,59 @@ def label_propagation(g: GASGraph, iterations: int = 5) -> tuple[jax.Array, Comm
                              per.master_to_mirror_msgs * iterations)
 
 
-def pagerank(g: GASGraph, iterations: int = 10) -> tuple[jax.Array, CommStats]:
-    """PageRank on the vertex-cut layout + exact per-superstep comm stats."""
+def out_degree_inv(g: GASGraph) -> jax.Array:
+    """``1/outdeg`` per vertex (0 for sinks) — the PageRank edge weight.
+
+    Computed once per graph version; a serving loop caches it alongside
+    the layout and reuses it every super-step until the next swap.
+    """
     ones = jnp.ones_like(g.src, dtype=jnp.float32)
     out_deg = jax.ops.segment_sum(ones, g.src, num_segments=g.n_vertices)
-    out_deg_inv = jnp.where(out_deg > 0, 1.0 / jnp.maximum(out_deg, 1.0), 0.0)
+    return jnp.where(out_deg > 0, 1.0 / jnp.maximum(out_deg, 1.0), 0.0)
+
+
+def pagerank_step(g: GASGraph, values: jax.Array,
+                  out_deg_inv: jax.Array | None = None) -> jax.Array:
+    """One PageRank super-step from ``values`` — the serving-loop unit.
+
+    Unlike :func:`pagerank` (cold values, fixed iteration count), this is
+    the incremental surface: a continuously-serving engine carries
+    ``values`` across calls — and across partition-bundle swaps, since
+    the super-step is replica-exact and therefore partition-invariant;
+    only the *comm cost* of the sync depends on the cut.  Comm for the
+    step is :func:`comm_stats` of the graph it ran on.
+    """
+    if out_deg_inv is None:
+        out_deg_inv = out_degree_inv(g)
+    return _gas_superstep(
+        g.src, g.dst, g.edge_part, g.replica_mask, values, out_deg_inv,
+        n_vertices=g.n_vertices, k=g.k)
+
+
+def carry_values(values, n_vertices: int, fill: float = 1.0) -> jax.Array:
+    """Carry a vertex-state vector across a bundle swap.
+
+    Vertices shared by both versions keep their converged state (PageRank
+    is a contraction, so warm values re-converge in few steps); vertices
+    the new version introduces start at ``fill``; a shrunken table is
+    truncated.
+    """
+    values = jnp.asarray(values, jnp.float32)
+    n_old = values.shape[0]
+    if n_vertices == n_old:
+        return values
+    if n_vertices < n_old:
+        return values[:n_vertices]
+    pad = jnp.full((n_vertices - n_old,), fill, jnp.float32)
+    return jnp.concatenate([values, pad])
+
+
+def pagerank(g: GASGraph, iterations: int = 10) -> tuple[jax.Array, CommStats]:
+    """PageRank on the vertex-cut layout + exact per-superstep comm stats."""
+    out_deg_inv = out_degree_inv(g)
     values = jnp.ones((g.n_vertices,), jnp.float32)
     for _ in range(iterations):
-        values = _gas_superstep(
-            g.src, g.dst, g.edge_part, g.replica_mask, values, out_deg_inv,
-            n_vertices=g.n_vertices, k=g.k,
-        )
+        values = pagerank_step(g, values, out_deg_inv)
     per_step = comm_stats(g)
     stats = CommStats(
         mirror_to_master_msgs=per_step.mirror_to_master_msgs * iterations,

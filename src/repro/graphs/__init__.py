@@ -1,6 +1,8 @@
 from .generators import (  # noqa: F401
     rmat_graph,
+    block_rmat_graph,
     powerlaw_graph,
+    community_graph,
     erdos_renyi_graph,
     toy_graph_fig3,
     graph_skewness,

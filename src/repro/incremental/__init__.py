@@ -76,6 +76,7 @@ from .drift import DriftDecision, DriftMonitor, RefreshDecision  # noqa: F401
 from .driver import (  # noqa: F401
     INCREMENTAL_PARTITIONERS,
     SCAN_PARTITIONERS,
+    S5PWindowChain,
     WindowStep,
     cold_start,
     run_incremental,
@@ -85,9 +86,12 @@ from .pipeline import (  # noqa: F401
     JOURNAL_PREFIX,
     IncrementalResult,
     compact_bundle,
+    compact_edge_slots,
+    ensure_slot_index,
     s5p_apply_delta,
     s5p_apply_deletion,
     s5p_cold_bundle,
+    s5p_cold_restart,
     s5p_identity_config,
 )
 from .store import CarryMismatchError, CarryStore, config_fingerprint  # noqa: F401
@@ -106,11 +110,15 @@ __all__ = [
     "s5p_cold_bundle",
     "s5p_apply_delta",
     "s5p_apply_deletion",
+    "s5p_cold_restart",
     "compact_bundle",
+    "compact_edge_slots",
+    "ensure_slot_index",
     "s5p_identity_config",
     "cold_start",
     "run_incremental",
     "s5p_sliding_window",
+    "S5PWindowChain",
     "WindowStep",
     "SCAN_PARTITIONERS",
     "INCREMENTAL_PARTITIONERS",

@@ -39,15 +39,17 @@ from .delta import DeltaStream, grow_carry, run_incremental_carry
 from .pipeline import (
     IncrementalResult,
     compact_bundle,
+    compact_edge_slots,
     s5p_apply_delta,
     s5p_apply_deletion,
     s5p_cold_bundle,
+    s5p_cold_restart,
     s5p_identity_config,
 )
 from .store import CarryStore
 
 __all__ = ["SCAN_PARTITIONERS", "cold_start", "run_incremental",
-           "s5p_sliding_window", "WindowStep"]
+           "s5p_sliding_window", "S5PWindowChain", "WindowStep"]
 
 SCAN_PARTITIONERS = ("greedy", "hdrf", "grid")
 INCREMENTAL_PARTITIONERS = SCAN_PARTITIONERS + ("s5p",)
@@ -199,7 +201,10 @@ def run_incremental(store_dir, partitioner: str, full_src, full_dst,
                 n_new_clusters=result.n_new_clusters,
                 n_delta_edges=result.n_delta_edges)
         if save:
-            pos = int(np.asarray(bundle["parts"]).shape[0])  # ≤ E_total
+            # key the save on the *stream* position, not the slot count:
+            # slot compaction shrinks the per-edge arrays without moving
+            # the stream, and a rollback moves both
+            pos = int(bundle["stream_pos"])  # ≤ E_total
             store.save(bundle, consumer="s5p",
                        config=s5p_identity_config(config),
                        stream_pos=pos,
@@ -253,7 +258,8 @@ def run_incremental(store_dir, partitioner: str, full_src, full_dst,
 
         back = DeltaStream(full_src[idx], full_dst[idx], n_new, sign=-1,
                            chunk_size=chunk_size)
-        carry = run_retract(back, pc, parts[idx], carry=carry)
+        carry = run_retract(back, pc, parts[idx], carry=carry,
+                            num_streams=num_streams, super_chunk=super_chunk)
         parts = parts.copy()
         parts[idx] = -1
         alive = alive.copy()
@@ -296,72 +302,133 @@ class WindowStep(NamedTuple):
     xi_drift: float
     n_compacted: int  # combined ids dropped by compaction this step
     filling: bool = False  # window not yet full — no partition maintained
+    cold_restarted: bool = False  # acted on needs_cold_restart this step
+    n_slots_freed: int = 0  # dead per-edge slots dropped this step
 
 
-def s5p_sliding_window(src, dst, n_vertices: int, config: S5PConfig,
-                       window_edges: int, *, step_edges: int | None = None,
-                       stream=None, compact_factor: float = 2.0):
-    """Maintain an S5P partition of the **last ``window_edges`` edges**.
+class S5PWindowChain:
+    """Stepwise sliding-window S5P: one churn event per :meth:`step`.
 
-    Drives :class:`~repro.streaming.window.SlidingWindowStream` over the
-    arrival stream.  The chain cold-starts when the window **first
-    fills** (fill-phase events are recorded as ``filling`` steps without
-    a partition) so the frozen clustering closure — ξ, κ, the CMS width —
-    is sized for a full window rather than the first step batch; because
-    the live set then stays W edges wide, those frozen values remain
-    representative indefinitely (the ξ/κ refresh signal still watches
-    them).  Every later event folds its insert batch
-    (:func:`s5p_apply_delta`) and retracts its expired batch
-    (:func:`s5p_apply_deletion`) — so after step ``i`` the bundle
-    partitions exactly the window ``[lo_i, hi_i)``.  Expiry retractions
-    count toward the drift trigger, so sustained churn keeps re-settling
-    the clusters through the masked Stackelberg game.
+    The engine behind :func:`s5p_sliding_window` (which just drains it)
+    and the live serving controller (which publishes a bundle snapshot
+    after each step).  Each step admits the next ``step_edges`` arrivals
+    (:func:`~repro.incremental.pipeline.s5p_apply_delta`), retracts the
+    expired batch (:func:`~repro.incremental.pipeline.s5p_apply_deletion`),
+    then runs the maintenance ladder:
 
-    When the append-only combined cluster id space exceeds
-    ``compact_factor ×`` its last-known live size, :func:`compact_bundle`
-    renumbers it in place (``compact_factor <= 0`` disables).
+    - **cold restart** — with ``auto_cold_restart=True`` the chain *acts*
+      on the drift monitor's ``needs_cold_restart`` signal instead of
+      just reporting it: the live window is re-partitioned from scratch
+      (:func:`~repro.incremental.pipeline.s5p_cold_restart`), refreshing
+      the frozen ξ/κ thresholds and CMS width at current scale;
+    - **cluster-id compaction** — when the append-only combined id space
+      exceeds ``compact_factor ×`` its last-known live size,
+      :func:`~repro.incremental.pipeline.compact_bundle` renumbers it
+      (``compact_factor <= 0`` disables);
+    - **slot compaction** — when the per-edge arrays hold more than
+      ``slot_compact_factor ×`` the live edge count,
+      :func:`~repro.incremental.pipeline.compact_edge_slots` frees the
+      tombstones, bounding bundle memory by O(live window) instead of
+      O(arrivals) (``slot_compact_factor <= 0`` disables).
 
-    Returns ``(history, bundle)`` — one :class:`WindowStep` per event and
-    the final bundle (which covers arrival prefix ``[0, hi)`` with
-    everything before ``lo`` tombstoned).
+    The chain cold-starts when the window **first fills** (fill-phase
+    events are recorded as ``filling`` steps without a partition) so the
+    frozen clustering closure is sized for a full window rather than the
+    first step batch.
     """
-    from ..streaming import SlidingWindowStream, as_stream
 
-    st = as_stream(src, dst, n_vertices, stream=stream,
-                   chunk_size=config.chunk_size)
-    sw = SlidingWindowStream(st, window_edges, step_edges=step_edges)
-    n_vertices = st.n_vertices
-    # arrival prefix [0, hi), filled in place per event — one O(E) buffer
-    # for the whole run instead of O(E²) re-concatenation (for OOC
-    # streams this is the driver's single deliberate materialization; the
-    # apply/retract calls index it by arrival position)
-    buf_src = np.empty(st.n_edges, np.int32)
-    buf_dst = np.empty(st.n_edges, np.int32)
-    bundle = None
-    c_live_known = 1
-    history: list[WindowStep] = []
-    n_steps = sw.n_steps
-    for i, ev in enumerate(sw.events()):
-        buf_src[ev.start:ev.hi] = ev.src
-        buf_dst[ev.start:ev.hi] = ev.dst
-        seen_src = buf_src[:ev.hi]
-        seen_dst = buf_dst[:ev.hi]
-        if bundle is None and ev.hi < window_edges and i < n_steps - 1:
+    def __init__(self, src, dst, n_vertices: int, config: S5PConfig,
+                 window_edges: int, *, step_edges: int | None = None,
+                 stream=None, compact_factor: float = 2.0,
+                 slot_compact_factor: float = 4.0,
+                 auto_cold_restart: bool = False):
+        from ..streaming import SlidingWindowStream, as_stream
+
+        st = as_stream(src, dst, n_vertices, stream=stream,
+                       chunk_size=config.chunk_size)
+        self.config = config
+        self.window_edges = int(window_edges)
+        self.compact_factor = float(compact_factor)
+        self.slot_compact_factor = float(slot_compact_factor)
+        self.auto_cold_restart = bool(auto_cold_restart)
+        self._sw = SlidingWindowStream(st, window_edges,
+                                       step_edges=step_edges)
+        self.n_vertices = int(st.n_vertices)
+        self.n_steps = self._sw.n_steps
+        # arrival prefix [0, hi), filled in place per event — one O(E)
+        # buffer for the whole run instead of O(E²) re-concatenation (for
+        # OOC streams this is the driver's single deliberate
+        # materialization; the apply/retract calls index it by arrival)
+        self._buf_src = np.empty(st.n_edges, np.int32)
+        self._buf_dst = np.empty(st.n_edges, np.int32)
+        self.bundle: dict | None = None
+        self._c_live_known = 1
+        self._events = self._sw.events()
+        self._i = 0
+        self.lo = 0
+        self.hi = 0
+
+    @property
+    def seen_src(self) -> np.ndarray:
+        """Arrivals [0, hi) — the stream prefix the bundle is keyed on."""
+        return self._buf_src[:self.hi]
+
+    @property
+    def seen_dst(self) -> np.ndarray:
+        return self._buf_dst[:self.hi]
+
+    def live_edges(self) -> tuple[np.ndarray, np.ndarray]:
+        """The live window's edges, in slot order (empty while filling)."""
+        if self.bundle is None:
+            z = np.zeros(0, np.int32)
+            return z, z
+        alive = np.asarray(self.bundle["alive"], bool)
+        arr = np.asarray(self.bundle["arrival"], np.int64)[alive]
+        return self._buf_src[arr], self._buf_dst[arr]
+
+    def live_partition(self):
+        """``(src, dst, parts)`` of the live window, in slot order.
+
+        The routing-table snapshot a serving loop publishes: fresh arrays
+        each call (gathered out of the ring buffer / bundle), so a
+        published snapshot is never mutated by later steps.  ``None``
+        while the window is still filling.
+        """
+        if self.bundle is None:
+            return None
+        alive = np.asarray(self.bundle["alive"], bool)
+        arr = np.asarray(self.bundle["arrival"], np.int64)[alive]
+        parts = np.asarray(self.bundle["parts"], np.int32)[alive]
+        return self._buf_src[arr], self._buf_dst[arr], parts
+
+    def step(self) -> WindowStep | None:
+        """Apply the next churn event; ``None`` when the stream is done."""
+        ev = next(self._events, None)
+        if ev is None:
+            return None
+        i = self._i
+        self._i += 1
+        self._buf_src[ev.start:ev.hi] = ev.src
+        self._buf_dst[ev.start:ev.hi] = ev.dst
+        self.lo, self.hi = ev.lo, ev.hi
+        seen_src = self._buf_src[:ev.hi]
+        seen_dst = self._buf_dst[:ev.hi]
+        config = self.config
+        if (self.bundle is None and ev.hi < self.window_edges
+                and i < self.n_steps - 1):
             # window still filling: no partition yet, just accumulate
-            history.append(WindowStep(
+            return WindowStep(
                 step=i, lo=ev.lo, hi=ev.hi, rf=0.0, balance=0.0,
                 refined=False, rolled_back=False,
                 n_inserted=int(ev.src.shape[0]), n_retracted=0,
                 churn=0.0, needs_cold_restart=False, xi_drift=0.0,
-                n_compacted=0, filling=True))
-            continue
-        if bundle is None:
+                n_compacted=0, filling=True)
+        if self.bundle is None:
             # first full window (or the stream ended short of one):
             # cold-start on everything seen, then retract any already-
             # expired prefix (only possible when step_edges > window)
-            _, bundle = s5p_cold_bundle(seen_src, seen_dst, n_vertices,
-                                        config)
-            res = None
+            _, bundle = s5p_cold_bundle(seen_src, seen_dst,
+                                        self.n_vertices, config)
             rf = float(bundle["rf_baseline"])
             bal = float(bundle["balance_baseline"])
             refined = rolled_back = needs_cold = False
@@ -375,10 +442,10 @@ def s5p_sliding_window(src, dst, n_vertices: int, config: S5PConfig,
                 xi_drift = res.xi_drift
                 needs_cold = res.needs_cold_restart
                 n_ret = int(ev.expire_idx.size)
-            c_live_known = max(int(bundle["comb_is_head"].shape[0]), 1)
+            self._c_live_known = max(int(bundle["comb_is_head"].shape[0]), 1)
         else:
-            bundle, res = s5p_apply_delta(bundle, config, seen_src, seen_dst,
-                                          ev.start)
+            bundle, res = s5p_apply_delta(self.bundle, config, seen_src,
+                                          seen_dst, ev.start)
             n_ret = 0
             refined = res.refined
             if ev.expire_idx.size:
@@ -394,17 +461,72 @@ def s5p_sliding_window(src, dst, n_vertices: int, config: S5PConfig,
             rolled_back = res.rolled_back
             churn, xi_drift = res.churn, res.xi_drift
             needs_cold = res.needs_cold_restart
+
+        cold_restarted = False
+        if needs_cold and self.auto_cold_restart:
+            try:
+                bundle, cres = s5p_cold_restart(bundle, config, seen_src,
+                                                seen_dst)
+            except ValueError:
+                pass  # live set degenerate (no valid edge) — keep serving
+            else:
+                rf, bal = cres.rf, cres.balance
+                cold_restarted = True
+                self._c_live_known = max(
+                    int(bundle["comb_is_head"].shape[0]), 1)
         n_comp = 0
-        if compact_factor > 0:
+        if self.compact_factor > 0 and not cold_restarted:
             C1 = int(np.asarray(bundle["comb_is_head"]).shape[0])
-            if C1 > compact_factor * c_live_known:
+            if C1 > self.compact_factor * self._c_live_known:
                 bundle, n_comp = compact_bundle(bundle, config)
-                c_live_known = max(
+                self._c_live_known = max(
                     int(np.asarray(bundle["comb_is_head"]).shape[0]), 1)
-        history.append(WindowStep(
+        n_freed = 0
+        if self.slot_compact_factor > 0:
+            n_slots = int(np.asarray(bundle["parts"]).shape[0])
+            n_live = int(np.count_nonzero(np.asarray(bundle["alive"])))
+            if n_slots > self.slot_compact_factor * max(n_live, 1):
+                bundle, n_freed = compact_edge_slots(bundle)
+        self.bundle = bundle
+        return WindowStep(
             step=i, lo=ev.lo, hi=ev.hi, rf=float(rf), balance=float(bal),
             refined=bool(refined), rolled_back=bool(rolled_back),
             n_inserted=int(ev.src.shape[0]), n_retracted=n_ret,
             churn=float(churn), needs_cold_restart=bool(needs_cold),
-            xi_drift=float(xi_drift), n_compacted=int(n_comp)))
-    return history, bundle
+            xi_drift=float(xi_drift), n_compacted=int(n_comp),
+            cold_restarted=cold_restarted, n_slots_freed=int(n_freed))
+
+    def steps(self):
+        """Iterate the remaining churn schedule."""
+        while True:
+            rec = self.step()
+            if rec is None:
+                return
+            yield rec
+
+
+def s5p_sliding_window(src, dst, n_vertices: int, config: S5PConfig,
+                       window_edges: int, *, step_edges: int | None = None,
+                       stream=None, compact_factor: float = 2.0,
+                       slot_compact_factor: float = 4.0,
+                       auto_cold_restart: bool = False):
+    """Maintain an S5P partition of the **last ``window_edges`` edges**.
+
+    Drains an :class:`S5PWindowChain` over the arrival stream (see the
+    class docstring for the per-event semantics: delta fold → expiry
+    retraction → auto cold restart → cluster-id / edge-slot compaction).
+    Expiry retractions count toward the drift trigger, so sustained churn
+    keeps re-settling the clusters through the masked Stackelberg game.
+
+    Returns ``(history, bundle)`` — one :class:`WindowStep` per event and
+    the final bundle.  The bundle's per-edge arrays are **slot**-indexed:
+    ``bundle["arrival"]`` maps each slot to its global arrival index, and
+    slots whose edges expired may have been freed by slot compaction.
+    """
+    chain = S5PWindowChain(
+        src, dst, n_vertices, config, window_edges, step_edges=step_edges,
+        stream=stream, compact_factor=compact_factor,
+        slot_compact_factor=slot_compact_factor,
+        auto_cold_restart=auto_cold_restart)
+    history = list(chain.steps())
+    return history, chain.bundle

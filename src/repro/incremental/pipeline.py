@@ -84,6 +84,7 @@ from .drift import DriftMonitor
 
 __all__ = ["IncrementalResult", "s5p_identity_config", "s5p_cold_bundle",
            "s5p_apply_delta", "s5p_apply_deletion", "compact_bundle",
+           "compact_edge_slots", "ensure_slot_index", "s5p_cold_restart",
            "JOURNAL_PREFIX"]
 
 _INT32_MAX = 2**31 - 1
@@ -92,7 +93,9 @@ _INT32_MAX = 2**31 - 1
 class IncrementalResult(NamedTuple):
     """What one delta application did (and what it would have cost cold)."""
 
-    parts: np.ndarray  # (E_total,) int32 — full assignment after the delta
+    # (stream_pos,) int32, arrival-indexed — full assignment after the
+    # delta; deleted edges (tombstoned or slot-compacted away) are −1
+    parts: np.ndarray
     rf: float
     balance: float
     refined: bool
@@ -218,10 +221,18 @@ def s5p_cold_bundle(src, dst, n_vertices: int, config: S5PConfig, *,
         "edge_alt_v": e_alt_v,
         "edge_head": np.asarray(is_head_e, bool),
         "alive": np.ones(parts.shape[0], bool),
+        # slot ↔ arrival decoupling: per-edge arrays are indexed by *slot*;
+        # ``arrival[slot]`` is the global arrival index that slot holds.
+        # Cold bundles start with the identity map; ``compact_edge_slots``
+        # drops dead slots, after which the two spaces diverge (the
+        # sorted ``arrival`` array IS the stable old→new index map).
+        "arrival": np.arange(parts.shape[0], dtype=np.int64),
+        "stream_pos": np.int64(parts.shape[0]),
         "touched": np.zeros(C, bool),
         "retracted": np.int64(0),
         "journal_valid": np.bool_(False),
         "journal_pos": np.int64(-1),
+        "journal_slots": np.int64(-1),
         "xi": np.int32(out.xi),
         "kappa": np.int32(out.kappa),
         "rf_baseline": np.float64(rf),
@@ -240,6 +251,14 @@ def s5p_cold_bundle(src, dst, n_vertices: int, config: S5PConfig, *,
 
 def _comb_of(raw: np.ndarray, remap: np.ndarray) -> np.ndarray:
     return np.where(raw >= 0, remap[np.maximum(raw, 0)], -1).astype(np.int32)
+
+
+def _scatter_parts(parts: np.ndarray, arrival: np.ndarray,
+                   stream_pos: int) -> np.ndarray:
+    """Slot-indexed parts → arrival-indexed (compacted arrivals are −1)."""
+    full = np.full(int(stream_pos), -1, np.int32)
+    full[arrival] = parts
+    return full
 
 
 def _unpack_cluster_state(b: dict) -> _cl.ClusterState:
@@ -282,11 +301,27 @@ _JOURNALED = (
     "cnt_h", "cnt_t", "alloc_h", "raw2comb_h", "raw2comb_t", "comb_is_head",
     "sizes", "pair_a", "pair_b", "pair_w", "c2p", "load", "touched",
     "theta_table", "theta_seeds", "rf_baseline", "balance_baseline",
-    "retracted",
+    "retracted", "stream_pos",
 )
 
 _PER_EDGE = ("parts", "edge_cu", "edge_cv", "edge_alt_u", "edge_alt_v",
-             "edge_head", "alive")
+             "edge_head", "alive", "arrival")
+
+
+def ensure_slot_index(b: dict) -> dict:
+    """Synthesize the slot→arrival index for pre-compaction bundles.
+
+    Bundles persisted before slot compaction existed have per-edge arrays
+    indexed directly by arrival position; their implicit map is the
+    identity and their stream position is the slot count.  Mutates and
+    returns ``b``.
+    """
+    if "arrival" not in b:
+        n_slots = int(np.asarray(b["parts"]).shape[0])
+        b["arrival"] = np.arange(n_slots, dtype=np.int64)
+        b["stream_pos"] = np.int64(n_slots)
+        b["journal_slots"] = np.int64(b.get("journal_pos", -1))
+    return b
 
 
 def _write_journal(b: dict, stream_pos: int) -> None:
@@ -295,19 +330,21 @@ def _write_journal(b: dict, stream_pos: int) -> None:
         if key in b:
             b[JOURNAL_PREFIX + key] = np.copy(b[key])
     b["journal_pos"] = np.int64(stream_pos)
+    b["journal_slots"] = np.int64(np.asarray(b["parts"]).shape[0])
     b["journal_valid"] = np.bool_(True)
 
 
 def _invalidate_journal(b: dict) -> None:
     b["journal_valid"] = np.bool_(False)
+    b["journal_slots"] = np.int64(-1)
     for key in _JOURNALED:
         b.pop(JOURNAL_PREFIX + key, None)
 
 
 def _rollback(b: dict) -> None:
     """Restore the journaled version: small fields from their snapshots,
-    per-edge arrays by truncation to the journaled stream position."""
-    pos = int(b["journal_pos"])
+    per-edge arrays by truncation to the journaled slot count."""
+    pos = int(b.get("journal_slots", b["journal_pos"]))
     for key in _JOURNALED:
         jkey = JOURNAL_PREFIX + key
         if jkey in b:
@@ -318,6 +355,7 @@ def _rollback(b: dict) -> None:
         b[key] = np.asarray(b[key])[:pos]
     b["journal_valid"] = np.bool_(False)
     b["journal_pos"] = np.int64(-1)
+    b["journal_slots"] = np.int64(-1)
 
 
 def _refresh_decision(b: dict, config: S5PConfig, degrees: np.ndarray,
@@ -383,7 +421,7 @@ def s5p_apply_delta(bundle: dict, config: S5PConfig, full_src, full_dst,
     updated bundle and an :class:`IncrementalResult`.  Mutates a copy —
     the input bundle dict is not modified.
     """
-    b = dict(bundle)
+    b = ensure_slot_index(dict(bundle))
     full_src = np.asarray(full_src, np.int32)
     full_dst = np.asarray(full_dst, np.int32)
     E_total = int(full_src.shape[0])
@@ -391,6 +429,10 @@ def s5p_apply_delta(bundle: dict, config: S5PConfig, full_src, full_dst,
     if E0 > E_total:
         raise ValueError(f"carry stream position {E0} is past the stream "
                          f"({E_total} edges)")
+    if E0 != int(b["stream_pos"]):
+        raise ValueError(
+            f"bundle was built at stream position {int(b['stream_pos'])} "
+            f"but the delta claims position {E0}")
     dsrc = full_src[E0:]
     ddst = full_dst[E0:]
     E_delta = E_total - E0
@@ -399,14 +441,21 @@ def s5p_apply_delta(bundle: dict, config: S5PConfig, full_src, full_dst,
     kappa = int(b["kappa"])
     full_cost = 4 * E_total  # degree + Alg.1 + Θ + Alg.3 folds of a cold run
 
+    # per-edge arrays are slot-indexed; gather the slots' edges once so
+    # metrics and refinement see exactly the edges the slots hold
+    arrival0 = np.asarray(b["arrival"], np.int64)
+    slot_src = full_src[arrival0]
+    slot_dst = full_dst[arrival0]
+
     n_old = int(b["degrees"].shape[0])
     if E_delta == 0:
         parts = np.asarray(b["parts"], np.int32)
-        rf = replication_factor(full_src, full_dst, parts,
+        rf = replication_factor(slot_src, slot_dst, parts,
                                 n_vertices=n_old, k=k)
         bal = load_balance(parts, k=k)
         res = IncrementalResult(
-            parts=parts, rf=float(rf), balance=float(bal), refined=False,
+            parts=_scatter_parts(parts, arrival0, E0), rf=float(rf),
+            balance=float(bal), refined=False,
             rf_drift=0.0, balance_drift=0.0, edges_replayed=0,
             full_replay_cost=full_cost, game_rounds=0, n_new_clusters=0,
             n_delta_edges=0)
@@ -568,12 +617,16 @@ def s5p_apply_delta(bundle: dict, config: S5PConfig, full_src, full_dst,
     edge_alt_v = np.concatenate([b["edge_alt_v"], alt_v])
     edge_head = np.concatenate([b["edge_head"], head_e])
     alive = np.concatenate([b["alive"], np.ones(E_delta, bool)])
+    arrival = np.concatenate([arrival0,
+                              np.arange(E0, E_total, dtype=np.int64)])
+    slot_src = np.concatenate([slot_src, dsrc])
+    slot_dst = np.concatenate([slot_dst, ddst])
     load = np.asarray(load, np.int32)
     edges_replayed = 4 * E_delta
 
     # ---- drift check → bounded refinement ----------------------------
     e_live = int(np.count_nonzero(alive))
-    rf = float(replication_factor(full_src, full_dst, parts,
+    rf = float(replication_factor(slot_src, slot_dst, parts,
                                   n_vertices=n_new, k=k))
     bal = float(load_balance(parts, k=k))
     monitor = DriftMonitor(
@@ -588,7 +641,7 @@ def s5p_apply_delta(bundle: dict, config: S5PConfig, full_src, full_dst,
         c2p, parts, load, rounds, replayed, rf, bal = _refine_pass(
             config, inputs, C1, bs, c2p, comb_is_head, touched, sizes,
             parts, load, edge_cu, edge_cv, edge_head,
-            full_src, full_dst, n_new, max_load, rf, bal)
+            slot_src, slot_dst, n_new, max_load, rf, bal)
         game_rounds += rounds
         edges_replayed += replayed
         refined = True
@@ -605,7 +658,8 @@ def s5p_apply_delta(bundle: dict, config: S5PConfig, full_src, full_dst,
         c2p=c2p.astype(np.int32), load=load, parts=parts,
         edge_cu=edge_cu, edge_cv=edge_cv,
         edge_alt_u=edge_alt_u, edge_alt_v=edge_alt_v,
-        edge_head=edge_head, alive=alive,
+        edge_head=edge_head, alive=alive, arrival=arrival,
+        stream_pos=np.int64(E_total),
         touched=touched,
         retracted=np.int64(monitor.retracted),
         rf_baseline=np.float64(monitor.baseline_rf),
@@ -617,7 +671,8 @@ def s5p_apply_delta(bundle: dict, config: S5PConfig, full_src, full_dst,
         _invalidate_journal(b)
     refresh = _refresh_decision(b, config, degrees, e_live)
     result = IncrementalResult(
-        parts=parts, rf=rf, balance=bal, refined=refined,
+        parts=_scatter_parts(parts, arrival, E_total), rf=rf, balance=bal,
+        refined=refined,
         rf_drift=decision.rf_drift, balance_drift=decision.balance_drift,
         edges_replayed=edges_replayed, full_replay_cost=full_cost,
         game_rounds=game_rounds, n_new_clusters=int(n_new_clusters),
@@ -705,10 +760,10 @@ def s5p_apply_deletion(bundle: dict, config: S5PConfig, full_src, full_dst,
     modified.  After a rollback the bundle covers fewer edges — callers
     persisting it should key the save on ``len(bundle["parts"])``.
     """
-    b = dict(bundle)
+    b = ensure_slot_index(dict(bundle))
     full_src = np.asarray(full_src, np.int32)
     full_dst = np.asarray(full_dst, np.int32)
-    E_total = int(np.asarray(b["parts"]).shape[0])
+    E_total = int(b["stream_pos"])
     if int(full_src.shape[0]) < E_total:
         raise ValueError(
             f"bundle covers {E_total} edges but the stream holds only "
@@ -717,21 +772,32 @@ def s5p_apply_deletion(bundle: dict, config: S5PConfig, full_src, full_dst,
     full_cost = 4 * E_total
     idx = np.unique(np.asarray(delete_idx, np.int64))
     n_vertices = int(np.asarray(b["degrees"]).shape[0])
+    arrival = np.asarray(b["arrival"], np.int64)
+    slot_src = full_src[arrival]
+    slot_dst = full_dst[arrival]
     if idx.size == 0:
         parts = np.asarray(b["parts"], np.int32)
-        rf = float(replication_factor(full_src[:E_total], full_dst[:E_total],
+        rf = float(replication_factor(slot_src, slot_dst,
                                       parts, n_vertices=n_vertices, k=k))
         bal = float(load_balance(parts, k=k))
         return b, IncrementalResult(
-            parts=parts, rf=rf, balance=bal, refined=False, rf_drift=0.0,
+            parts=_scatter_parts(parts, arrival, E_total), rf=rf,
+            balance=bal, refined=False, rf_drift=0.0,
             balance_drift=0.0, edges_replayed=0, full_replay_cost=full_cost,
             game_rounds=0, n_new_clusters=0, n_delta_edges=0)
     if idx[0] < 0 or idx[-1] >= E_total:
         raise ValueError(
             f"deletion indices must lie in [0, {E_total}); got "
             f"[{idx[0]}, {idx[-1]}]")
+    # map global arrival indices → live slots (compacted slots are gone:
+    # deleting one of their arrivals is a double delete)
+    slot_idx = np.searchsorted(arrival, idx)
+    hit = np.zeros(idx.size, bool)
+    if arrival.size:
+        inb = slot_idx < arrival.size
+        hit[inb] = arrival[slot_idx[inb]] == idx[inb]
     alive = np.asarray(b["alive"], bool)
-    if not alive[idx].all():
+    if not hit.all() or not alive[slot_idx[hit]].all():
         raise ValueError("deletion names edges that are already deleted")
     D = int(idx.size)
 
@@ -742,12 +808,15 @@ def s5p_apply_deletion(bundle: dict, config: S5PConfig, full_src, full_dst,
             and int(idx[0]) == jpos and int(idx[-1]) == E_total - 1):
         _rollback(b)
         parts = np.asarray(b["parts"], np.int32)
+        arrival_rb = np.asarray(b["arrival"], np.int64)
         n_rb = int(np.asarray(b["degrees"]).shape[0])
-        rf = float(replication_factor(full_src[:jpos], full_dst[:jpos],
+        rf = float(replication_factor(full_src[arrival_rb],
+                                      full_dst[arrival_rb],
                                       parts, n_vertices=n_rb, k=k))
         bal = float(load_balance(parts, k=k))
         return b, IncrementalResult(
-            parts=parts, rf=rf, balance=bal, refined=False, rf_drift=0.0,
+            parts=_scatter_parts(parts, arrival_rb, jpos), rf=rf,
+            balance=bal, refined=False, rf_drift=0.0,
             balance_drift=0.0, edges_replayed=0, full_replay_cost=full_cost,
             game_rounds=0, n_new_clusters=0, n_delta_edges=0,
             n_retracted=D, rolled_back=True)
@@ -762,12 +831,12 @@ def s5p_apply_deletion(bundle: dict, config: S5PConfig, full_src, full_dst,
 
     state = _cl.cluster_retract_chunk(
         _unpack_cluster_state(b), jnp.asarray(dsrc), jnp.asarray(ddst),
-        D, is_head=jnp.asarray(np.asarray(b["edge_head"], bool)[idx]))
+        D, is_head=jnp.asarray(np.asarray(b["edge_head"], bool)[slot_idx]))
 
-    cu = np.asarray(b["edge_cu"])[idx]
-    cv = np.asarray(b["edge_cv"])[idx]
-    au = np.asarray(b["edge_alt_u"])[idx]
-    av = np.asarray(b["edge_alt_v"])[idx]
+    cu = np.asarray(b["edge_cu"])[slot_idx]
+    cv = np.asarray(b["edge_cv"])[slot_idx]
+    au = np.asarray(b["edge_alt_u"])[slot_idx]
+    av = np.asarray(b["edge_alt_v"])[slot_idx]
     C1 = int(np.asarray(b["comb_is_head"]).shape[0])
 
     # sizes: subtract the same ½/1 attribution insertion added
@@ -813,13 +882,13 @@ def s5p_apply_deletion(bundle: dict, config: S5PConfig, full_src, full_dst,
 
     # load / parts / alive tombstones — exact
     parts = np.asarray(b["parts"], np.int32).copy()
-    placed = parts[idx] >= 0
+    placed = parts[slot_idx] >= 0
     load64 = np.asarray(b["load"], np.int64).copy()
-    np.subtract.at(load64, parts[idx][placed], 1)
+    np.subtract.at(load64, parts[slot_idx][placed], 1)
     load = load64.astype(np.int32)
-    parts[idx] = -1
+    parts[slot_idx] = -1
     alive = alive.copy()
-    alive[idx] = False
+    alive[slot_idx] = False
     touched = np.asarray(b["touched"], bool).copy()
     for arr in (cu, cv):
         t = arr[arr >= 0]
@@ -835,7 +904,7 @@ def s5p_apply_deletion(bundle: dict, config: S5PConfig, full_src, full_dst,
 
     # ---- drift check (retractions count) → bounded refinement --------
     e_live = int(np.count_nonzero(alive))
-    rf = float(replication_factor(full_src[:E_total], full_dst[:E_total],
+    rf = float(replication_factor(slot_src, slot_dst,
                                   parts, n_vertices=n_vertices, k=k))
     bal = float(load_balance(parts, k=k))
     monitor = DriftMonitor(
@@ -863,7 +932,7 @@ def s5p_apply_deletion(bundle: dict, config: S5PConfig, full_src, full_dst,
         c2p, parts, load, rounds, replayed, rf, bal = _refine_pass(
             config, inputs, C1, bs, c2p, comb_is_head, touched, sizes,
             parts, load, edge_cu, edge_cv, edge_head,
-            full_src[:E_total], full_dst[:E_total], n_vertices, max_load,
+            slot_src, slot_dst, n_vertices, max_load,
             rf, bal, move_mask=move_mask)
         game_rounds += rounds
         edges_replayed += replayed
@@ -884,7 +953,8 @@ def s5p_apply_deletion(bundle: dict, config: S5PConfig, full_src, full_dst,
     _invalidate_journal(b)
     refresh = _refresh_decision(b, config, degrees, e_live)
     result = IncrementalResult(
-        parts=parts, rf=rf, balance=bal, refined=refined,
+        parts=_scatter_parts(parts, arrival, E_total), rf=rf, balance=bal,
+        refined=refined,
         rf_drift=decision.rf_drift, balance_drift=decision.balance_drift,
         edges_replayed=edges_replayed, full_replay_cost=full_cost,
         game_rounds=game_rounds, n_new_clusters=0, n_delta_edges=0,
@@ -996,3 +1066,84 @@ def compact_bundle(bundle: dict, config: S5PConfig) -> tuple[dict, int]:
 
     _invalidate_journal(b)
     return b, n_dropped
+
+
+# ---------------------------------------------------------------------------
+# edge-slot compaction (free the tombstoned per-edge records)
+# ---------------------------------------------------------------------------
+
+
+def compact_edge_slots(bundle: dict) -> tuple[dict, int]:
+    """Drop dead per-edge slots, freeing the tombstones for real.
+
+    Deletions tombstone per-edge records (``alive`` false, ``parts`` −1)
+    but keep the slots, so a long-lived window's per-edge arrays grow with
+    *arrivals*, not with the live set.  This pass gathers every per-edge
+    array down to the live slots.  The **stable old→new index map** is the
+    surviving ``arrival`` array itself: slot ``i`` of the compacted bundle
+    holds the edge whose global arrival index is ``arrival[i]``, and
+    ``stream_pos`` (plus the CarryStore's prefix CRC, both keyed on global
+    arrival counts) is untouched — so resumed / out-of-core streams and
+    persisted checkpoints remain valid, and later deletions still name
+    global arrival indices (mapped to slots by binary search).
+
+    Returns ``(bundle, n_freed)``; the input is not modified.  The
+    rollback journal is invalidated — truncation can no longer restore a
+    pre-compaction version.
+    """
+    b = ensure_slot_index(dict(bundle))
+    alive = np.asarray(b["alive"], bool)
+    n_freed = int(alive.size - np.count_nonzero(alive))
+    if n_freed == 0:
+        return b, 0
+    for key in _PER_EDGE:
+        b[key] = np.asarray(b[key])[alive]
+    _invalidate_journal(b)
+    return b, n_freed
+
+
+# ---------------------------------------------------------------------------
+# cold restart (the ξ/κ refresh the drift monitor asks for)
+# ---------------------------------------------------------------------------
+
+
+def s5p_cold_restart(bundle: dict, config: S5PConfig, full_src,
+                     full_dst) -> tuple[dict, IncrementalResult]:
+    """Re-partition the bundle's live edge set from scratch.
+
+    This is the action behind ``needs_cold_restart``: the warm chain
+    froze ξ/κ (and the CMS width) at its cold start, and
+    :func:`~repro.incremental.drift.DriftMonitor.refresh_check` fires
+    once the live degree distribution has drifted past them.  The restart
+    replays only the **live** window — dead arrivals are gone for good —
+    re-deriving thresholds, sketches, clusters and placements at current
+    scale, and keeps the stream coordinates (``arrival``, ``stream_pos``)
+    so the new bundle drops into the same chain / CarryStore slot.
+
+    Returns ``(bundle, result)`` with ``result.edges_replayed`` equal to
+    the full cold cost (``replay_fraction == 1``).  Raises ``ValueError``
+    if the live set holds no valid (non-self-loop) edge.
+    """
+    b = ensure_slot_index(dict(bundle))
+    full_src = np.asarray(full_src, np.int32)
+    full_dst = np.asarray(full_dst, np.int32)
+    alive = np.asarray(b["alive"], bool)
+    arrival = np.asarray(b["arrival"], np.int64)[alive]
+    stream_pos = int(b["stream_pos"])
+    lsrc = full_src[arrival]
+    ldst = full_dst[arrival]
+    # keep the vertex table: values/carries sized to it stay aligned
+    n_vertices = int(np.asarray(b["degrees"]).shape[0])
+    _, nb = s5p_cold_bundle(lsrc, ldst, n_vertices, config)
+    nb["arrival"] = arrival
+    nb["stream_pos"] = np.int64(stream_pos)
+    parts = np.asarray(nb["parts"], np.int32)
+    cost = 4 * int(arrival.size)
+    result = IncrementalResult(
+        parts=_scatter_parts(parts, arrival, stream_pos),
+        rf=float(nb["rf_baseline"]), balance=float(nb["balance_baseline"]),
+        refined=False, rf_drift=0.0, balance_drift=0.0,
+        edges_replayed=cost, full_replay_cost=max(cost, 1),
+        game_rounds=0, n_new_clusters=int(nb["comb_is_head"].shape[0]),
+        n_delta_edges=0)
+    return nb, result

@@ -1,0 +1,15 @@
+"""Live partition serving: versioned bundles, atomic swaps, GAS readers."""
+
+from .bundle import BundleRegistry, PartitionBundle, build_bundle  # noqa: F401
+from .controller import ServingController  # noqa: F401
+from .server import GASServer, ServingMetrics, SuperstepRecord  # noqa: F401
+
+__all__ = [
+    "BundleRegistry",
+    "GASServer",
+    "PartitionBundle",
+    "ServingController",
+    "ServingMetrics",
+    "SuperstepRecord",
+    "build_bundle",
+]

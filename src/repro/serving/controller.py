@@ -1,0 +1,168 @@
+"""The ingest→refine→swap controller of the serving loop.
+
+:class:`ServingController` sits between a windowed partitioner chain and
+the :class:`~repro.serving.bundle.BundleRegistry`: each :meth:`step`
+applies one churn event through the chain (delta fold, expiry retraction,
+drift-triggered refinement, cluster-id / edge-slot compaction, and — the
+``needs_cold_restart`` fix — the automatic cold re-partition), snapshots
+the resulting live window, and **publishes** it as the next
+:class:`~repro.serving.bundle.PartitionBundle` version.  Readers never
+see any of the intermediate states: the chain's mutable bundle is private
+to the controller, and only the end-of-step snapshot is swapped in, at
+the step boundary, via the registry's atomic publish.
+
+The chain is duck-typed — anything with ``step() -> record | None``,
+``live_partition() -> (src, dst, parts) | None`` and ``lo``/``hi``
+coordinates serves (the S5P chain is
+:class:`~repro.incremental.driver.S5PWindowChain`; the serving benchmark
+drives an HDRF scoring-carry chain through the same controller).
+
+Run it synchronously (:meth:`step` / :meth:`run` — deterministic, what
+the tests drive) or as the background ingest thread of a live service
+(:meth:`start` / :meth:`stop` / :meth:`join`): the GAS readers keep
+serving pinned versions while the controller churns — a cold re-partition
+happens *in the controller*, off the readers' path, and lands as one more
+atomic swap.  Mid-stream the cold restart is reached through the chain's
+``auto_cold_restart``; :meth:`request_cold_restart` forces the same
+re-partition between events (the knob a drift dashboard would pull).
+"""
+
+from __future__ import annotations
+
+import threading
+import time
+
+import numpy as np
+
+from .bundle import BundleRegistry, build_bundle
+
+__all__ = ["ServingController"]
+
+
+class ServingController:
+    """Drive a window chain and publish each step's live partition."""
+
+    def __init__(self, registry: BundleRegistry, chain, *,
+                 origin_hook=None):
+        self.registry = registry
+        self.chain = chain
+        self.history: list = []
+        self._origin_hook = origin_hook
+        self._version = 0
+        self._thread: threading.Thread | None = None
+        self._stop = threading.Event()
+        self.done = threading.Event()
+
+    # ------------------------------------------------------------ stepping
+    def _origin_of(self, rec) -> str:
+        if self._origin_hook is not None:
+            return self._origin_hook(rec)
+        if getattr(rec, "cold_restarted", False):
+            return "cold-restart"
+        if getattr(rec, "rolled_back", False):
+            return "rollback"
+        if getattr(rec, "refined", False):
+            return "refine"
+        return "cold" if self._version == 0 else "delta"
+
+    def step(self):
+        """One churn event → at most one published version.
+
+        Returns the chain's step record, or ``None`` when the stream is
+        exhausted.  Fill-phase events publish nothing (there is no
+        partition to serve yet).
+        """
+        rec = self.chain.step()
+        if rec is None:
+            self.done.set()
+            return None
+        self.history.append(rec)
+        if getattr(rec, "filling", False):
+            return rec
+        snap = self.chain.live_partition()
+        if snap is None:
+            return rec
+        src, dst, parts = snap
+        self._version += 1
+        self.registry.publish(build_bundle(
+            self._version, src, dst, parts,
+            self.chain.n_vertices, self.chain.config.k,
+            lo=self.chain.lo, hi=self.chain.hi,
+            rf=float(getattr(rec, "rf", 0.0)),
+            balance=float(getattr(rec, "balance", 0.0)),
+            origin=self._origin_of(rec)))
+        return rec
+
+    def run(self):
+        """Drain the whole churn schedule synchronously."""
+        while self.step() is not None:
+            pass
+        return self.history
+
+    def request_cold_restart(self) -> bool:
+        """Force a cold re-partition of the current live window now.
+
+        The serving-side answer to ``needs_cold_restart`` when the chain
+        was built with ``auto_cold_restart=False``: re-partition from
+        scratch in the controller (readers keep serving the pinned
+        version meanwhile) and publish the result as an atomic swap at
+        this step boundary.  Returns False while the window is filling.
+        """
+        from ..incremental import s5p_cold_restart
+
+        chain = self.chain
+        if chain.bundle is None:
+            return False
+        bundle, res = s5p_cold_restart(chain.bundle, chain.config,
+                                       chain.seen_src, chain.seen_dst)
+        chain.bundle = bundle
+        snap = chain.live_partition()
+        src, dst, parts = snap
+        self._version += 1
+        self.registry.publish(build_bundle(
+            self._version, src, dst, parts,
+            chain.n_vertices, chain.config.k,
+            lo=chain.lo, hi=chain.hi, rf=res.rf, balance=res.balance,
+            origin="cold-restart"))
+        return True
+
+    # ---------------------------------------------------------- background
+    def start(self, *, throttle_s: float = 0.0) -> None:
+        """Run the churn schedule on a background ingest thread.
+
+        ``throttle_s`` sleeps between events — a crude arrival-rate model
+        that gives readers time to observe intermediate versions.
+        """
+        if self._thread is not None:
+            raise RuntimeError("controller already started")
+        self._stop.clear()
+
+        def ingest():
+            try:
+                while not self._stop.is_set():
+                    if self.step() is None:
+                        break
+                    if throttle_s:
+                        time.sleep(throttle_s)
+            finally:
+                self.done.set()
+
+        self._thread = threading.Thread(target=ingest, name="serving-ingest",
+                                        daemon=True)
+        self._thread.start()
+
+    def stop(self) -> None:
+        self._stop.set()
+
+    def join(self, timeout: float | None = None) -> None:
+        if self._thread is not None:
+            self._thread.join(timeout)
+
+    @property
+    def version(self) -> int:
+        return self._version
+
+    @property
+    def n_live_edges(self) -> int:
+        snap = self.chain.live_partition()
+        return 0 if snap is None else int(np.asarray(snap[0]).shape[0])

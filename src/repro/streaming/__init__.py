@@ -80,6 +80,7 @@ from .carry import (  # noqa: F401
     SUM,
     FnCarry,
     PartitionerCarry,
+    RetractCarry,
 )
 from .engine import (  # noqa: F401
     as_stream,
@@ -100,6 +101,7 @@ from .window import SlidingWindowStream, WindowEvent  # noqa: F401
 
 __all__ = ["Chunk", "EdgeStream", "as_stream", "run_carry", "run_retract",
            "run_scan", "run_scan_batched", "PartitionerCarry", "FnCarry",
+           "RetractCarry",
            "SUM", "COUNTED", "OR", "MAX", "REPLICATED", "CARRY_REPR",
            "ParallelEdgeStream", "run_parallel", "HostBudget",
            "ShardedEdgeStream", "read_manifest", "write_shards",

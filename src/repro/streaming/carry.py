@@ -77,6 +77,7 @@ __all__ = [
     "CARRY_REPR",
     "PartitionerCarry",
     "FnCarry",
+    "RetractCarry",
 ]
 
 SUM = "sum"
@@ -328,3 +329,44 @@ class FnCarry(PartitionerCarry):
 
     def step_chunk(self, carry, src, dst, n_valid, *extras):
         return self._chunk_fn(carry, src, dst, *extras)
+
+
+class RetractCarry(PartitionerCarry):
+    """Adapter: drive a consumer's **retraction** through the fold engines.
+
+    ``step_chunk`` of the adapter is ``retract_chunk`` of the wrapped
+    consumer, with the deleted edges' recorded per-edge ``parts`` riding
+    along as the first stream extra (state-only consumers pass
+    ``parts=None`` and the adapter forwards ``None``).  Because
+    retraction is pure subtraction on the carry's group fields, the
+    adapted "fold" inherits everything the insertion path has: lane
+    masking for exhausted streams, tree / collective merges, and all
+    three ``run_parallel`` backends — a deletion batch shards exactly
+    like an insertion batch.  State-only by construction
+    (``emits_parts=False``); ``finalize`` is the identity because a
+    retracted carry composes with further folds.
+    """
+
+    emits_parts = False
+
+    def __init__(self, pc: PartitionerCarry, *, with_parts: bool = True):
+        if not pc.supports_retract:
+            raise NotImplementedError(
+                f"{type(pc).__name__} does not support edge deletion")
+        self._pc = pc
+        self._with_parts = bool(with_parts)
+
+    @property
+    def merge_ops(self) -> tuple[str, ...]:
+        return self._pc.merge_ops
+
+    def init(self):
+        return self._pc.init()
+
+    def step_chunk(self, carry, src, dst, n_valid, *extras):
+        if self._with_parts:
+            parts, extras = extras[0], extras[1:]
+        else:
+            parts = None
+        return (self._pc.retract_chunk(carry, src, dst, n_valid, parts,
+                                       *extras), None)

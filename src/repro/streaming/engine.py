@@ -70,7 +70,8 @@ def run_carry(stream: EdgeStream, pc: PartitionerCarry, *extras, carry=None):
 
 
 def run_retract(stream: EdgeStream, pc: PartitionerCarry, parts, *extras,
-                carry):
+                carry, num_streams: int = 1, super_chunk: int = 8,
+                shard: str = "range", backend=None, mesh=None):
     """Drive ``pc.retract_chunk`` over every chunk of ``stream``.
 
     The inverse-direction driver of :func:`run_carry`: ``stream`` holds
@@ -78,8 +79,25 @@ def run_retract(stream: EdgeStream, pc: PartitionerCarry, parts, *extras,
     (``None`` for state-only consumers), and ``carry`` the live state the
     deletion is subtracted from.  Retraction is pure subtraction on the
     carry's group fields, so the deletion batch may be chunked and
-    ordered arbitrarily.  Returns the retracted carry (not finalized —
-    retraction composes with further folds)."""
+    ordered arbitrarily — including **sharded**: with ``num_streams > 1``
+    the batch flows through
+    :func:`~repro.streaming.parallel.run_parallel` exactly like an
+    insertion batch (any backend: threads / vmap / shard_map), via the
+    :class:`~repro.streaming.carry.RetractCarry` adapter; the group
+    algebra makes the result bit-identical to the sequential drive.
+    Returns the retracted carry (not finalized — retraction composes
+    with further folds)."""
+    if num_streams > 1 or backend is not None:
+        from .carry import RetractCarry
+        from .parallel import run_parallel
+
+        adapter = RetractCarry(pc, with_parts=parts is not None)
+        first = () if parts is None else (parts,)
+        _, carry = run_parallel(stream, adapter, *first, *extras,
+                                num_streams=num_streams,
+                                super_chunk=super_chunk, shard=shard,
+                                backend=backend, mesh=mesh, carry=carry)
+        return carry
     if parts is None:
         for ch in stream.chunks(*extras):
             carry = pc.retract_chunk(carry, ch.src, ch.dst,

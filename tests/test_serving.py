@@ -1,0 +1,410 @@
+"""Live partition serving: atomic swaps, churn-path bugfixes, GAS reads.
+
+Layers:
+
+1. *BundleRegistry* — pin/publish atomicity under real thread churn: a
+   writer swaps versions while readers pin and fingerprint-check; no
+   reader ever observes a torn bundle, versions retire exactly when the
+   last pin drops.
+2. *Serving smoke* (tier-1 gate) — small block graph, S5P window chain
+   through controller + GAS server: ≥ 2 atomic swaps under churn and
+   exact byte counters (independently recomputed from the replica sets).
+3. *Correctness under churn* — served PageRank (values carried across
+   swaps) converges to the same fixed point as a from-scratch run on the
+   final window; GNN / label-propagation queries execute over pinned
+   bundles.
+4. *Churn-path regressions* — the three bugfix satellites:
+   slot compaction frees tombstones without perturbing the partition or
+   breaking resumed streams / CarryStore checkpoints (tombstone leak);
+   ``needs_cold_restart`` is acted on (chain auto-restart and controller
+   ``request_cold_restart``), landing as one more atomic swap;
+   deletion batches shard through ``run_parallel`` bit-identically to
+   the sequential retraction (lane-masked retraction).
+"""
+
+from __future__ import annotations
+
+import threading
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core import S5PConfig, replication_factor
+from repro.gas import build_gas_graph, pagerank
+from repro.graphs import block_rmat_graph, community_graph
+from repro.incremental import (
+    S5PWindowChain,
+    compact_edge_slots,
+    s5p_apply_deletion,
+    s5p_apply_delta,
+    s5p_cold_bundle,
+    s5p_identity_config,
+)
+from repro.incremental.store import CarryStore
+from repro.kernels.stream_scan import GreedyCarry, GridCarry, HdrfCarry
+from repro.serving import (
+    BundleRegistry,
+    GASServer,
+    ServingController,
+    build_bundle,
+)
+from repro.streaming import EdgeStream, run_carry, run_retract
+
+K = 4
+
+
+def _leaves(c):
+    return jax.tree_util.tree_leaves(c)
+
+
+def _tree_equal(a, b) -> bool:
+    return all(np.array_equal(np.asarray(x), np.asarray(y))
+               for x, y in zip(_leaves(a), _leaves(b)))
+
+
+def _small_graph(seed=0):
+    return community_graph(512, n_communities=8, avg_degree=6,
+                           p_intra=0.9, seed=seed)
+
+
+def _serve_chain(src, dst, n, *, window, step, k=K, seed=0,
+                 supersteps_per_swap=2, auto_cold_restart=True):
+    cfg = S5PConfig(k=k, seed=seed, chunk_size=max(window, 256))
+    chain = S5PWindowChain(src, dst, n, cfg, window, step_edges=step,
+                           auto_cold_restart=auto_cold_restart)
+    registry = BundleRegistry()
+    controller = ServingController(registry, chain)
+    server = GASServer(registry)
+    rng = np.random.default_rng(seed)
+    last = -1
+    while controller.step() is not None:
+        if registry.current_version == last:
+            continue
+        last = registry.current_version
+        server.run(supersteps_per_swap)
+        server.query_pagerank(rng.integers(0, n, 8))
+    return server, controller, registry
+
+
+# ================================================ 1. registry atomicity
+def test_registry_pin_refcount_and_retirement():
+    src, dst, n = _small_graph()
+    reg = BundleRegistry()
+    assert reg.current is None
+    with reg.pin() as b:
+        assert b is None
+    parts = np.zeros(src.size, np.int32)
+    reg.publish(build_bundle(1, src, dst, parts, n, K))
+    assert reg.swap_count == 0 and reg.current_version == 1
+    with reg.pin() as b1:
+        b1.check()
+        reg.publish(build_bundle(2, src, dst, parts, n, K))
+        # superseded version stays valid while pinned
+        assert reg.swap_count == 1 and reg.versions_retired == 0
+        b1.check()
+        assert b1.version == 1
+    assert reg.versions_retired == 1  # retired when the last pin dropped
+    with reg.pin() as b2:
+        assert b2.version == 2
+    assert reg.active_pins == 0
+
+
+def test_registry_swap_atomicity_under_thread_churn():
+    """Readers pinning during concurrent publishes never see a torn
+    bundle, and versions advance monotonically per reader."""
+    src, dst, n = _small_graph()
+    rng = np.random.default_rng(0)
+    reg = BundleRegistry()
+    stop = threading.Event()
+    errors: list[BaseException] = []
+
+    def reader():
+        seen = -1
+        try:
+            while not stop.is_set():
+                with reg.pin() as b:
+                    if b is None:
+                        continue
+                    b.check()  # fingerprint: src/dst/parts one version
+                    assert b.version >= seen
+                    seen = b.version
+                    # consistent shapes (a torn mix would desync these)
+                    assert b.parts.shape == b.src.shape == b.dst.shape
+        except BaseException as e:  # noqa: BLE001
+            errors.append(e)
+
+    threads = [threading.Thread(target=reader) for _ in range(4)]
+    for t in threads:
+        t.start()
+    for v in range(1, 30):
+        m = int(rng.integers(50, src.size))
+        parts = rng.integers(0, K, m).astype(np.int32)
+        reg.publish(build_bundle(v, src[:m], dst[:m], parts, n, K))
+    stop.set()
+    for t in threads:
+        t.join()
+    assert not errors, errors
+    assert reg.swap_count == 28
+    assert reg.active_pins == 0
+    # every superseded version eventually retired
+    assert reg.versions_retired == 28
+
+
+def test_bundle_fingerprint_detects_tear():
+    src, dst, n = _small_graph()
+    b = build_bundle(1, src, dst, np.zeros(src.size, np.int32), n, K)
+    b.check()
+    torn = b._replace(parts=np.ones(src.size, np.int32))
+    with pytest.raises(AssertionError, match="torn"):
+        torn.check()
+
+
+# ================================================ 2. serving smoke (tier-1)
+def test_serving_smoke_two_swaps_and_exact_bytes():
+    src, dst, n = block_rmat_graph(block_scale=5, n_blocks=8,
+                                   edge_factor=6, seed=0)
+    E = src.size
+    server, controller, reg = _serve_chain(src, dst, n, window=E // 2,
+                                           step=E // 6)
+    s = server.metrics.summary()
+    assert s["swaps_observed"] >= 2
+    assert controller.version >= 3
+    assert reg.active_pins == 0
+    # byte counters are exact: recompute the final version's mirror set
+    # independently of the GAS layout
+    b = reg.current
+    b.check()
+    key = np.stack([np.concatenate([b.src, b.dst]),
+                    np.concatenate([b.parts, b.parts])], axis=1)
+    replicas = np.unique(key, axis=0)
+    counts = np.bincount(replicas[:, 0], minlength=n)
+    mirrors = int(np.maximum(counts - 1, 0).sum())
+    assert b.bytes_per_superstep() == 2 * mirrors * 8
+    last = server.metrics.supersteps[-1]
+    assert last.version == b.version
+    assert last.sync_bytes == 2 * mirrors * 8
+    # every super-step pinned exactly one version whose counters it used
+    assert s["sync_bytes_total"] == sum(
+        r.sync_bytes for r in server.metrics.supersteps)
+    assert s["query_latency_us_mean"] > 0
+
+
+# ================================================ 3. correctness under churn
+def test_pagerank_under_churn_matches_from_scratch():
+    """Values carried across swaps converge to the same fixed point as a
+    cold run over the same final window."""
+    src, dst, n = _small_graph(3)
+    E = src.size
+    server, controller, reg = _serve_chain(src, dst, n, window=E // 2,
+                                           step=E // 4)
+    assert server.metrics.swaps_observed >= 1
+    server.run_to_convergence(tol=1e-7, max_steps=300)
+    b = reg.current
+    cold_vals, _ = pagerank(b.gas, iterations=300)
+    np.testing.assert_allclose(np.asarray(server.values),
+                               np.asarray(cold_vals), rtol=1e-3, atol=1e-5)
+
+
+def test_queries_over_pinned_bundle():
+    from repro.models.gnn import GCNConfig, gcn_forward, gcn_init
+
+    src, dst, n = _small_graph(4)
+    reg = BundleRegistry()
+    parts = (src % K).astype(np.int32)
+    reg.publish(build_bundle(1, src, dst, parts, n, K))
+    server = GASServer(reg)
+    server.run(3)
+    vals = server.query_pagerank([0, 1, 2])
+    assert vals.shape == (3,) and np.all(np.isfinite(vals))
+    labels = server.query_components(iterations=3)
+    assert labels.shape == (n,)
+    cfg = GCNConfig(n_layers=2, d_hidden=8, d_feat=4, n_classes=3)
+    params = gcn_init(cfg, jax.random.PRNGKey(0))
+    feats = jax.random.normal(jax.random.PRNGKey(1), (n, 4))
+    logits = server.query_gnn(params, feats, cfg, vertices=[0, 5])
+    assert logits.shape == (2, 3) and np.all(np.isfinite(logits))
+    want = np.asarray(gcn_forward(params, feats, src, dst, n, cfg))[[0, 5]]
+    np.testing.assert_allclose(logits, want, rtol=1e-5, atol=1e-6)
+    assert len(server.metrics.query_latency_us) == 3
+
+
+# ================================================ 4a. tombstone leak fixed
+def test_slot_compaction_frees_tombstones_and_stream_resumes():
+    """Compaction drops dead slots, keeps the arrival map stable: the
+    same stream position still folds the same delta afterwards, and
+    re-deleting a compacted-away arrival still raises."""
+    src, dst, n = _small_graph(5)
+    E = src.size
+    E0 = int(E * 0.6)
+    cfg = S5PConfig(k=K, seed=0, chunk_size=256)
+    _, bundle = s5p_cold_bundle(src[:E0], dst[:E0], n, cfg)
+    dead = np.arange(0, E0 // 3, dtype=np.int64)
+    bundle, _ = s5p_apply_deletion(bundle, cfg, src[:E0], dst[:E0], dead)
+    twin = {k2: (np.array(v) if isinstance(v, np.ndarray) else v)
+            for k2, v in bundle.items()}
+
+    bundle, n_freed = compact_edge_slots(bundle)
+    assert n_freed == dead.size
+    assert np.asarray(bundle["parts"]).shape[0] == E0 - dead.size
+    assert bool(np.asarray(bundle["alive"]).all())
+    assert int(bundle["stream_pos"]) == E0  # stream position unmoved
+
+    # compacted-away arrivals are still "already deleted", not aliased
+    with pytest.raises(ValueError, match="already deleted"):
+        s5p_apply_deletion(bundle, cfg, src[:E0], dst[:E0], dead[:4])
+
+    # the resumed stream folds identically with and without compaction
+    b1, r1 = s5p_apply_delta(bundle, cfg, src, dst, E0)
+    b2, r2 = s5p_apply_delta(twin, cfg, src, dst, E0)
+    np.testing.assert_array_equal(r1.parts, r2.parts)
+    assert r1.parts.shape == (E,)
+    assert np.all(r1.parts[dead] == -1)
+    assert np.all(r1.parts[E0:] >= 0)
+    assert r1.rf == pytest.approx(r2.rf)
+
+
+def test_compacted_bundle_carrystore_roundtrip(tmp_path):
+    src, dst, n = _small_graph(6)
+    E = src.size
+    E0 = int(E * 0.7)
+    cfg = S5PConfig(k=K, seed=0, chunk_size=256)
+    _, bundle = s5p_cold_bundle(src[:E0], dst[:E0], n, cfg)
+    bundle, _ = s5p_apply_deletion(
+        bundle, cfg, src[:E0], dst[:E0], np.arange(E0 // 4, dtype=np.int64))
+    bundle, n_freed = compact_edge_slots(bundle)
+    assert n_freed > 0
+    store = CarryStore(tmp_path)
+    store.save(bundle, consumer="s5p", config=s5p_identity_config(cfg),
+               stream_pos=int(bundle["stream_pos"]))
+    loaded, meta = store.load(consumer="s5p",
+                              config=s5p_identity_config(cfg),
+                              max_stream_pos=E)
+    assert int(meta["stream_pos"]) == E0
+    for key in ("arrival", "parts", "alive", "stream_pos"):
+        np.testing.assert_array_equal(np.asarray(loaded[key]),
+                                      np.asarray(bundle[key]), err_msg=key)
+    _, res = s5p_apply_delta(loaded, cfg, src, dst, E0)
+    assert res.parts.shape == (E,)
+    assert np.all(res.parts[E0:] >= 0)
+
+
+def test_window_chain_slot_compaction_bounds_memory():
+    """With aggressive slot compaction the chain's per-edge arrays stay
+    O(window) while the uncompacted twin grows O(arrivals) — and the
+    live partition itself is unchanged."""
+    src, dst, n = _small_graph(7)
+    E = src.size
+    W, B = E // 4, E // 8
+    cfg = S5PConfig(k=K, seed=0, chunk_size=max(W, 256))
+    lean = S5PWindowChain(src, dst, n, cfg, W, step_edges=B,
+                          slot_compact_factor=1.5)
+    fat = S5PWindowChain(src, dst, n, cfg, W, step_edges=B,
+                         slot_compact_factor=0.0)
+    freed = 0
+    while True:
+        a, b = lean.step(), fat.step()
+        assert (a is None) == (b is None)
+        if a is None:
+            break
+        freed += a.n_slots_freed
+        sa, sb = lean.live_partition(), fat.live_partition()
+        assert (sa is None) == (sb is None)
+        if sa is not None:
+            for x, y in zip(sa, sb):
+                np.testing.assert_array_equal(x, y)
+    assert freed > 0
+    n_live = int(np.asarray(lean.bundle["alive"]).sum())
+    assert np.asarray(lean.bundle["parts"]).shape[0] <= 1.5 * max(n_live, 1)
+    assert np.asarray(fat.bundle["parts"]).shape[0] == E
+
+
+# ================================================ 4b. cold restart acted on
+def test_auto_cold_restart_acts_and_swaps():
+    """``needs_cold_restart`` is no longer advisory-only: with
+    ``auto_cold_restart=True`` the chain re-partitions the live window
+    and the controller publishes the result as one more atomic swap.
+
+    A fixed-size window never drifts ξ organically (ξ is a function of
+    |E|/|V|, both window-constant), so the advisory trigger is forced
+    via a negative threshold — the test pins the *acting*, not the
+    signal (the signal itself is pinned by test_window.py)."""
+    src, dst, n = _small_graph(10)
+    E = src.size
+    cfg = S5PConfig(k=K, seed=0, chunk_size=max(E // 3, 256),
+                    xi_refresh_threshold=-1.0)
+    chain = S5PWindowChain(src, dst, n, cfg, E // 3, step_edges=E // 6,
+                           auto_cold_restart=True)
+    reg = BundleRegistry()
+    controller = ServingController(reg, chain)
+    controller.run()
+    post_fill = [r for r in controller.history if not r.filling]
+    restarts = [r for r in post_fill if r.cold_restarted]
+    assert restarts, "forced advisory signal was never acted on"
+    for r in restarts:
+        assert r.needs_cold_restart  # the signal that triggered it
+        assert r.rf > 0
+    # the restart landed as a published version like any other swap
+    assert reg.swap_count >= 1
+    assert reg.current.origin == "cold-restart"
+    # the re-partition kept serving exactly the live window
+    s, d, p = chain.live_partition()
+    assert reg.current.n_edges == s.size
+    assert np.all(p >= 0)
+
+
+def test_request_cold_restart_publishes_swap():
+    src, dst, n = _small_graph(8)
+    E = src.size
+    cfg = S5PConfig(k=K, seed=0, chunk_size=max(E // 2, 256))
+    chain = S5PWindowChain(src, dst, n, cfg, E // 2, step_edges=E // 4,
+                           auto_cold_restart=False)
+    reg = BundleRegistry()
+    controller = ServingController(reg, chain)
+    assert not controller.request_cold_restart()  # nothing live yet
+    while reg.current is None:
+        assert controller.step() is not None
+    v0 = reg.current_version
+    rf0 = reg.current.rf
+    assert controller.request_cold_restart()
+    assert reg.current_version == v0 + 1
+    assert reg.swap_count >= 1
+    assert reg.current.origin == "cold-restart"
+    # the re-partition covers exactly the live window
+    s, d, p = chain.live_partition()
+    assert reg.current.n_edges == s.size
+    assert np.all(p >= 0)
+    want = replication_factor(s, d, p, n_vertices=n, k=K)
+    assert reg.current.rf == pytest.approx(float(want))
+    assert rf0 > 0
+
+
+# ================================================ 4c. sharded retraction
+@pytest.mark.parametrize("name", ["greedy", "hdrf", "grid"])
+def test_parallel_retraction_bit_parity(name):
+    """Deletion batches shard through run_parallel exactly like
+    insertions: threads and vmap lanes reproduce the sequential
+    retraction bit-for-bit (carry group algebra)."""
+    src, dst, n = _small_graph(9)
+    E = src.size
+    if name == "greedy":
+        pc = GreedyCarry(n, K)
+    elif name == "hdrf":
+        pc = HdrfCarry(n, K, 1.1)
+    else:
+        rng = np.random.default_rng(0)
+        pc = GridCarry(K, rng.integers(0, 2, n).astype(np.int32),
+                       rng.integers(0, 2, n).astype(np.int32), 2)
+    st = EdgeStream(src, dst, n, chunk_size=128)
+    parts, carry = run_carry(st, pc)
+    parts = np.asarray(parts)
+    # retract a scattered batch (not a clean suffix)
+    idx = np.arange(0, E, 3, dtype=np.int64)
+    back = EdgeStream(src[idx], dst[idx], n, chunk_size=64)
+    seq = run_retract(back, pc, parts[idx], carry=carry)
+    par = run_retract(back, pc, parts[idx], carry=carry, num_streams=3)
+    vm = run_retract(back, pc, parts[idx], carry=carry, num_streams=3,
+                     backend="vmap")
+    assert _tree_equal(seq, par), name
+    assert _tree_equal(seq, vm), name
+    assert not _tree_equal(seq, carry)  # it actually subtracted
