@@ -108,7 +108,7 @@ def _neighbor_partition_weight(inputs: GameInputs, assign: jax.Array, n_clusters
 
 
 def _batch_update(inputs, degs, assign, active, key, dk, inv_k, accept_prob,
-                  n_clusters):
+                  n_clusters, move_pen=None):
     """Best response for ``active`` clusters (one simultaneous batch).
 
     Within a batch moves are simultaneous (the paper's batch parallelism).
@@ -117,6 +117,12 @@ def _batch_update(inputs, degs, assign, active, key, dk, inv_k, accept_prob,
     probability ``accept_prob`` (ε-damped best response, a.s. convergent
     in potential games).  ``wanted`` tracks whether anyone had an
     improving move at all: the equilibrium test.
+
+    ``move_pen`` (C, k), when given, is added to the cost matrix — the
+    elastic-resharding migration penalty (zero on each cluster's home
+    partition, so staying put is never taxed).  Adding a
+    strategy-dependent constant keeps S an exact potential, so the
+    convergence argument is unchanged.
     """
     sizes, k = inputs.sizes, inputs.k
     w_ip = _neighbor_partition_weight(inputs, assign, n_clusters)  # (C, k)
@@ -125,6 +131,8 @@ def _batch_update(inputs, degs, assign, active, key, dk, inv_k, accept_prob,
     # hypothetical |p| if i moved to p: current size + s_i when p ≠ P_i
     hyp = part_sizes[None, :] + sizes[:, None] * (1.0 - onehot)
     cost = dk * sizes[:, None] * hyp + (degs[:, None] - w_ip + sizes[:, None]) * inv_k
+    if move_pen is not None:
+        cost = cost + move_pen
     # deterministic tie-breaking: the current partition wins cost ties
     # (no churn between equal-cost strategies), remaining ties go to the
     # lowest partition id — best responses are a pure function of state
@@ -213,7 +221,8 @@ def _run_game_jit(
 
 @partial(
     jax.jit,
-    static_argnames=("n_clusters", "k", "batch_size", "max_rounds"),
+    static_argnames=("n_clusters", "k", "batch_size", "max_rounds",
+                     "use_move_cost"),
 )
 def _run_game_masked_jit(
     sizes,
@@ -227,11 +236,14 @@ def _run_game_masked_jit(
     leader_mask,
     move_mask,
     batch_ids,
+    move_cost,
+    home,
     *,
     n_clusters: int,
     k: int,
     batch_size: int,
     max_rounds: int,
+    use_move_cost: bool,
 ):
     """Masked best-response dynamics (incremental refinement path).
 
@@ -245,6 +257,12 @@ def _run_game_masked_jit(
     at least one movable cluster (precomputed on host): a refinement over
     a handful of touched clusters pays for those batches only, not a full
     sweep — frozen-only batches are provably no-ops.
+
+    ``use_move_cost`` (static) selects the elastic-resharding payoff: each
+    cluster pays ``move_cost[i]`` on every partition except ``home[i]``
+    (``home = -1`` ⇒ no free square — a uniform penalty that cannot bias
+    the argmin).  False leaves the trace identical to the pre-move-cost
+    masked game, so the refinement goldens hold.
     """
     inputs = GameInputs(sizes, pair_a, pair_b, pair_w, 0, k)
     degs = _cluster_degrees(inputs, n_clusters)
@@ -253,6 +271,10 @@ def _run_game_masked_jit(
     inv_k = 1.0 / k
     dk = delta * inv_k
     key0 = jax.random.PRNGKey(seed)
+    move_pen = None
+    if use_move_cost:
+        at_home = jax.nn.one_hot(home, k, dtype=jnp.float32)  # -1 ⇒ all-zero
+        move_pen = move_cost[:, None] * (1.0 - at_home)
 
     def stage(assign, moved, wanted, key, role_mask):
         def body(b, carry):
@@ -264,7 +286,7 @@ def _run_game_masked_jit(
             # acceptance draws don't depend on which other windows ran
             assign, m, w = _batch_update(
                 inputs, degs, assign, in_batch, jax.random.fold_in(key, bid),
-                dk, inv_k, accept_prob, n_clusters)
+                dk, inv_k, accept_prob, n_clusters, move_pen)
             return assign, moved | m, wanted | w
 
         return jax.lax.fori_loop(0, n_batches, body, (assign, moved, wanted))
@@ -304,6 +326,8 @@ def run_game(
     seed: int = 0,
     leader_mask: np.ndarray | None = None,
     move_mask: np.ndarray | None = None,
+    move_cost: np.ndarray | None = None,
+    home: np.ndarray | None = None,
 ) -> GameResult:
     """Run (damped) best-response dynamics to a pure Nash equilibrium.
 
@@ -312,12 +336,24 @@ def run_game(
     convention, and only ``move_mask`` players may deviate (all others are
     frozen context).  With both ``None`` the original full game runs —
     bit-identical to before the masks existed.
+
+    ``move_cost`` (C,) adds a migration penalty to the masked game's
+    payoff: cluster i pays ``move_cost[i]`` on every partition other than
+    ``home[i]`` (default: its ``assign0`` seat; pass ``home[i] = -1`` for
+    clusters with no surviving home — displaced by a shrink — which makes
+    the penalty uniform and therefore neutral).  This is the bounded-
+    migration knob of elastic k→k′ resharding: a cluster relocates only
+    when the equilibrium gain exceeds its migration cost.
     """
     if assign0 is None:
         assign0 = init_assignment(np.asarray(inputs.sizes), inputs.k)
     degs = _cluster_degrees(inputs, n_clusters)
     if delta is None:
         delta = compute_delta(inputs.sizes, degs, inputs.k)
+    if move_cost is not None and leader_mask is None and move_mask is None:
+        # the migration-cost game is only defined on the masked path;
+        # default every player movable with the contiguous leader prefix
+        leader_mask = np.arange(n_clusters) < inputs.n_head
     if leader_mask is None and move_mask is None:
         assign, rounds, converged = _run_game_jit(
             inputs.sizes,
@@ -345,6 +381,12 @@ def run_game(
     if batch_ids.size == 0:  # every player frozen: a no-op equilibrium
         return GameResult(assignment=jnp.asarray(assign0, jnp.int32),
                           rounds=jnp.int32(0), converged=jnp.bool_(True))
+    use_move_cost = move_cost is not None
+    if use_move_cost:
+        home = np.asarray(assign0, np.int32) if home is None else home
+    else:  # dummy operands: unused under a use_move_cost=False trace
+        move_cost = np.zeros((n_clusters,), np.float32)
+        home = np.full((n_clusters,), -1, np.int32)
     assign, rounds, converged = _run_game_masked_jit(
         inputs.sizes,
         inputs.pair_a,
@@ -357,10 +399,13 @@ def run_game(
         jnp.asarray(leader_mask, bool),
         jnp.asarray(move_mask, bool),
         jnp.asarray(batch_ids),
+        jnp.asarray(move_cost, jnp.float32),
+        jnp.asarray(home, jnp.int32),
         n_clusters=n_clusters,
         k=inputs.k,
         batch_size=batch_size,
         max_rounds=max_rounds,
+        use_move_cost=use_move_cost,
     )
     return GameResult(assignment=assign, rounds=rounds, converged=converged)
 

@@ -1,0 +1,36 @@
+"""Elastic k→k′ re-partitioning with bounded migration.
+
+Production clusters resize; "(Re)partitioning for stream-enabled
+computation" (Le Merrer & Trédan, PAPERS.md) frames the resize as a
+migration-cost problem, and "Hybrid Edge Partitioner" (Mayer & Jacobsen)
+shows quality survives when only a bounded core is re-placed.  This
+package is that trade implemented on the S5P warm-start substrate:
+
+- :func:`reshard_bundle` maps an S5P carry bundle onto a new partition
+  count.  Every edge whose partition survives **keeps its placement**;
+  only the displaced remainder (partitions ≥ k′ on shrink, plus the edges
+  of clusters the game chose to relocate) is re-placed.  Which clusters
+  relocate is decided by the masked Stackelberg game with a
+  **migration-cost term** in the payoff (``core.game``'s ``move_cost``):
+  a cluster moves only when the equilibrium gain at k′ exceeds the cost
+  of shipping its edges.
+- :func:`reshard_scan_carry` does the same for the scoring-baseline scan
+  carries (greedy / HDRF): grow pads the k-dimensioned columns, shrink
+  retracts the displaced edges through the group algebra and re-scans
+  only them at k′.
+- :func:`reshard_carry` dispatches on what it is handed.
+
+The serving loop publishes the result as one more atomic bundle swap
+(``ServingController.resize``); the runtime's ``ElasticController`` calls
+it in place of a cold re-partition when its job is graph-shaped.
+"""
+
+from .reshard import (  # noqa: F401
+    ReshardResult,
+    reshard_bundle,
+    reshard_carry,
+    reshard_scan_carry,
+)
+
+__all__ = ["ReshardResult", "reshard_bundle", "reshard_scan_carry",
+           "reshard_carry"]

@@ -1,0 +1,313 @@
+"""Bounded-migration k→k′ resharding of S5P bundles and scan carries.
+
+The operation behind an elastic resize: the cluster changes shape, the
+partition count must follow, and a cold re-partition at k′ — O(|E|)
+stream replay plus 100 % edge migration — is exactly what the warm-start
+substrate lets us avoid.  :func:`reshard_bundle` re-settles only the
+cluster→partition game (O(C), no stream replay) under a migration-cost
+payoff, then re-places only the edges whose placement actually died:
+
+- **grow** (k′ > k): every placement survives; the game decides which
+  clusters are worth relocating onto the new empty partitions, each
+  paying ``move_cost ∝ |c_i|`` (its edge-shipping bill) to leave home.
+- **shrink** (k′ < k): edges on partitions ≥ k′ are displaced and *must*
+  move (their clusters re-home with no migration penalty — ``home = -1``
+  makes the penalty uniform, hence neutral); surviving clusters may also
+  relocate, but only if the gain at k′ beats their migration cost.
+
+Everything else — Alg. 1 clustering state, degrees, Θ sheets, the CMS,
+per-edge cluster tags, slot/arrival coordinates — is k-independent and
+carries over untouched, so the resharded bundle drops back into the same
+window chain / CarryStore slot and keeps absorbing deltas at k′.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import NamedTuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from ..core import game as _game
+from ..core.metrics import load_balance, replication_factor
+from ..core.postprocess import AssignCarry
+from ..core.s5p import S5PConfig
+from ..incremental.pipeline import (
+    _INT32_MAX,
+    _invalidate_journal,
+    _least_loaded_fill,
+    ensure_slot_index,
+)
+from ..streaming import EdgeStream, run_carry, run_retract
+
+__all__ = ["ReshardResult", "reshard_bundle", "reshard_scan_carry",
+           "reshard_carry"]
+
+
+class ReshardResult(NamedTuple):
+    """What a resize cost and what it bought."""
+
+    k_old: int
+    k_new: int
+    rf: float  # replication factor at k_new
+    balance: float  # load balance at k_new
+    n_live: int  # live placed edges at reshard time
+    migrated_edges: int  # live edges whose partition changed
+    n_displaced: int  # live edges whose old partition no longer exists
+    moved_clusters: int  # clusters the game relocated
+    game_rounds: int
+
+    @property
+    def migrated_fraction(self) -> float:
+        return self.migrated_edges / max(self.n_live, 1)
+
+
+def _noop_result(k: int, rf: float, bal: float, n_live: int) -> ReshardResult:
+    return ReshardResult(k_old=k, k_new=k, rf=rf, balance=bal,
+                         n_live=n_live, migrated_edges=0, n_displaced=0,
+                         moved_clusters=0, game_rounds=0)
+
+
+def reshard_bundle(bundle: dict, config: S5PConfig, k_new: int,
+                   full_src, full_dst, *, move_cost_scale: float = 1.0,
+                   ) -> tuple[dict, S5PConfig, ReshardResult]:
+    """Map an S5P warm bundle onto ``k_new`` partitions, migrating as few
+    edges as the balance constraint allows.
+
+    ``full_src``/``full_dst`` are the arrival-indexed stream prefix the
+    bundle is keyed on (``S5PWindowChain.seen_src/seen_dst``); only the
+    displaced slots are ever gathered from them.  ``move_cost_scale``
+    scales the per-cluster migration penalty ``|c_i| / k′`` — 0 recovers
+    the unconstrained re-settle (most migration, best RF), large values
+    freeze every survivor in place (zero migration beyond the displaced
+    set).  Returns ``(bundle, config_at_k_new, result)``; the input
+    bundle is not mutated.
+    """
+    k_old = int(config.k)
+    if k_new < 1:
+        raise ValueError(f"k_new must be >= 1, got {k_new}")
+    b = ensure_slot_index(dict(bundle))
+    new_config = dataclasses.replace(config, k=int(k_new))
+
+    arrival = np.asarray(b["arrival"], np.int64)
+    full_src = np.asarray(full_src, np.int32)
+    full_dst = np.asarray(full_dst, np.int32)
+    slot_src = full_src[arrival]
+    slot_dst = full_dst[arrival]
+    old_parts = np.asarray(b["parts"], np.int32)
+    alive = np.asarray(b["alive"], bool)
+    placed = alive & (old_parts >= 0)
+    n_live = int(np.count_nonzero(placed))
+
+    if k_new == k_old:
+        return b, new_config, _noop_result(
+            k_old, float(b["rf_baseline"]), float(b["balance_baseline"]),
+            n_live)
+
+    sizes = np.asarray(b["sizes"], np.float32)
+    comb_is_head = np.asarray(b["comb_is_head"], bool)
+    C = int(sizes.shape[0])
+    old_c2p = np.asarray(b["c2p"], np.int32)
+
+    # ---- seat the displaced clusters, keep everyone else home --------
+    displaced_c = old_c2p >= k_new  # never true on grow
+    c2p0 = old_c2p.copy()
+    c2p0[displaced_c] = -1
+    disp_ids = np.nonzero(displaced_c)[0]
+    # big clusters first: successive least-loaded seating packs better
+    disp_ids = disp_ids[np.argsort(-sizes[disp_ids], kind="stable")]
+    c2p0 = _least_loaded_fill(sizes, c2p0, disp_ids, int(k_new))
+
+    # ---- the migration-cost Stackelberg game -------------------------
+    # A cluster's bill for leaving home is its edge volume over k′ — the
+    # same normalization as the game's communication term, so the two
+    # trade in one currency.  Displaced clusters have no home to defend.
+    home = np.where(displaced_c, -1, old_c2p).astype(np.int32)
+    move_cost = np.where(
+        displaced_c, 0.0,
+        float(move_cost_scale) * sizes / float(k_new)).astype(np.float32)
+    move_mask = sizes > 0
+    game_rounds = 0
+    if np.any(move_mask):
+        inputs = _game.GameInputs(
+            sizes=jnp.asarray(sizes),
+            pair_a=jnp.asarray(b["pair_a"], jnp.int32),
+            pair_b=jnp.asarray(b["pair_b"], jnp.int32),
+            pair_w=jnp.asarray(b["pair_w"], jnp.float32),
+            n_head=0, k=int(k_new))
+        bs = _game.default_batch_size(config.game_batch_size, C)
+        res = _game.run_game(
+            inputs, C, batch_size=bs, max_rounds=config.game_max_rounds,
+            accept_prob=config.game_accept_prob, assign0=c2p0,
+            seed=config.seed + 2, leader_mask=comb_is_head,
+            move_mask=move_mask, move_cost=move_cost, home=home)
+        c2p_new = np.asarray(res.assignment, np.int32)
+        game_rounds = int(res.rounds)
+    else:
+        c2p_new = c2p0
+    moved_c = c2p_new != old_c2p
+    # empty clusters ride along as metadata; seat them in-range so later
+    # deltas that revive them place against a valid map
+    oob = c2p_new >= k_new
+    if np.any(oob):
+        c2p_new = np.where(oob, c2p_new % k_new, c2p_new).astype(np.int32)
+
+    # ---- bounded migration: keep survivors, re-place the rest --------
+    edge_cu = np.asarray(b["edge_cu"], np.int32)
+    edge_cv = np.asarray(b["edge_cv"], np.int32)
+    edge_head = np.asarray(b["edge_head"], bool)
+    affected = placed & (
+        (old_parts >= k_new)
+        | ((edge_cu >= 0) & moved_c[np.maximum(edge_cu, 0)])
+        | ((edge_cv >= 0) & moved_c[np.maximum(edge_cv, 0)]))
+    kept = placed & ~affected
+    load64 = np.zeros(int(k_new), np.int64)
+    np.add.at(load64, old_parts[kept], 1)
+    max_load = (_INT32_MAX if config.bounded
+                else int(math.ceil(config.tau * max(n_live, 1) / k_new)))
+    parts = old_parts.copy()
+    aidx = np.nonzero(affected)[0]
+    if aidx.size:
+        re_stream = EdgeStream(slot_src[aidx], slot_dst[aidx],
+                               int(np.asarray(b["degrees"]).shape[0]),
+                               chunk_size=config.chunk_size)
+        ac = AssignCarry(int(k_new), max_load, jnp.asarray(c2p_new))
+        re_parts, load = run_carry(
+            re_stream, ac, jnp.asarray(edge_head[aidx]),
+            jnp.asarray(np.maximum(edge_cu[aidx], 0)),
+            jnp.asarray(np.maximum(edge_cv[aidx], 0)),
+            carry=jnp.asarray(load64.astype(np.int32)))
+        parts[aidx] = np.asarray(re_parts, np.int32)
+        load = np.asarray(load, np.int32)
+    else:
+        load = load64.astype(np.int32)
+
+    n_vertices = int(np.asarray(b["degrees"]).shape[0])
+    rf = float(replication_factor(slot_src, slot_dst, parts,
+                                  n_vertices=n_vertices, k=int(k_new)))
+    bal = float(load_balance(parts, k=int(k_new)))
+    migrated = int(np.count_nonzero(placed & (parts != old_parts)))
+    n_displaced = int(np.count_nonzero(placed & (old_parts >= k_new)))
+
+    b["c2p"] = c2p_new
+    b["load"] = load
+    b["parts"] = parts
+    b["touched"] = np.zeros(C, bool)
+    b["rf_baseline"] = np.float64(rf)
+    b["balance_baseline"] = np.float64(bal)
+    # κ is k-dependent (≈ 2E/k′ unbounded): leaving the k-era value in
+    # place would trip needs_cold_restart on the very next delta
+    if not config.bounded:
+        b["kappa"] = np.int32(
+            min(max(int(math.ceil(2.0 * n_live / k_new)), 2), _INT32_MAX))
+    # the journal snapshots k-era c2p/load — a rollback across a resize
+    # would resurrect out-of-range partitions
+    _invalidate_journal(b)
+
+    result = ReshardResult(
+        k_old=k_old, k_new=int(k_new), rf=rf, balance=bal, n_live=n_live,
+        migrated_edges=migrated, n_displaced=n_displaced,
+        moved_clusters=int(np.count_nonzero(moved_c & (sizes > 0))),
+        game_rounds=game_rounds)
+    return b, new_config, result
+
+
+# ---------------------------------------------------------------------------
+# scan carries (greedy / HDRF)
+# ---------------------------------------------------------------------------
+
+
+def _resize_cols(arr: np.ndarray, k_new: int) -> np.ndarray:
+    """Pad (grow) or slice (shrink) the trailing k axis with zeros."""
+    k_old = arr.shape[-1]
+    if k_new <= k_old:
+        return arr[..., :k_new]
+    pad = [(0, 0)] * (arr.ndim - 1) + [(0, k_new - k_old)]
+    return np.pad(arr, pad)
+
+
+def reshard_scan_carry(pc, carry, k_new: int, src, dst, parts, *,
+                       chunk_size: int = 1 << 16,
+                       ) -> tuple[object, np.ndarray, ReshardResult]:
+    """Reshard a greedy/HDRF carry (and its recorded parts) onto k′.
+
+    ``pc`` is the **k′-dimensioned** consumer (``GreedyCarry(V, k′)`` /
+    ``HdrfCarry(V, k′)``); ``carry`` its k-era state; ``src``/``dst``/
+    ``parts`` the edges the carry accounts for.  Grow pads the
+    k-dimensioned columns with zeros (no placement changes at all);
+    shrink retracts the displaced edges through the group algebra, slices
+    the columns, and re-scans only the displaced edges at k′.  Grid
+    carries are structurally k-bound (hashed row/col tables) and raise.
+    """
+    from ..kernels.stream_scan import ops as _ops
+    from ..kernels.stream_scan import ref as _ref
+
+    if isinstance(pc, _ops.GridCarry):
+        raise ValueError(
+            "grid carries hash vertices into a fixed k grid; a resize "
+            "re-hashes every edge — use a cold re-partition")
+    if not isinstance(pc, (_ops.GreedyCarry, _ops.HdrfCarry)):
+        raise ValueError(f"cannot reshard carry for {type(pc).__name__}")
+
+    src = np.asarray(src, np.int32)
+    dst = np.asarray(dst, np.int32)
+    parts = np.asarray(parts, np.int32)
+    k_old = int(np.asarray(carry[0]).shape[0])
+    k_new = int(k_new)
+    n_live = int(np.count_nonzero(parts >= 0))
+    n_vertices = pc.n_vertices
+
+    if k_new == k_old:
+        rf = float(replication_factor(src, dst, parts,
+                                      n_vertices=n_vertices, k=k_old))
+        bal = float(load_balance(parts, k=k_old))
+        return carry, parts, _noop_result(k_old, rf, bal, n_live)
+
+    displaced = parts >= k_new  # empty on grow
+    didx = np.nonzero(displaced)[0]
+    work = carry
+    if didx.size:
+        # subtract the dead partitions' accounting while the carry is
+        # still k-dimensioned — COUNTED/SUM fields retract exactly
+        del_stream = EdgeStream(src[didx], dst[didx], n_vertices,
+                                chunk_size=chunk_size)
+        work = run_retract(del_stream, pc, jnp.asarray(parts[didx]),
+                           carry=work)
+
+    load = jnp.asarray(_resize_cols(np.asarray(work[0]), k_new))
+    rep = jnp.asarray(_resize_cols(np.asarray(work[1]), k_new))
+    if isinstance(pc, _ops.HdrfCarry):
+        fresh = _ref.hdrf_init(n_vertices, k_new, float(np.asarray(work[3])))
+        work = (load, rep, work[2], work[3], fresh[4])
+    else:
+        work = (load, rep)
+
+    new_parts = parts.copy()
+    if didx.size:
+        re_stream = EdgeStream(src[didx], dst[didx], n_vertices,
+                               chunk_size=chunk_size)
+        re_parts, work = run_carry(re_stream, pc, carry=work)
+        new_parts[didx] = np.asarray(re_parts, np.int32)
+
+    rf = float(replication_factor(src, dst, new_parts,
+                                  n_vertices=n_vertices, k=k_new))
+    bal = float(load_balance(new_parts, k=k_new))
+    migrated = int(np.count_nonzero((parts >= 0) & (new_parts != parts)))
+    return work, new_parts, ReshardResult(
+        k_old=k_old, k_new=k_new, rf=rf, balance=bal, n_live=n_live,
+        migrated_edges=migrated, n_displaced=int(didx.size),
+        moved_clusters=0, game_rounds=0)
+
+
+def reshard_carry(state, k_new: int, *args, **kwargs):
+    """Dispatch: S5P bundle dict → :func:`reshard_bundle` (pass ``config,
+    k_new, full_src, full_dst``); scan consumer → :func:`reshard_scan_carry`
+    (pass ``carry, k_new, src, dst, parts``)."""
+    if isinstance(state, dict) and "c2p" in state:
+        config = args[0] if args else kwargs.pop("config")
+        rest = args[1:] if args else ()
+        return reshard_bundle(state, config, k_new, *rest, **kwargs)
+    return reshard_scan_carry(state, kwargs.pop("carry"), k_new,
+                              *args, **kwargs)

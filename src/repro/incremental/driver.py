@@ -26,6 +26,7 @@ edges of a stream continuously.
 
 from __future__ import annotations
 
+import dataclasses
 from typing import Any, NamedTuple
 
 import jax
@@ -495,6 +496,27 @@ class S5PWindowChain:
             churn=float(churn), needs_cold_restart=bool(needs_cold),
             xi_drift=float(xi_drift), n_compacted=int(n_comp),
             cold_restarted=cold_restarted, n_slots_freed=int(n_freed))
+
+    def resize(self, k_new: int):
+        """Elastic k→k′: reshard the live bundle onto ``k_new`` partitions.
+
+        Bounded migration via :func:`repro.elastic.reshard_bundle` — edges
+        whose partition survives keep their placement; the chain's config
+        follows to k′ so subsequent steps ingest against the new count.
+        Returns the :class:`~repro.elastic.ReshardResult`, or ``None``
+        while the window is still filling (nothing to reshard — the cold
+        start will simply run at the updated k).
+        """
+        from ..elastic import reshard_bundle
+
+        if self.bundle is None:
+            self.config = dataclasses.replace(self.config, k=int(k_new))
+            return None
+        bundle, config, res = reshard_bundle(
+            self.bundle, self.config, k_new, self.seen_src, self.seen_dst)
+        self.bundle = bundle
+        self.config = config
+        return res
 
     def steps(self):
         """Iterate the remaining churn schedule."""

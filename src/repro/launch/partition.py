@@ -155,11 +155,17 @@ def run(graph: str, k: int, partitioner: str = "s5p", seed: int = 0,
         drift_threshold: float | None = None,
         refine_rounds: int | None = None,
         xi_refresh_threshold: float | None = None,
-        window_edges: int | None = None, window_step: int | None = None):
+        window_edges: int | None = None, window_step: int | None = None,
+        resize_k: int | None = None):
     for pname, v in (("k", k), ("chunk_size", chunk_size), ("window", window),
                      ("num_streams", num_streams), ("super_chunk", super_chunk)):
         if v < 1:
             raise ValueError(f"{pname} must be >= 1, got {v}")
+    if resize_k is not None:
+        if compare or window_edges is not None or resume_carry or delta or delete:
+            raise ValueError("--resize-k runs a single cold partition "
+                             "followed by an elastic reshard; drop "
+                             "--compare/--window-edges/carry flags")
     stream = None
     if graph.startswith("file:"):
         stream = open_sharded_stream(graph[5:], chunk_size=chunk_size,
@@ -192,6 +198,16 @@ def run(graph: str, k: int, partitioner: str = "s5p", seed: int = 0,
                 src, dst, n, k, partitioner, seed, window_edges, window_step,
                 stream=stream, chunk_size=chunk_size, ordering=ordering,
                 drift_threshold=drift_threshold,
+                refine_rounds=refine_rounds,
+                xi_refresh_threshold=xi_refresh_threshold)
+        finally:
+            if stream is not None:
+                stream.close()
+    if resize_k is not None:
+        try:
+            return _run_resize_cli(
+                src, dst, n, k, resize_k, partitioner, seed,
+                chunk_size=chunk_size, drift_threshold=drift_threshold,
                 refine_rounds=refine_rounds,
                 xi_refresh_threshold=xi_refresh_threshold)
         finally:
@@ -299,6 +315,42 @@ def _run_window_cli(src, dst, n, k, partitioner, seed, window_edges,
     print(f"[window] {len(history)} steps, {dt:.1f}s total "
           f"({dt / max(len(history), 1):.2f}s/step)")
     return history
+
+
+def _run_resize_cli(src, dst, n, k, k_new, partitioner, seed, *,
+                    chunk_size, drift_threshold, refine_rounds,
+                    xi_refresh_threshold):
+    """``--resize-k`` flow: cold partition at k, elastic reshard to k′.
+
+    The operational shape this models: a cluster resize arrives while a
+    partition is live, and instead of a cold re-partition at k′ (full
+    stream replay + 100 % migration) the bundle is re-homed with bounded
+    migration (``repro.elastic``).  Prints RF before/after and the
+    migrated-edge fraction.
+    """
+    from ..elastic import reshard_bundle
+    from ..incremental.pipeline import s5p_cold_bundle
+
+    if partitioner != "s5p":
+        raise ValueError("--resize-k reshards the s5p warm bundle; use "
+                         "--partitioner s5p (scan carries reshard via "
+                         "repro.elastic.reshard_scan_carry)")
+    cfg = _s5p_cfg(k, seed, chunk_size, "natural", 1, 8, drift_threshold,
+                   refine_rounds, xi_refresh_threshold)
+    t0 = time.time()
+    _, bundle = s5p_cold_bundle(src, dst, n, cfg)
+    t_cold = time.time() - t0
+    rf0 = float(bundle["rf_baseline"])
+    t0 = time.time()
+    _, _, res = reshard_bundle(bundle, cfg, k_new, src, dst)
+    t_resize = time.time() - t0
+    print(f"{partitioner:10s} k={k} RF={rf0:7.3f}  [{t_cold:.1f}s cold]")
+    print(f"resize →k={k_new} RF={res.rf:7.3f} balance={res.balance:5.2f} "
+          f"migrated={res.migrated_fraction:.1%} "
+          f"({res.migrated_edges}/{res.n_live} edges, "
+          f"{res.n_displaced} displaced, {res.moved_clusters} clusters "
+          f"moved, {res.game_rounds} rounds)  [{t_resize:.1f}s]")
+    return res
 
 
 def _run_incremental_cli(graph, src, dst, n, k, partitioner, seed, compare,
@@ -434,6 +486,10 @@ def main():
     ap.add_argument("--refine-rounds", type=int, default=None,
                     help="refinement budget in Stackelberg rounds "
                          "(s5p; 0 disables)")
+    ap.add_argument("--resize-k", type=_positive_int, default=None,
+                    help="elastic resize: cold-partition at --k, then "
+                         "reshard the warm bundle onto this partition "
+                         "count with bounded migration (s5p)")
     ap.add_argument("--xi-refresh-threshold", type=float, default=None,
                     help="relative ξ/κ drift past which a warm chain "
                          "reports needs_cold_restart (s5p; default from "
@@ -453,7 +509,8 @@ def main():
         delete=args.delete, drift_threshold=args.drift_threshold,
         refine_rounds=args.refine_rounds,
         xi_refresh_threshold=args.xi_refresh_threshold,
-        window_edges=args.window_edges, window_step=args.window_step)
+        window_edges=args.window_edges, window_step=args.window_step,
+        resize_k=args.resize_k)
 
 
 if __name__ == "__main__":

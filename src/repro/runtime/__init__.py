@@ -1,3 +1,3 @@
-from .fault import FaultTolerantLoop, FaultInjector  # noqa: F401
+from .fault import FaultTolerantLoop, FaultInjector, LaneFaultInjector  # noqa: F401
 from .straggler import StragglerMonitor  # noqa: F401
-from .elastic import ElasticController  # noqa: F401
+from .elastic import ElasticController, ElasticPartition  # noqa: F401

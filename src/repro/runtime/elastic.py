@@ -3,10 +3,10 @@
 The elastic flow on resize (node failure or capacity change):
   1. quiesce + checkpoint (host arrays — mesh-independent by design);
   2. build the new mesh;
-  3. **re-partition with S5P** when the job is graph-shaped — the paper's
-     one-pass streaming property makes re-partitioning O(|E|) with O(|V|)
-     memory, which is why a streaming partitioner is the right choice for
-     elastic graph systems (DESIGN.md §5);
+  3. **re-partition with S5P** when the job is graph-shaped — warm, via
+     :func:`repro.elastic.reshard_bundle`: the paper's one-pass streaming
+     property makes even a cold re-partition O(|E|), but the bounded-
+     migration reshard moves only the displaced edges (DESIGN.md §5);
   4. reshard the checkpoint onto the new mesh and resume.
 """
 
@@ -15,25 +15,80 @@ from __future__ import annotations
 from typing import Callable
 
 import jax
+import numpy as np
 
 from ..checkpoint import CheckpointManager
 from ..checkpoint.reshard import reshard_state
 
-__all__ = ["ElasticController"]
+__all__ = ["ElasticController", "ElasticPartition"]
+
+
+class ElasticPartition:
+    """The graph-shaped job's routing state under elastic resizes.
+
+    Wraps an S5P warm bundle (plus the arrival-indexed stream prefix it
+    is keyed on) and re-homes it across partition counts with bounded
+    migration.  :meth:`resize` reshards in place and returns the
+    :class:`~repro.elastic.ReshardResult`; :attr:`parts` is the live
+    arrival-indexed assignment at the current k.
+    """
+
+    def __init__(self, bundle: dict, config, full_src, full_dst):
+        self.bundle = bundle
+        self.config = config
+        self.full_src = np.asarray(full_src, np.int32)
+        self.full_dst = np.asarray(full_dst, np.int32)
+
+    @property
+    def k(self) -> int:
+        return int(self.config.k)
+
+    @property
+    def parts(self) -> np.ndarray:
+        from ..incremental.pipeline import _scatter_parts, ensure_slot_index
+
+        b = ensure_slot_index(self.bundle)
+        parts = np.where(np.asarray(b["alive"], bool),
+                         np.asarray(b["parts"], np.int32), -1)
+        return _scatter_parts(parts.astype(np.int32),
+                              np.asarray(b["arrival"], np.int64),
+                              int(b["stream_pos"]))
+
+    def resize(self, k_new: int):
+        from ..elastic import reshard_bundle
+
+        self.bundle, self.config, res = reshard_bundle(
+            self.bundle, self.config, k_new, self.full_src, self.full_dst)
+        return res
 
 
 class ElasticController:
+    """Checkpoint → new mesh → re-partition → reshard → resume.
+
+    ``partition`` (an :class:`ElasticPartition`) takes precedence over the
+    legacy ``repartition`` hook: the resize re-homes the existing bundle
+    with bounded migration instead of partitioning the graph cold.
+    """
+
     def __init__(self, manager: CheckpointManager,
                  make_mesh: Callable[[int], object],
                  make_shardings: Callable[[object], object] | None = None,
-                 repartition: Callable[[int], object] | None = None):
+                 repartition: Callable[[int], object] | None = None,
+                 partition: ElasticPartition | None = None):
         self.manager = manager
         self.make_mesh = make_mesh
         self.make_shardings = make_shardings
         self.repartition = repartition
+        self.partition = partition
 
     def resize(self, state, step: int, new_size: int):
-        """Checkpoint → new mesh → (optional S5P re-partition) → reshard."""
+        """Returns ``(new_state, mesh, parts, step)``.
+
+        ``parts`` is the warm reshard's
+        :class:`~repro.elastic.ReshardResult` when a ``partition`` is
+        attached, the ``repartition`` hook's return value otherwise
+        (``None`` with neither).
+        """
         self.manager.save(step, state)
         self.manager.wait()
         mesh = self.make_mesh(new_size)
@@ -41,5 +96,8 @@ class ElasticController:
         shardings = self.make_shardings(mesh) if self.make_shardings else None
         new_state = (reshard_state(host_state, shardings)
                      if shardings is not None else jax.device_put(host_state))
-        parts = self.repartition(new_size) if self.repartition else None
+        if self.partition is not None:
+            parts = self.partition.resize(new_size)
+        else:
+            parts = self.repartition(new_size) if self.repartition else None
         return new_state, mesh, parts, step

@@ -8,6 +8,9 @@ state (tests verify exact-resume equality).
 ``FaultInjector`` deterministically raises at configured steps — used by
 tests and the chaos example to prove the recovery path, the same way the
 paper uses PUMBA to inject network faults into PowerGraph (§6.6).
+``LaneFaultInjector`` is its parallel-ingest sibling: it kills a named
+ingest lane at a named chunk, which ``run_parallel(on_lane_failure=
+"replay")`` must survive bit-identically.
 """
 
 from __future__ import annotations
@@ -17,12 +20,13 @@ import time
 from typing import Any, Callable, Iterable
 
 import jax
+import numpy as np
 
 from ..checkpoint import CheckpointManager
 
 log = logging.getLogger(__name__)
 
-__all__ = ["FaultInjector", "FaultTolerantLoop"]
+__all__ = ["FaultInjector", "LaneFaultInjector", "FaultTolerantLoop"]
 
 
 class FaultInjector:
@@ -37,18 +41,46 @@ class FaultInjector:
             raise RuntimeError(f"injected failure at step {step}")
 
 
+class LaneFaultInjector:
+    """Kill parallel-ingest lanes at named (lane, chunk) points (once each).
+
+    Plugged into :func:`repro.streaming.run_parallel` via
+    ``lane_injector=`` — the raise lands inside the lane's fold, mid-
+    super-chunk, which is exactly the window where a worker death loses
+    uncommitted carry state.
+    """
+
+    def __init__(self, fail_at: Iterable[tuple[int, int]] = ()):
+        self.fail_at = {(int(lane), int(chunk)) for lane, chunk in fail_at}
+        self.fired: list[tuple[int, int]] = []
+
+    def check(self, lane: int, chunk_id: int) -> None:
+        key = (int(lane), int(chunk_id))
+        if key in self.fail_at:
+            self.fail_at.discard(key)
+            self.fired.append(key)
+            raise RuntimeError(
+                f"injected lane {lane} failure at chunk {chunk_id}")
+
+
 class FaultTolerantLoop:
     """Run train_step with periodic checkpoints and automatic restart.
 
     step_fn(state, batch) → (state, metrics); data_fn(step) → batch must be
     step-addressable (deterministic replay from any step — our pipelines
     fold the step into the PRNG key, so resume is bitwise).
+
+    ``shard_fn(step) → shard`` attributes each step's wall time to a lane
+    for the :class:`~repro.runtime.straggler.StragglerMonitor` (data-
+    parallel loops typically map ``step % n_shards``); without it every
+    step is charged to shard 0 and per-lane detection is off.
     """
 
     def __init__(self, step_fn: Callable, data_fn: Callable[[int], Any],
                  manager: CheckpointManager, ckpt_every: int = 50,
                  max_restarts: int = 8, injector: FaultInjector | None = None,
-                 straggler_monitor=None):
+                 straggler_monitor=None,
+                 shard_fn: Callable[[int], int] | None = None):
         self.step_fn = step_fn
         self.data_fn = data_fn
         self.manager = manager
@@ -56,9 +88,14 @@ class FaultTolerantLoop:
         self.max_restarts = max_restarts
         self.injector = injector
         self.straggler_monitor = straggler_monitor
+        self.shard_fn = shard_fn
         self.restarts = 0
 
     def run(self, state, n_steps: int, start_step: int = 0):
+        # snapshot the entry state: a failure *before the first
+        # checkpoint* must replay from scratch — restarting with the
+        # crashed run's mutated state would silently double-apply steps
+        init_state = jax.tree.map(np.copy, jax.device_get(state))
         step = start_step
         metrics = {}
         while step < n_steps:
@@ -71,7 +108,10 @@ class FaultTolerantLoop:
                     state, metrics = self.step_fn(state, batch)
                     jax.block_until_ready(metrics)
                     if self.straggler_monitor is not None:
-                        self.straggler_monitor.record(step, time.perf_counter() - t0)
+                        shard = (self.shard_fn(step)
+                                 if self.shard_fn is not None else 0)
+                        self.straggler_monitor.record(
+                            step, time.perf_counter() - t0, shard=shard)
                     step += 1
                     if step % self.ckpt_every == 0:
                         self.manager.save(step, state)
@@ -83,7 +123,9 @@ class FaultTolerantLoop:
                 try:
                     state, step = self.manager.restore(like=state)
                 except FileNotFoundError:
-                    step = start_step  # no checkpoint yet: restart from scratch
+                    # no checkpoint yet: restart from the *entry* state
+                    state = jax.device_put(init_state)
+                    step = start_step
         self.manager.save(step, state)
         self.manager.wait()
         return state, step, metrics

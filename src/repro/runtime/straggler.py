@@ -5,7 +5,11 @@ fleet median is flagged.  Mitigation hooks:
 
 - **data rebalance**: hand back a fraction of the straggler's stream range
   (for the S5P partitioner this is a *local* fix — Algorithm 3's load
-  vector caps the receiving partitions, so quality bounds survive);
+  vector caps the receiving partitions, so quality bounds survive).
+  :func:`repro.streaming.run_parallel` drives this live: pass it a
+  monitor and at each super-chunk boundary :meth:`rebalance_plan` moves a
+  tail cut of every straggler lane's remaining chunk range to the fastest
+  lane;
 - **checkpoint-and-exclude**: at persistent stragglers the elastic
   controller (elastic.py) reshapes the mesh without the slow host.
 """
@@ -26,12 +30,16 @@ class StragglerMonitor:
         self.ema = ema
         self.threshold = threshold
         self.times: dict[int, float] = defaultdict(float)
-        self.history: list[tuple[int, float]] = []
+        self.history: list[tuple[int, int, float]] = []  # (step, shard, dt)
 
     def record(self, step: int, dt: float, shard: int = 0) -> None:
+        shard = int(shard)
+        # auto-grow: callers that discover lanes dynamically (the parallel
+        # ingest path) shouldn't have to pre-size the fleet
+        self.n_shards = max(self.n_shards, shard + 1)
         prev = self.times[shard]
         self.times[shard] = dt if prev == 0 else self.ema * prev + (1 - self.ema) * dt
-        self.history.append((step, dt))
+        self.history.append((step, shard, dt))
 
     def stragglers(self) -> list[int]:
         if not self.times:
@@ -53,6 +61,8 @@ class StragglerMonitor:
         fastest = min(range(self.n_shards), key=lambda s: self.times[s] or 1e9)
         out = list(shard_ranges)
         for s in slow:
+            if s == fastest or s >= len(out):
+                continue
             lo, hi = out[s]
             cut = int((hi - lo) * give_frac)
             out[s] = (lo, hi - cut)

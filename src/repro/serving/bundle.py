@@ -55,7 +55,7 @@ class PartitionBundle(NamedTuple):
     hi: int
     rf: float
     balance: float
-    origin: str  # "cold" | "delta" | "refine" | "cold-restart" | ...
+    origin: str  # "cold" | "delta" | "refine" | "cold-restart" | "resize" | ...
     fingerprint: int  # CRC over (version, src, dst, parts)
 
     @property

@@ -52,18 +52,27 @@ class ServingController:
         self._thread: threading.Thread | None = None
         self._stop = threading.Event()
         self.done = threading.Event()
+        # serializes every chain/bundle mutation: the background ingest
+        # thread's step() vs. request_cold_restart()/resize() from the
+        # control plane — out-of-band mutations land exactly at a step
+        # boundary, never inside one
+        self._lock = threading.RLock()
 
     # ------------------------------------------------------------ stepping
     def _origin_of(self, rec) -> str:
         if self._origin_hook is not None:
             return self._origin_hook(rec)
+        if self._version == 0:
+            # nothing published yet: whatever the step also did, this
+            # bundle IS the cold partition the window fill produced
+            return "cold"
         if getattr(rec, "cold_restarted", False):
             return "cold-restart"
         if getattr(rec, "rolled_back", False):
             return "rollback"
         if getattr(rec, "refined", False):
             return "refine"
-        return "cold" if self._version == 0 else "delta"
+        return "delta"
 
     def step(self):
         """One churn event → at most one published version.
@@ -72,26 +81,31 @@ class ServingController:
         exhausted.  Fill-phase events publish nothing (there is no
         partition to serve yet).
         """
-        rec = self.chain.step()
-        if rec is None:
-            self.done.set()
-            return None
-        self.history.append(rec)
-        if getattr(rec, "filling", False):
+        with self._lock:
+            rec = self.chain.step()
+            if rec is None:
+                self.done.set()
+                return None
+            self.history.append(rec)
+            if getattr(rec, "filling", False):
+                return rec
+            snap = self.chain.live_partition()
+            if snap is None:
+                return rec
+            src, dst, parts = snap
+            # provenance first: _origin_of keys "cold" off the version
+            # count *before* this publish (version 0 ⇒ nothing published
+            # yet ⇒ this very bundle is the cold one)
+            origin = self._origin_of(rec)
+            self._version += 1
+            self.registry.publish(build_bundle(
+                self._version, src, dst, parts,
+                self.chain.n_vertices, self.chain.config.k,
+                lo=self.chain.lo, hi=self.chain.hi,
+                rf=float(getattr(rec, "rf", 0.0)),
+                balance=float(getattr(rec, "balance", 0.0)),
+                origin=origin))
             return rec
-        snap = self.chain.live_partition()
-        if snap is None:
-            return rec
-        src, dst, parts = snap
-        self._version += 1
-        self.registry.publish(build_bundle(
-            self._version, src, dst, parts,
-            self.chain.n_vertices, self.chain.config.k,
-            lo=self.chain.lo, hi=self.chain.hi,
-            rf=float(getattr(rec, "rf", 0.0)),
-            balance=float(getattr(rec, "balance", 0.0)),
-            origin=self._origin_of(rec)))
-        return rec
 
     def run(self):
         """Drain the whole churn schedule synchronously."""
@@ -107,24 +121,55 @@ class ServingController:
         scratch in the controller (readers keep serving the pinned
         version meanwhile) and publish the result as an atomic swap at
         this step boundary.  Returns False while the window is filling.
+
+        Safe against a live background ingest thread: the controller
+        lock holds the restart until the in-flight ``step()`` commits, so
+        the chain's bundle and the version counter are never mutated
+        mid-step.
         """
         from ..incremental import s5p_cold_restart
 
-        chain = self.chain
-        if chain.bundle is None:
-            return False
-        bundle, res = s5p_cold_restart(chain.bundle, chain.config,
-                                       chain.seen_src, chain.seen_dst)
-        chain.bundle = bundle
-        snap = chain.live_partition()
-        src, dst, parts = snap
-        self._version += 1
-        self.registry.publish(build_bundle(
-            self._version, src, dst, parts,
-            chain.n_vertices, chain.config.k,
-            lo=chain.lo, hi=chain.hi, rf=res.rf, balance=res.balance,
-            origin="cold-restart"))
-        return True
+        with self._lock:
+            chain = self.chain
+            if chain.bundle is None:
+                return False
+            bundle, res = s5p_cold_restart(chain.bundle, chain.config,
+                                           chain.seen_src, chain.seen_dst)
+            chain.bundle = bundle
+            snap = chain.live_partition()
+            src, dst, parts = snap
+            self._version += 1
+            self.registry.publish(build_bundle(
+                self._version, src, dst, parts,
+                chain.n_vertices, chain.config.k,
+                lo=chain.lo, hi=chain.hi, rf=res.rf, balance=res.balance,
+                origin="cold-restart"))
+            return True
+
+    def resize(self, k_new: int):
+        """Elastic resize: reshard the live window onto ``k_new``
+        partitions and publish it as one more atomic bundle swap.
+
+        Delegates to the chain's ``resize`` (bounded-migration
+        :func:`repro.elastic.reshard_bundle` for the S5P chain); readers
+        keep serving the pinned k-era version until the swap lands, and
+        subsequent churn steps ingest — and publish — at k′.  Returns the
+        chain's resize result (``None`` while the window is filling: the
+        new k applies from the cold start instead).
+        """
+        with self._lock:
+            res = self.chain.resize(k_new)
+            if res is None:
+                return None
+            src, dst, parts = self.chain.live_partition()
+            self._version += 1
+            self.registry.publish(build_bundle(
+                self._version, src, dst, parts,
+                self.chain.n_vertices, self.chain.config.k,
+                lo=self.chain.lo, hi=self.chain.hi,
+                rf=float(res.rf), balance=float(res.balance),
+                origin="resize"))
+            return res
 
     # ---------------------------------------------------------- background
     def start(self, *, throttle_s: float = 0.0) -> None:

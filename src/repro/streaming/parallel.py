@@ -43,7 +43,9 @@ golden hashes) is reproduced bit-identically by construction.
 
 from __future__ import annotations
 
+import logging
 import threading
+import time
 from concurrent.futures import ThreadPoolExecutor
 
 import jax
@@ -65,7 +67,10 @@ _pvary = getattr(jax.lax, "pvary", lambda x, axes: x)
 
 __all__ = ["ParallelEdgeStream", "run_parallel"]
 
+log = logging.getLogger(__name__)
+
 SHARD_MODES = ("range", "round-robin")
+LANE_FAILURE_MODES = ("raise", "replay")
 
 
 class ParallelEdgeStream:
@@ -190,6 +195,12 @@ def run_parallel(
     backend: str | None = None,
     mesh=None,
     carry=None,
+    on_lane_failure: str = "raise",
+    lane_injector=None,
+    straggler=None,
+    carry_store=None,
+    carry_consumer: str | None = None,
+    carry_config=None,
 ):
     """Drive ``pc`` over ``stream`` with S-way parallel ingest.
 
@@ -202,17 +213,53 @@ def run_parallel(
     drive from a restored carry instead of ``pc.init()`` (the warm-start
     replay of ``repro.incremental``) — it becomes the first merge base,
     so SUM fields never double-count the restored state.
+
+    Fault/straggler hardening (threads backend):
+
+    - ``on_lane_failure="replay"`` — a lane whose fold raises mid-super-
+      chunk is detected at the merge barrier and its chunk range replayed
+      into a surviving worker, from the last committed merge base: lanes
+      only ever publish state *at* merge points, so the replay is
+      **bit-identical** to the unkilled drive.  With a ``carry_store``
+      (:class:`~repro.incremental.store.CarryStore`) the merge bases are
+      additionally checkpointed and the replay restores from disk — the
+      recovery path a real worker death (not just a raised exception)
+      needs.  ``"raise"`` (default) propagates the failure.
+    - ``lane_injector`` — duck-typed ``check(lane, chunk_id)`` called
+      before each chunk fold
+      (:class:`~repro.runtime.fault.LaneFaultInjector`).
+    - ``straggler`` — a :class:`~repro.runtime.straggler.StragglerMonitor`:
+      per-lane super-chunk times feed its EMAs, and its
+      ``rebalance_plan`` drives **live lane-range handoff** — a tail cut
+      of each straggler lane's remaining chunks moves to the fastest
+      lane at the next merge boundary.  Handoff regroups chunks between
+      merge points — equivalent to having dealt a different (equally
+      valid) lane assignment up front, so results drift within the same
+      staleness envelope as changing ``num_streams``; quality bounds
+      survive (the merge algebra is exact), bit-reproducibility of the
+      no-handoff drive does not.
     """
     if num_streams < 1:
         raise ValueError("num_streams must be >= 1")
     if super_chunk < 1:
         raise ValueError("super_chunk must be >= 1")
+    if on_lane_failure not in LANE_FAILURE_MODES:
+        raise ValueError(f"unknown on_lane_failure {on_lane_failure!r}; "
+                         f"one of {LANE_FAILURE_MODES}")
     if num_streams == 1 or stream.n_chunks <= 1:
         return run_carry(stream, pc, *extras, carry=carry)
 
     ps = ParallelEdgeStream(stream, num_streams, shard=shard)
     S = ps.num_streams
     backend = _resolve_backend(backend, S)
+    wants_fault_path = (lane_injector is not None or straggler is not None
+                        or carry_store is not None
+                        or on_lane_failure != "raise")
+    if wants_fault_path and backend != "threads":
+        raise ValueError(
+            "lane fault handling / straggler handoff / carry checkpoints "
+            f"run on the threads backend (host workers die independently); "
+            f"got backend={backend!r}")
     base = pc.init() if carry is None else carry
     parts_by_chunk: dict[int, jax.Array] = {}
 
@@ -271,24 +318,87 @@ def run_parallel(
         # accounting and staging buffers are not thread-safe, and staging
         # is a small fraction of a chunk's scan cost.
         stage_lock = threading.Lock()
+        # lanes are mutable here: straggler handoff re-deals remaining
+        # chunks between merge boundaries (the sharding plan's own lists
+        # stay pristine)
+        lanes = [list(lane) for lane in ps.lanes]
+        pos = [0] * S  # per-lane cursor into its (possibly re-dealt) list
+        edges_done = 0  # edges committed through merges (checkpoint key)
+        consumer = (carry_consumer if carry_consumer is not None
+                    else f"parallel:{type(pc).__name__}")
+        store_cfg = dict(carry_config or {})
+        store_cfg.setdefault("super_chunk", int(super_chunk))
+        store_cfg.setdefault("shard", shard)
 
-        def lane_fold(lane, r0, r1, start):
+        def lane_fold(lane_id, chunks, start, inject):
             local = start
-            for r in range(r0, min(r1, len(lane))):
-                cid = lane[r]
+            t0 = time.perf_counter()
+            for cid in chunks:
+                if inject is not None:
+                    inject.check(lane_id, cid)
                 with stage_lock:
                     ch = stream.chunk_at(cid, *extras)
                 local, parts = pc.step_chunk(
                     local, ch.src, ch.dst, jnp.int32(ch.n_valid), *ch.extras)
                 if parts is not None:
                     parts_by_chunk[cid] = parts[: ch.n_valid]
-            return local
+            return local, time.perf_counter() - t0
 
+        def save_base(carry_val):
+            if carry_store is not None:
+                carry_store.save(carry_val, consumer=consumer,
+                                 config=store_cfg, stream_pos=edges_done)
+
+        def restore_base():
+            if carry_store is None:
+                return base  # in-memory merge base == last commit point
+            restored, _ = carry_store.load(like=base, consumer=consumer,
+                                           config=store_cfg,
+                                           max_stream_pos=edges_done)
+            return restored
+
+        save_base(base)  # a lane can die before the first merge commits
+        sc_index = 0
         with ThreadPoolExecutor(max_workers=S) as ex:
-            for r0 in range(0, ps.n_rounds, super_chunk):
-                futs = [ex.submit(lane_fold, lane, r0, r0 + super_chunk, base)
-                        for lane in ps.lanes]
-                base = pc.merge([f.result() for f in futs], base=base)
+            while any(pos[s] < len(lanes[s]) for s in range(S)):
+                batches = [lanes[s][pos[s]:pos[s] + super_chunk]
+                           for s in range(S)]
+                futs = [ex.submit(lane_fold, s, batches[s], base,
+                                  lane_injector) for s in range(S)]
+                locals_: list = [None] * S
+                times = [0.0] * S
+                failed: list[int] = []
+                for s, f in enumerate(futs):
+                    try:
+                        locals_[s], times[s] = f.result()
+                    except Exception as e:  # noqa: BLE001 — lane death
+                        if on_lane_failure != "replay":
+                            raise
+                        log.warning("ingest lane %d died mid-super-chunk "
+                                    "(%s); replaying its range", s, e)
+                        failed.append(s)
+                for s in failed:
+                    # replay the dead lane's chunk range from the last
+                    # committed base into a surviving worker — the merge
+                    # below can't tell the difference (bit-identical)
+                    locals_[s], times[s] = ex.submit(
+                        lane_fold, s, batches[s], restore_base(),
+                        None).result()
+                base = pc.merge(locals_, base=base)
+                edges_done += sum(ps.chunk_n_valid(cid)
+                                  for b in batches for cid in b)
+                for s in range(S):
+                    pos[s] += len(batches[s])
+                save_base(base)
+                if straggler is not None:
+                    for s in range(S):
+                        if batches[s]:
+                            # per-chunk time: lane *speed*, not workload
+                            straggler.record(sc_index,
+                                             times[s] / len(batches[s]),
+                                             shard=s)
+                    _handoff_lanes(lanes, pos, straggler)
+                sc_index += 1
     else:
         raise ValueError(f"unknown backend {backend!r}")
 
@@ -299,6 +409,31 @@ def run_parallel(
             for cid in range(stream.n_chunks)]
     parts = outs[0] if len(outs) == 1 else jnp.concatenate(outs)
     return stream.scatter_back(parts), result
+
+
+def _handoff_lanes(lanes, pos, straggler):
+    """Live lane-range handoff at a merge boundary: ask the monitor's
+    :meth:`rebalance_plan` what tail cut each straggler lane should give
+    up, and physically move those chunk ids to the receiving lane's
+    queue.  Chunks already folded (before ``pos``) never move."""
+    ranges = [(pos[s], len(lanes[s])) for s in range(len(lanes))]
+    plan = straggler.rebalance_plan(ranges)
+    if plan == ranges:
+        return
+    moved: list[int] = []
+    receiver = None
+    for s, ((_, hi_old), (_, hi_new)) in enumerate(zip(ranges, plan)):
+        if hi_new < hi_old:
+            cut = hi_old - hi_new
+            moved.extend(lanes[s][len(lanes[s]) - cut:])
+            del lanes[s][len(lanes[s]) - cut:]
+        elif hi_new > hi_old:
+            receiver = s
+    if receiver is not None and moved:
+        # keep stream order within the receiving lane's tail
+        lanes[receiver].extend(sorted(moved))
+        log.info("straggler handoff: %d chunk(s) moved to lane %d",
+                 len(moved), receiver)
 
 
 def _make_super_step(pc, mesh, axis, R, base, n_ex):

@@ -14,6 +14,22 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 # ---------------------------------------------------------------------------
 
 
+@pytest.fixture(scope="module", autouse=True)
+def _drop_compiled_programs_between_modules():
+    """Compiled XLA executables otherwise accumulate for the whole session
+    (one process, ~450 tests, dozens of distinct (k, shape) game/scan
+    traces); on CPU jaxlib that growth has ended in a segfault inside
+    ``backend_compile`` late in the run.  Nearly all cache reuse happens
+    within a module, so dropping programs at module boundaries bounds the
+    growth at negligible recompile cost.  Session fixtures below memoize
+    *results* (numpy arrays), not traces, and are unaffected.
+    """
+    yield
+    import jax
+
+    jax.clear_caches()
+
+
 @pytest.fixture(scope="session")
 def parts_cache():
     """Memoized ``get(name, graph_seed, k=4, part_seed=0) -> np.ndarray``."""

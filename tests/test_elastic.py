@@ -1,16 +1,263 @@
-"""Elastic controller + label propagation on the GAS engine."""
+"""Elastic controller + k→k′ resharding + label propagation.
+
+The reshard layer (``repro.elastic``) is the tentpole under test here:
+
+- *bundle reshard* — grow keeps every placement that survives (bounded
+  migration), shrink displaces exactly the dead partitions' edges; both
+  land with a consistent load vector, in-range parts, and a k′-era κ so
+  the window chain keeps absorbing deltas;
+- *game migration cost* — ``move_cost=0`` is bitwise the plain masked
+  game (the goldens' guarantee extends to the new operands), and a large
+  cost freezes every cluster at home;
+- *scan-carry reshard* — greedy/HDRF carries grow with zero migration
+  and shrink through the exact retract algebra; grid is k-bound and
+  refuses;
+- *elastic controller* — a warm ``ElasticPartition`` resize rides the
+  checkpoint→mesh→reshard flow, state leaves bitwise intact.
+"""
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
 
 from repro.checkpoint import CheckpointManager
-from repro.core import S5PConfig, s5p_partition
+from repro.core import S5PConfig, replication_factor, s5p_partition
+from repro.core import game as _game
+from repro.elastic import ReshardResult, reshard_bundle, reshard_carry
 from repro.gas import build_gas_graph
 from repro.gas.engine import label_propagation
 from repro.graphs.generators import community_graph
+from repro.incremental import s5p_apply_delta, s5p_cold_bundle
+from repro.kernels.stream_scan import GreedyCarry, GridCarry, HdrfCarry
 from repro.optim import AdamWConfig, adamw_update, init_state
-from repro.runtime import ElasticController
+from repro.runtime import ElasticController, ElasticPartition
+from repro.streaming import EdgeStream, run_carry
+
+
+K = 8
+
+
+def _warm_bundle(seed=0, k=K):
+    src, dst, n = community_graph(800, n_communities=16, avg_degree=6,
+                                  p_intra=0.9, seed=seed)
+    cfg = S5PConfig(k=k, seed=seed, chunk_size=512)
+    _, bundle = s5p_cold_bundle(src, dst, n, cfg)
+    return src, dst, n, cfg, bundle
+
+
+def _check_invariants(bundle, res, src, dst, n):
+    """Reshard postconditions every path must satisfy."""
+    k = res.k_new
+    parts = np.asarray(bundle["parts"], np.int32)
+    alive = np.asarray(bundle["alive"], bool)
+    placed = alive & (parts >= 0)
+    assert parts[placed].max() < k
+    # the load vector is exactly the placed-parts histogram
+    hist = np.bincount(parts[placed], minlength=k)
+    np.testing.assert_array_equal(np.asarray(bundle["load"]), hist)
+    assert np.asarray(bundle["c2p"]).max() < k
+    assert res.rf == pytest.approx(float(replication_factor(
+        src[np.asarray(bundle["arrival"])[placed]],
+        dst[np.asarray(bundle["arrival"])[placed]],
+        parts[placed], n_vertices=n, k=k)))
+
+
+# ================================================== bundle reshard
+def test_reshard_grow_bounded_migration():
+    src, dst, n, cfg, bundle = _warm_bundle()
+    old_parts = np.asarray(bundle["parts"], np.int32).copy()
+    old_c2p = np.asarray(bundle["c2p"], np.int32).copy()
+    b2, cfg2, res = reshard_bundle(bundle, cfg, 12, src, dst)
+    assert cfg2.k == 12 and res.k_old == K and res.k_new == 12
+    _check_invariants(b2, res, src, dst, n)
+    assert res.n_displaced == 0  # grow never displaces
+    assert res.migrated_fraction < 1.0  # bounded: survivors stayed
+    # kept-edge stability: an edge whose clusters the game left home
+    # keeps its exact placement
+    moved_c = np.asarray(b2["c2p"], np.int32) != old_c2p
+    cu = np.asarray(b2["edge_cu"], np.int32)
+    cv = np.asarray(b2["edge_cv"], np.int32)
+    stable = (~moved_c[np.maximum(cu, 0)]) & (~moved_c[np.maximum(cv, 0)])
+    parts = np.asarray(b2["parts"], np.int32)
+    np.testing.assert_array_equal(parts[stable], old_parts[stable])
+    # input bundle untouched (reshard copies)
+    np.testing.assert_array_equal(
+        np.asarray(bundle["parts"], np.int32), old_parts)
+
+
+def test_reshard_shrink_displaces_dead_partitions():
+    src, dst, n, cfg, bundle = _warm_bundle(1)
+    old_parts = np.asarray(bundle["parts"], np.int32).copy()
+    b2, cfg2, res = reshard_bundle(bundle, cfg, 4, src, dst)
+    _check_invariants(b2, res, src, dst, n)
+    alive = np.asarray(bundle["alive"], bool)
+    want_displaced = int(np.count_nonzero(
+        alive & (old_parts >= 4)))
+    assert res.n_displaced == want_displaced > 0
+    assert res.migrated_edges >= res.n_displaced  # displaced must move
+    assert res.migrated_fraction < 1.0
+
+
+def test_reshard_noop_and_validation():
+    src, dst, n, cfg, bundle = _warm_bundle(2)
+    b2, cfg2, res = reshard_bundle(bundle, cfg, K, src, dst)
+    assert res.migrated_edges == 0 and res.game_rounds == 0
+    np.testing.assert_array_equal(np.asarray(b2["parts"]),
+                                  np.asarray(bundle["parts"]))
+    with pytest.raises(ValueError, match="k_new"):
+        reshard_bundle(bundle, cfg, 0, src, dst)
+
+
+def test_resharded_bundle_keeps_absorbing_deltas():
+    """The k′ bundle drops back into the delta pipeline: κ was re-derived
+    at k′ so the advisory must not trip from the resize alone, and the
+    fold itself places every new edge in range."""
+    src, dst, n = community_graph(800, n_communities=16, avg_degree=6,
+                                  p_intra=0.9, seed=3)
+    E0 = int(src.size * 0.95)  # small delta: drift comes only from |E|
+    cfg = S5PConfig(k=K, seed=0, chunk_size=512)
+    _, bundle = s5p_cold_bundle(src[:E0], dst[:E0], n, cfg)
+    b2, cfg2, _ = reshard_bundle(bundle, cfg, 12, src[:E0], dst[:E0])
+    b3, res = s5p_apply_delta(b2, cfg2, src, dst, E0)
+    assert not res.needs_cold_restart
+    assert np.all(res.parts[E0:] >= 0)
+    assert np.all(res.parts[E0:] < 12)
+
+
+def test_freeze_at_high_move_cost():
+    """move_cost_scale → ∞ pins every survivor: migration is exactly the
+    displaced set (zero on grow)."""
+    src, dst, n, cfg, bundle = _warm_bundle(4)
+    _, _, res = reshard_bundle(bundle, cfg, 12, src, dst,
+                               move_cost_scale=1e9)
+    assert res.migrated_edges == 0 and res.moved_clusters == 0
+
+
+# ================================================== game move_cost payoff
+def _game_fixture(seed=0):
+    src, dst, n, cfg, bundle = _warm_bundle(seed)
+    sizes = np.asarray(bundle["sizes"], np.float32)
+    inputs = _game.GameInputs(
+        sizes=jnp.asarray(sizes),
+        pair_a=jnp.asarray(bundle["pair_a"], jnp.int32),
+        pair_b=jnp.asarray(bundle["pair_b"], jnp.int32),
+        pair_w=jnp.asarray(bundle["pair_w"], jnp.float32),
+        n_head=0, k=K)
+    C = sizes.shape[0]
+    rng = np.random.default_rng(seed)
+    assign0 = rng.integers(0, K, C).astype(np.int32)
+    leader = np.asarray(bundle["comb_is_head"], bool)
+    return inputs, C, assign0, leader, sizes
+
+
+def test_game_zero_move_cost_bitwise_noop():
+    """The migration payoff with all-zero costs is bitwise the plain
+    masked game — the pinned-golden guarantee extends across the new
+    operands."""
+    inputs, C, assign0, leader, sizes = _game_fixture()
+    kw = dict(batch_size=_game.default_batch_size(0, C), max_rounds=6,
+              assign0=assign0, seed=7, leader_mask=leader)
+    base = _game.run_game(inputs, C, **kw)
+    zeroed = _game.run_game(inputs, C, **kw,
+                            move_cost=np.zeros(C, np.float32),
+                            home=assign0)
+    np.testing.assert_array_equal(np.asarray(base.assignment),
+                                  np.asarray(zeroed.assignment))
+    assert base.rounds == zeroed.rounds
+
+
+def test_game_huge_move_cost_freezes_home():
+    inputs, C, assign0, leader, sizes = _game_fixture(1)
+    res = _game.run_game(
+        inputs, C, batch_size=_game.default_batch_size(0, C), max_rounds=6,
+        assign0=assign0, seed=7, leader_mask=leader,
+        move_cost=np.full(C, 1e9, np.float32), home=assign0)
+    np.testing.assert_array_equal(np.asarray(res.assignment), assign0)
+
+
+# ================================================== scan-carry reshard
+@pytest.mark.parametrize("name", ["greedy", "hdrf"])
+@pytest.mark.parametrize("k_new", [12, 4])
+def test_reshard_scan_carry(name, k_new):
+    src, dst, n = community_graph(600, n_communities=8, avg_degree=5,
+                                  seed=5)
+    make = (lambda k: GreedyCarry(n, k)) if name == "greedy" else \
+        (lambda k: HdrfCarry(n, k, 1.1))
+    st = EdgeStream(src, dst, n, chunk_size=256)
+    parts, carry = run_carry(st, make(K))
+    parts = np.asarray(parts)
+    new_carry, new_parts, res = reshard_carry(
+        make(k_new), k_new, src, dst, parts, carry=carry)
+    assert isinstance(res, ReshardResult)
+    assert new_parts.min() >= 0 and new_parts.max() < k_new
+    # carry load is exactly the new parts histogram
+    np.testing.assert_array_equal(
+        np.asarray(new_carry[0]), np.bincount(new_parts, minlength=k_new))
+    if k_new > K:  # grow: nothing moves at all
+        assert res.migrated_edges == 0
+        np.testing.assert_array_equal(new_parts, parts)
+    else:  # shrink: exactly the displaced set moved
+        assert res.n_displaced == int(np.count_nonzero(parts >= k_new))
+        moved = new_parts != parts
+        assert res.migrated_edges == int(np.count_nonzero(moved))
+        np.testing.assert_array_equal(moved, parts >= k_new)
+
+
+def test_reshard_grid_carry_refuses():
+    rng = np.random.default_rng(0)
+    n = 64
+    pc = GridCarry(4, rng.integers(0, 2, n).astype(np.int32),
+                   rng.integers(0, 2, n).astype(np.int32), 2)
+    with pytest.raises(ValueError, match="grid"):
+        reshard_carry(pc, 8, np.zeros(4, np.int32), np.ones(4, np.int32),
+                      np.zeros(4, np.int32), carry=pc.init())
+
+
+# ================================================== elastic controller
+def test_elastic_partition_warm_resize():
+    src, dst, n, cfg, bundle = _warm_bundle(6)
+    part = ElasticPartition(bundle, cfg, src, dst)
+    assert part.k == K
+    p0 = part.parts
+    assert p0.shape == (src.size,) and p0.max() < K
+    res = part.resize(12)
+    assert part.k == 12 and res.k_new == 12
+    p1 = part.parts
+    assert p1.max() < 12
+    assert np.count_nonzero(p1 != p0) == res.migrated_edges
+    # shrink back down through the same object
+    res2 = part.resize(4)
+    assert part.k == 4 and part.parts.max() < 4
+    assert res2.migrated_fraction < 1.0
+
+
+def test_elastic_controller_warm_resize_roundtrip(tmp_path):
+    """Satellite: the full elastic flow — checkpoint, mesh, warm
+    reshard, reshard_state — returns bitwise-identical leaves on the
+    host mesh and the warm ReshardResult."""
+    src, dst, n, cfg, bundle = _warm_bundle(7)
+    part = ElasticPartition(bundle, cfg, src, dst)
+    cfg_o = AdamWConfig(lr=0.1, weight_decay=0.0)
+    state = init_state({"w": jnp.arange(6.0), "b": jnp.ones((2, 3))})
+    for _ in range(2):
+        state = adamw_update(
+            state, {"w": jnp.ones(6), "b": jnp.ones((2, 3))}, cfg_o)
+    mesh = jax.make_mesh((1,), ("data",))
+    sharding = jax.sharding.NamedSharding(
+        mesh, jax.sharding.PartitionSpec())
+    controller = ElasticController(
+        CheckpointManager(tmp_path, keep=2, async_write=False),
+        make_mesh=lambda size: mesh,
+        make_shardings=lambda m: jax.tree.map(lambda _: sharding, state),
+        partition=part)
+    new_state, out_mesh, res, step = controller.resize(state, 5, 12)
+    assert step == 5 and out_mesh is mesh
+    assert isinstance(res, ReshardResult) and res.k_new == 12
+    assert part.k == 12
+    for a, b in zip(jax.tree.leaves(state), jax.tree.leaves(new_state)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+        assert b.sharding.is_equivalent_to(sharding, np.ndim(b))
 
 
 def test_elastic_resize_preserves_state(tmp_path):

@@ -379,6 +379,106 @@ def test_request_cold_restart_publishes_swap():
     assert rf0 > 0
 
 
+# ================================================ 4d. origin provenance
+def test_first_published_version_origin_is_cold():
+    """Regression: the version counter used to be bumped before the
+    origin was derived, so the very first bundle — the cold partition —
+    reported origin "delta"."""
+    src, dst, n = _small_graph(11)
+    E = src.size
+    cfg = S5PConfig(k=K, seed=0, chunk_size=max(E // 2, 256))
+    chain = S5PWindowChain(src, dst, n, cfg, E // 2, step_edges=E // 4)
+    reg = BundleRegistry()
+    controller = ServingController(reg, chain)
+    while reg.current is None:
+        assert controller.step() is not None
+    assert reg.current.version == 1
+    assert reg.current.origin == "cold"
+    # subsequent churn publishes are deltas again
+    controller.run()
+    origins = [b.origin for b in [reg.current]]
+    assert reg.current.version > 1 and reg.current.origin != "cold"
+
+
+# ================================================ 4e. restart/ingest race
+def test_cold_restart_races_background_ingest():
+    """Regression: ``request_cold_restart`` from the control plane while
+    the background ingest thread churns used to interleave with a
+    half-applied step — now both serialize on the controller lock, so
+    every published version is internally consistent and versions are
+    strictly monotonic."""
+    src, dst, n = _small_graph(12)
+    E = src.size
+    cfg = S5PConfig(k=K, seed=0, chunk_size=max(E // 4, 256))
+    chain = S5PWindowChain(src, dst, n, cfg, E // 4, step_edges=E // 16)
+    reg = BundleRegistry()
+    controller = ServingController(reg, chain)
+    seen: list[int] = []
+    errors: list[BaseException] = []
+
+    def restarter():
+        try:
+            while not controller.done.is_set():
+                controller.request_cold_restart()
+        except BaseException as e:  # noqa: BLE001
+            errors.append(e)
+
+    t = threading.Thread(target=restarter)
+    controller.start()
+    t.start()
+    controller.join(60)
+    t.join(60)
+    assert not errors, errors
+    assert controller.done.is_set()
+    # every version the registry holds is untorn and the final window is
+    # exactly what the chain serves
+    b = reg.current
+    b.check()
+    s, d, p = chain.live_partition()
+    assert b.n_edges == s.size
+    np.testing.assert_array_equal(b.parts, p)
+    assert np.all(p >= 0)
+    # restarts really interleaved with churn steps (both kinds published)
+    restart_seen = any(r.cold_restarted for r in controller.history) or \
+        controller.version > len([r for r in controller.history
+                                  if not getattr(r, "filling", False)])
+    assert restart_seen
+
+
+# ================================================ 4f. elastic resize swap
+def test_resize_publishes_swap_and_keeps_serving():
+    """``ServingController.resize`` lands the k→k′ reshard as one more
+    atomic swap (origin "resize") and the chain keeps absorbing churn —
+    and publishing — at k′."""
+    src, dst, n = _small_graph(13)
+    E = src.size
+    cfg = S5PConfig(k=K, seed=0, chunk_size=max(E // 3, 256))
+    chain = S5PWindowChain(src, dst, n, cfg, E // 3, step_edges=E // 6)
+    reg = BundleRegistry()
+    controller = ServingController(reg, chain)
+    assert controller.resize(K + 2) is None  # nothing live yet
+    while reg.current is None:
+        assert controller.step() is not None
+    v0 = reg.current_version
+    res = controller.resize(K + 2)
+    assert res is not None and res.k_new == K + 2
+    assert res.migrated_fraction < 1.0
+    assert reg.current_version == v0 + 1
+    assert reg.current.origin == "resize"
+    assert reg.current.k == K + 2
+    b = reg.current
+    b.check()
+    assert np.all(b.parts < K + 2)
+    # serving continues at k': subsequent churn publishes in range
+    server = GASServer(reg)
+    server.run(2)
+    assert controller.step() is not None
+    controller.run()
+    assert reg.current.k == K + 2
+    assert np.all(reg.current.parts < K + 2)
+    assert reg.current_version > v0 + 1
+
+
 # ================================================ 4c. sharded retraction
 @pytest.mark.parametrize("name", ["greedy", "hdrf", "grid"])
 def test_parallel_retraction_bit_parity(name):
