@@ -3,20 +3,33 @@
 On CPU the interpret-mode timing is NOT indicative of TPU performance —
 the point of these rows is the call-count/shape coverage and the oracle
 parity check; the TPU roofline for the same shapes comes from §Roofline.
+
+The megakernel section additionally persists a stable ``BENCH_kernels.json``
+(schema below): edges/s per mode × backend × chunk size for the oracle
+``lax.scan`` carry vs the one-dispatch-per-chunk Pallas megakernel, plus
+the dispatch accounting that is the CPU-side acceptance surface — one
+``pallas_call`` per chunk against the oracle's ``chunk_size`` sequential
+scan steps per chunk.
 """
 
 from __future__ import annotations
 
+import json
+from pathlib import Path
+
 import jax
 import jax.numpy as jnp
 
-from repro.graphs import rmat_graph
+from repro.graphs import powerlaw_graph, rmat_graph
+from repro.kernels import stream_scan as ss
 from repro.kernels.flash_attention import flash_attention_tpu
 from repro.kernels.stream_scan import hdrf_chunk, hdrf_init, stream_scan_tpu
 from repro.models.attention import flash_attention
-from repro.streaming import EdgeStream, run_scan, run_scan_batched
+from repro.streaming import EdgeStream, run_carry, run_scan, run_scan_batched
 
 from .common import emit, timed
+
+BENCH_JSON = "BENCH_kernels.json"
 
 
 def run_stream_scan(quick: bool = True):
@@ -69,6 +82,153 @@ def run_stream_scan(quick: bool = True):
     emit(f"kernels/stream_scan_pallas/{ek}", usk, note)
 
 
+def _mk_carry(mode, n, k, use_kernel):
+    if mode == "greedy":
+        return ss.GreedyCarry(n, k, use_kernel=use_kernel)
+    return ss.HdrfCarry(n, k, use_kernel=use_kernel)
+
+
+def _bench_pair(stream, make_oracle, make_kernel, n_edges):
+    """Time oracle vs megakernel over one stream; returns a row fragment."""
+
+    def drive(pc):
+        parts, res = run_carry(stream, pc)
+        leaf = parts if parts is not None else jax.tree_util.tree_leaves(res)[0]
+        return leaf.block_until_ready()
+
+    pc_o = make_oracle()
+    drive(pc_o)  # warm the oracle compile cache
+    _, us_o = timed(drive, pc_o)
+
+    pc_k = make_kernel()
+    ss.reset_dispatch_count()
+    drive(pc_k)  # warm — and count dispatches on a clean counter
+    dispatches = ss.dispatch_count()
+    _, us_k = timed(drive, pc_k)
+    return {
+        "oracle_edges_per_s": round(n_edges / (us_o / 1e6)),
+        "kernel_edges_per_s": round(n_edges / (us_k / 1e6)),
+        "speedup_vs_oracle": round(us_o / us_k, 3),
+        "dispatches_per_run": dispatches,
+    }
+
+
+def run_megakernel(quick: bool = True):
+    """Megakernel study: one pallas_call per chunk (insert path) for the
+    scoring (greedy/HDRF), clustering (Alg. 1) and placement (Alg. 3)
+    folds vs their ``lax.scan`` oracles, across chunk sizes.  Persists
+    ``BENCH_kernels.json`` (stable schema v1)."""
+    backend = jax.default_backend()
+    compiled = backend == "tpu"
+    execution = "compiled" if compiled else "interpret"
+    k = 8
+    E = (1 << 16) if (compiled or not quick) else 4096
+    chunks = ([4096, 16384, 65536] if (compiled or not quick)
+              else [1024, 4096])
+    src, dst, n = powerlaw_graph(max(E // 8, 64), avg_degree=8.0, rho=2.2,
+                                 seed=0)
+    src, dst = src[:E], dst[:E]
+    E = int(src.shape[0])
+
+    rows = []
+    for chunk in chunks:
+        stream = EdgeStream(src, dst, n, chunk_size=chunk)
+        n_chunks = -(-E // chunk)
+        for mode in ("greedy", "hdrf"):
+            frag = _bench_pair(
+                stream,
+                lambda: _mk_carry(mode, n, k, False),
+                lambda: _mk_carry(mode, n, k, True),
+                E,
+            )
+            rows.append({
+                "kernel": "scoring", "mode": mode, "execution": execution,
+                "backend": backend, "chunk_size": chunk, "edges": E,
+                "chunks": n_chunks, "oracle_scan_steps_per_run": E,
+                "path": ss.select_path(n, k, chunk, mode=mode), **frag,
+            })
+            emit(f"kernels/mega_{mode}_{execution}/{chunk}",
+                 1e6 * E / max(frag["kernel_edges_per_s"], 1),
+                 f"edges_per_s={frag['kernel_edges_per_s']},"
+                 f"dispatches={frag['dispatches_per_run']}/{n_chunks}_chunks")
+
+        from repro.core.clustering import ClusterCarry, compute_degrees
+
+        deg = compute_degrees(src, dst, n)
+        ckw = dict(xi=max(int(2 * E / max(n, 1)), 1), kappa=max(E // k, 2))
+        frag = _bench_pair(
+            stream,
+            lambda: ClusterCarry(deg, n, use_kernel=False, **ckw),
+            lambda: ClusterCarry(deg, n, use_kernel=True, **ckw),
+            E,
+        )
+        rows.append({
+            "kernel": "cluster", "mode": "s5p", "execution": execution,
+            "backend": backend, "chunk_size": chunk, "edges": E,
+            "chunks": n_chunks, "oracle_scan_steps_per_run": E,
+            "path": ss.select_path(n, 1, chunk, consumer="cluster"), **frag,
+        })
+        emit(f"kernels/mega_cluster_{execution}/{chunk}",
+             1e6 * E / max(frag["kernel_edges_per_s"], 1),
+             f"edges_per_s={frag['kernel_edges_per_s']},"
+             f"dispatches={frag['dispatches_per_run']}/{n_chunks}_chunks")
+
+        from repro.core.postprocess import AssignCarry
+
+        import numpy as np
+
+        rng = np.random.default_rng(0)
+        n_cl = 64
+        c2p = jnp.asarray(rng.integers(0, k, n_cl), jnp.int32)
+        cu = jnp.asarray(rng.integers(0, n_cl, E), jnp.int32)
+        cv = jnp.asarray(rng.integers(0, n_cl, E), jnp.int32)
+        head = jnp.asarray(rng.integers(0, 2, E), jnp.int32)
+        L = max(E // k, 1)
+        astream = EdgeStream(src, dst, n, chunk_size=chunk)
+
+        def adrive(pc):
+            parts, _ = run_carry(astream, pc, head, cu, cv)
+            return parts.block_until_ready()
+
+        pc_o = AssignCarry(k, L, c2p, use_kernel=False)
+        adrive(pc_o)
+        _, us_o = timed(adrive, pc_o)
+        pc_k = AssignCarry(k, L, c2p, use_kernel=True)
+        ss.reset_dispatch_count()
+        adrive(pc_k)
+        dispatches = ss.dispatch_count()
+        _, us_k = timed(adrive, pc_k)
+        rows.append({
+            "kernel": "assign", "mode": "alg3", "execution": execution,
+            "backend": backend, "chunk_size": chunk, "edges": E,
+            "chunks": n_chunks, "oracle_scan_steps_per_run": E,
+            "path": ss.select_path(0, k, chunk, consumer="assign"),
+            "oracle_edges_per_s": round(E / (us_o / 1e6)),
+            "kernel_edges_per_s": round(E / (us_k / 1e6)),
+            "speedup_vs_oracle": round(us_o / us_k, 3),
+            "dispatches_per_run": dispatches,
+        })
+        emit(f"kernels/mega_assign_{execution}/{chunk}",
+             1e6 * E / max(round(E / (us_k / 1e6)), 1),
+             f"edges_per_s={round(E / (us_k / 1e6))},"
+             f"dispatches={dispatches}/{n_chunks}_chunks")
+
+    doc = {
+        "schema": 1,
+        "backend": backend,
+        "execution": execution,
+        "vmem_budget": ss.vmem_budget(),
+        "dispatch_contract": {
+            "kernel_dispatches_per_chunk": 1,
+            "oracle_scan_steps_per_chunk": "chunk_size",
+        },
+        "rows": rows,
+    }
+    Path(BENCH_JSON).write_text(json.dumps(doc, indent=2, sort_keys=True)
+                                + "\n")
+    emit("kernels/mega_json", 0.0, f"wrote={BENCH_JSON},rows={len(rows)}")
+
+
 def run(quick: bool = True):
     B, S, H, KV, hd = 1, 512, 8, 4, 64
     ks = jax.random.split(jax.random.PRNGKey(0), 3)
@@ -88,3 +248,4 @@ def run(quick: bool = True):
          "interpret-mode(correctness-only)")
 
     run_stream_scan(quick)
+    run_megakernel(quick)

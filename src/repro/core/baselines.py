@@ -123,11 +123,12 @@ def grid_partition_multi_seed(src, dst, n_vertices, k, seeds, *, stream=None,
 
 
 def greedy_partition(src, dst, n_vertices, k, seed=0, *, stream=None,
-                     chunk_size=None, use_kernel=None, num_streams=1,
-                     super_chunk=8):
+                     chunk_size=None, use_kernel=None, vmem_budget=None,
+                     num_streams=1, super_chunk=8):
     """PowerGraph Greedy: 4-case replica-aware assignment."""
     st = as_stream(src, dst, n_vertices, stream=stream, chunk_size=chunk_size)
-    pc = _scan.GreedyCarry(n_vertices, k, use_kernel=use_kernel)
+    pc = _scan.GreedyCarry(n_vertices, k, use_kernel=use_kernel,
+                           vmem_budget=vmem_budget)
     parts, _ = run_parallel(st, pc, num_streams=num_streams,
                             super_chunk=super_chunk)
     return parts
@@ -135,10 +136,11 @@ def greedy_partition(src, dst, n_vertices, k, seed=0, *, stream=None,
 
 def hdrf_partition(src, dst, n_vertices, k, seed=0, lam: float = 1.1, *,
                    stream=None, chunk_size=None, use_kernel=None,
-                   num_streams=1, super_chunk=8):
+                   vmem_budget=None, num_streams=1, super_chunk=8):
     """High-Degree Replicated First (partial-degree variant, as published)."""
     st = as_stream(src, dst, n_vertices, stream=stream, chunk_size=chunk_size)
-    pc = _scan.HdrfCarry(n_vertices, k, lam, use_kernel=use_kernel)
+    pc = _scan.HdrfCarry(n_vertices, k, lam, use_kernel=use_kernel,
+                         vmem_budget=vmem_budget)
     parts, _ = run_parallel(st, pc, num_streams=num_streams,
                             super_chunk=super_chunk)
     return parts

@@ -368,17 +368,36 @@ class ClusterCarry(PartitionerCarry):
     merge_ops = (SUM, SUM, SUM, SUM, SUM, SUM, SUM, COUNTED, COUNTED, SUM)
 
     def __init__(self, degrees: jax.Array, n_vertices: int, *, xi: int,
-                 kappa: int, global_tail: bool = False):
+                 kappa: int, global_tail: bool = False,
+                 use_kernel: bool | None = None,
+                 vmem_budget: int | None = None):
         self.degrees = degrees
         self.n_vertices = int(n_vertices)
         self.xi = int(xi)
         self.kappa = int(kappa)
         self.global_tail = bool(global_tail)
+        if use_kernel is None:
+            use_kernel = jax.default_backend() == "tpu"
+        self._use_kernel = bool(use_kernel)
+        self._vmem_budget = vmem_budget
 
     def init(self) -> ClusterState:
         return init_state(self.n_vertices)
 
     def step_chunk(self, carry, src, dst, n_valid, *extras):
+        if self._use_kernel:
+            # lazy import: core.baselines imports the kernels package at
+            # module level, so the reverse edge must stay function-local
+            from ..kernels import stream_scan as _scan
+
+            path = _scan.select_path(
+                self.n_vertices, 1, src.shape[0], consumer="cluster",
+                budget=self._vmem_budget)
+            if path == "fused":
+                leaves = _scan.cluster_scan(
+                    tuple(carry), src, dst, self.degrees, xi=self.xi,
+                    kappa=self.kappa, global_tail=self.global_tail)
+                return ClusterState(*leaves), None
         return cluster_chunk(
             carry, src, dst, self.degrees, xi=self.xi, kappa=self.kappa,
             global_tail=self.global_tail,
@@ -438,6 +457,8 @@ def cluster_stream(
     stream=None,
     num_streams: int = 1,
     super_chunk: int = 8,
+    use_kernel: bool | None = None,
+    vmem_budget: int | None = None,
 ) -> ClusterState:
     """Run Algorithm 1 over the whole stream in fixed-size device chunks.
 
@@ -463,7 +484,8 @@ def cluster_stream(
     else:
         degrees = compute_degrees_stream(stream)
     pc = ClusterCarry(degrees, stream.n_vertices, xi=xi, kappa=kappa,
-                      global_tail=global_tail)
+                      global_tail=global_tail, use_kernel=use_kernel,
+                      vmem_budget=vmem_budget)
     _, state = run_parallel(stream, pc, num_streams=num_streams,
                             super_chunk=super_chunk)
     return state

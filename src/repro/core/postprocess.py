@@ -73,21 +73,46 @@ class AssignCarry(PartitionerCarry):
     supports_retract = True
     retract_exact = True
 
-    def __init__(self, k: int, max_load: int, c2p: jax.Array):
+    def __init__(self, k: int, max_load: int, c2p: jax.Array, *,
+                 use_kernel: bool | None = None,
+                 vmem_budget: int | None = None):
         self.k = int(k)
         self.max_load = jnp.int32(max_load)
         self.c2p = c2p
+        if use_kernel is None:
+            use_kernel = jax.default_backend() == "tpu"
+        self._use_kernel = bool(use_kernel)
+        self._vmem_budget = vmem_budget
 
     def init(self) -> jax.Array:
         return jnp.zeros((self.k,), jnp.int32)
 
     def step_chunk(self, carry, src, dst, n_valid, *extras):
         h, a, b = extras
+        if self._use_kernel:
+            # lazy import (core.baselines ↔ kernels layering, see clustering)
+            from ..kernels import stream_scan as _scan
+
+            _scan.select_path(0, self.k, src.shape[0], consumer="assign",
+                              budget=self._vmem_budget)  # path logging
+            parts, load = _scan.assign_scan(
+                carry, src, dst, h, self.c2p[a], self.c2p[b],
+                max_load=self.max_load)
+            return load, parts
         load, parts = _assign_chunk(carry, self.max_load, src, dst, h, a, b,
                                     self.c2p, k=self.k)
         return load, parts
 
     def retract_chunk(self, carry, src, dst, n_valid, parts, *extras):
+        if self._use_kernel:
+            from ..kernels import stream_scan as _scan
+
+            zeros = jnp.zeros_like(src)
+            _, load = _scan.assign_scan(
+                carry, src, dst, zeros, zeros, zeros,
+                max_load=self.max_load, sign=-1, parts=parts,
+                n_valid=n_valid)
+            return load
         return _retract_load(carry, src, dst, n_valid, parts)
 
 
@@ -114,6 +139,8 @@ def assign_edges_stream(
     stream=None,
     num_streams: int = 1,
     super_chunk: int = 8,
+    use_kernel: bool | None = None,
+    vmem_budget: int | None = None,
 ):
     """Algorithm 3 over the full stream.  Returns (parts (E,), load (k,)).
 
@@ -126,8 +153,10 @@ def assign_edges_stream(
     from ..streaming import as_stream, run_parallel
 
     stream = as_stream(src, dst, stream=stream, chunk_size=chunk_size)
+    pc = AssignCarry(k, max_load, c2p, use_kernel=use_kernel,
+                     vmem_budget=vmem_budget)
     parts, load = run_parallel(
-        stream, AssignCarry(k, max_load, c2p), is_head_edge, cu, cv,
+        stream, pc, is_head_edge, cu, cv,
         num_streams=num_streams, super_chunk=super_chunk)
     return parts, load
 

@@ -72,6 +72,11 @@ class S5PConfig:
     # values a cold run over the live graph would choose, past which the
     # warm chain raises needs_cold_restart (advisory — see drift.py)
     xi_refresh_threshold: float = 0.5
+    # megakernel dispatch: None = auto (fused Pallas path on TPU, oracle
+    # scan elsewhere); vmem_budget overrides the fused/tiled/oracle ladder
+    # gate (falls back to REPRO_VMEM_BUDGET env, then 8 MiB)
+    use_kernel: bool | None = None
+    vmem_budget: int | None = None
 
 
 @dataclasses.dataclass
@@ -224,6 +229,7 @@ def s5p_partition(src, dst, n_vertices: int, config: S5PConfig,
         src, dst, n_vertices, xi=xi, kappa=kappa,
         global_tail=config.bounded, stream=stream,
         num_streams=config.num_streams, super_chunk=config.super_chunk,
+        use_kernel=config.use_kernel, vmem_budget=config.vmem_budget,
     )
     res = _cl.compact_clusters(state, degrees, xi)
     timings["clustering"] = time.perf_counter() - t0
@@ -265,6 +271,7 @@ def s5p_partition(src, dst, n_vertices: int, config: S5PConfig,
         src, dst, is_head, jnp.maximum(cu, 0), jnp.maximum(cv, 0),
         game.assignment, k, max_load, stream=stream,
         num_streams=config.num_streams, super_chunk=config.super_chunk,
+        use_kernel=config.use_kernel, vmem_budget=config.vmem_budget,
     )
     timings["postprocess"] = time.perf_counter() - t0
 

@@ -1,18 +1,37 @@
-"""Fused streaming scoring-scan kernel (replica bitmap + score + load).
+"""Fused streaming megakernels (scoring scan, Alg. 1 fold, Alg. 3 place).
 
-kernel.py — the Pallas kernel; ops.py — engine-facing dispatch with CPU
-fallback; ref.py — the seed ``lax.scan`` oracles (bit-identical contract).
+kernel.py — the blocked-grid Pallas megakernels (one dispatch per chunk,
+insert and retract via a ``sign`` operand); ops.py — the fused → tiled →
+oracle degradation ladder plus the engine-facing carries; ref.py — the
+seed ``lax.scan`` oracles (bit-identical contract).
 """
 
-from .kernel import stream_scan_tpu  # noqa: F401
+from .kernel import (  # noqa: F401
+    DEFAULT_BLOCK,
+    assign_scan,
+    cluster_scan,
+    dispatch_count,
+    reset_dispatch_count,
+    scoring_scan,
+    stream_scan_tpu,
+)
 from .ops import (  # noqa: F401
+    DEFAULT_VMEM_BUDGET,
+    VMEM_BUDGET_ENV,
     GreedyCarry,
     GridCarry,
     HdrfCarry,
+    cluster_state_bytes,
     kernel_fits,
     make_chunk_fn,
+    reset_path_log,
+    scoring_state_bytes,
+    select_path,
+    vmem_budget,
 )
 from .ref import (  # noqa: F401
+    assign_chunk_oracle,
+    cluster_chunk_oracle,
     greedy_chunk,
     greedy_init,
     greedy_retract_chunk,

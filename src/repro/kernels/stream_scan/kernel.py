@@ -1,23 +1,43 @@
-"""Pallas TPU kernel: fused streaming scoring scan (one chunk per call).
+"""Pallas TPU megakernel: the whole S5P chunk step in one dispatch.
 
-The hot step shared by the replica-aware streaming partitioners (Greedy,
-HDRF) is, per edge: gather both endpoints' replica-bitmap rows, score the
-k partitions, argmin/argmax-pick, then update the load vector and the two
-bitmap rows.  The ``lax.scan`` path materializes a fresh O(k|V|) carry per
-step for XLA to DCE; here the whole chunk runs as one kernel with the
-bitmap, load vector, and partial degrees resident in VMEM scratch-free
-output buffers and a single sequential ``fori_loop`` over the chunk's
-edges (the scan is inherently serial — the win is fusion, not
-parallelism: one kernel launch, zero carry re-materialization).
+One ``pallas_call`` per stream chunk covers the entire inner loop of the
+streaming partitioners — insert *and* retract.  Layout (the
+``PrefetchScalarGridSpec`` pipelining idiom):
 
-Layout: row vectors are (1, k) (lane axis last, TPU-friendly); the
-replica bitmap is (V, k) int32 0/1; partial degrees (V, 1).  The chunk's
-edge ids and the state must fit VMEM — ``ops.py`` gates on a budget and
-falls back to the oracle above it.
+- the grid is blocked over the chunk's edges (``block`` edges per step);
+  per-edge operands (recorded parts in, parts out) ride blocked
+  ``BlockSpec``s so the pipeline double-buffers their DMA, while the edge
+  endpoint ids are **scalar-prefetched** (SMEM) — the serial scan indexes
+  them with scalar loads ahead of the compute stream;
+- revisited state (the load vector, the **counted** replica table, HDRF
+  partial degrees) lives in VMEM blocks with constant index maps, so it
+  stays resident across grid steps and is written back once;
+- ``input_output_aliases`` donates every state input to its output, so a
+  dispatch updates state in place instead of copying it per call;
+- a ``sign`` operand (+1 insert / -1 retract) reuses the same kernel for
+  deletion: the counted replica table is an abelian group, so retraction
+  is the same scatter arithmetic with negated weights and the recorded
+  per-edge parts standing in for the scored pick.
 
-State is copied input→output once at kernel start, then updated in place;
-per-edge math mirrors ``ref.py`` expression-for-expression so interpret
-mode is bit-identical to the oracle (asserted by tests/test_streaming.py).
+Three kernels share the layout: the greedy/HDRF scoring scan
+(:func:`scoring_scan`), the Algorithm-1 clustering fold
+(:func:`cluster_scan`), and the Algorithm-3 placement pass
+(:func:`assign_scan`).  When the per-vertex state exceeds the VMEM
+budget, :func:`scoring_scan` switches to a **tiled** variant: the replica
+table (and partial degrees) stay HBM-resident (``memory_space=ANY``) and
+the kernel gathers/scatters single rows with ``pl.load`` / ``pl.store``
+— slower per edge, still one dispatch per chunk.  ``ops.py`` owns the
+fused → tiled → oracle degradation ladder.
+
+Per-edge math mirrors ``ref.py`` (and ``core.clustering`` /
+``core.postprocess``) expression-for-expression, so interpret mode is
+bit-identical to the oracles — asserted by tests/test_kernels.py and the
+pinned goldens in tests/test_streaming.py.
+
+Padding contract: wrappers pad the chunk to a multiple of ``block`` with
+``(0, 0)`` self-loops and ``parts = -1``; a ``limit`` scalar (insert: the
+passed chunk length, matching the oracles' unconditional handling of the
+chunk's own padding; retract: ``n_valid``) masks everything past it.
 """
 
 from __future__ import annotations
@@ -27,31 +47,146 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
 
-__all__ = ["stream_scan_tpu"]
+__all__ = [
+    "DEFAULT_BLOCK",
+    "assign_scan",
+    "cluster_scan",
+    "dispatch_count",
+    "reset_dispatch_count",
+    "scoring_scan",
+    "stream_scan_tpu",
+]
 
+DEFAULT_BLOCK = 512
 _INF_I32 = 2**30  # python int: jnp constants may not be captured by kernels
 
+# Dispatch accounting: one increment per pallas_call issued.  The bench
+# uses this to demonstrate the 1-dispatch-per-chunk contract (the oracle
+# re-materializes the carry per edge inside its scan).
+_DISPATCHES = 0
 
-def _scan_kernel(src_ref, dst_ref, load_in, rep_in, pd_in, lam_ref,
-                 parts_ref, load_ref, rep_ref, pd_ref, *, mode, eps, k):
-    load_ref[...] = load_in[...]
-    rep_ref[...] = rep_in[...]
-    pd_ref[...] = pd_in[...]
-    iota = jax.lax.broadcasted_iota(jnp.int32, (1, k), 1)
+
+def dispatch_count() -> int:
+    return _DISPATCHES
+
+
+def reset_dispatch_count() -> None:
+    global _DISPATCHES
+    _DISPATCHES = 0
+
+
+def _bump_dispatch() -> None:
+    global _DISPATCHES
+    _DISPATCHES += 1
+
+
+def _resolve(block, n, interpret):
+    """(block, pad, interpret) for an n-edge chunk."""
+    if interpret is None:
+        interpret = jax.default_backend() == "cpu"
+    blk = min(block or DEFAULT_BLOCK, max(n, 1))
+    return blk, (-n) % blk, interpret
+
+
+def _pad_edges(src, dst, parts, pad):
+    """Pad with (0, 0) self-loops / -1 parts — guaranteed no-ops."""
+    if pad:
+        src = jnp.pad(src, (0, pad))
+        dst = jnp.pad(dst, (0, pad))
+    if parts is None:
+        pin = jnp.full((src.shape[0],), -1, jnp.int32)
+    elif pad:
+        pin = jnp.pad(jnp.asarray(parts, jnp.int32), (0, pad),
+                      constant_values=-1)
+    else:
+        pin = jnp.asarray(parts, jnp.int32)
+    return src, dst, pin
+
+
+def _edge_spec(block):
+    return pl.BlockSpec((block,), lambda i, *_: (i,))
+
+
+def _const_spec(shape):
+    return pl.BlockSpec(shape, lambda i, *_: tuple(0 for _ in shape))
+
+
+_ANY_SPEC = pl.BlockSpec(memory_space=pltpu.ANY)
+
+
+# ===================================================================
+# greedy / HDRF scoring scan
+# ===================================================================
+
+
+def _scoring_kernel(meta_ref, src_ref, dst_ref, pin_ref, *refs,
+                    mode, eps, k, block, tiled):
+    if mode == "hdrf":
+        (load_in, _rep_in, _pd_in, lam_in,
+         parts_ref, load_ref, rep_ref, pd_ref) = refs
+    else:
+        load_in, _rep_in, parts_ref, load_ref, rep_ref = refs
+        pd_ref = lam_in = None
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _():
+        load_ref[...] = load_in[...]
+        if not tiled:
+            rep_ref[...] = _rep_in[...]
+            if mode == "hdrf":
+                pd_ref[...] = _pd_in[...]
+
+    limit = meta_ref[0]
+    sign = meta_ref[1]
+    iota = jax.lax.broadcasted_iota(jnp.int32, (1, k), 1)[0, :]
+
+    def row(ref, u):
+        if tiled:
+            return pl.load(ref, (pl.dslice(u, 1), slice(None)))[0, :]
+        return ref[u, :]
+
+    def row_add(ref, u, delta):
+        if tiled:
+            fresh = pl.load(ref, (pl.dslice(u, 1), slice(None)))[0, :]
+            pl.store(ref, (pl.dslice(u, 1), slice(None)),
+                     (fresh + delta)[None, :])
+        else:
+            ref[u, :] = ref[u, :] + delta
+
+    def scalar_add(ref, u, delta):
+        if tiled:
+            fresh = pl.load(ref, (pl.dslice(u, 1), slice(None)))[0, 0]
+            pl.store(ref, (pl.dslice(u, 1), slice(None)),
+                     (fresh + delta)[None, None])
+        else:
+            ref[u, 0] = ref[u, 0] + delta
+
+    def scalar_get(ref, u):
+        if tiled:
+            return pl.load(ref, (pl.dslice(u, 1), slice(None)))[0, 0]
+        return ref[u, 0]
 
     def body(e, _):
-        u = src_ref[e]
-        v = dst_ref[e]
-        valid = u != v
+        g = i * block + e
+        u = src_ref[g]
+        v = dst_ref[g]
+        real = g < limit
+        is_ins = sign > 0
+        p_ret = pin_ref[e]
         load = load_ref[0, :]
-        ru = rep_ref[u, :] > 0
-        rv = rep_ref[v, :] > 0
         if mode == "hdrf":
-            pd_ref[u, 0] = pd_ref[u, 0] + 1
-            pd_ref[v, 0] = pd_ref[v, 0] + 1
-            du = pd_ref[u, 0].astype(jnp.float32)
-            dv = pd_ref[v, 0].astype(jnp.float32)
+            # the oracle bumps pd unconditionally (self-loops and the
+            # chunk's own padding included) *before* scoring
+            pdw = jnp.where(real, sign, 0)
+            scalar_add(pd_ref, u, pdw)
+            scalar_add(pd_ref, v, pdw)
+            du = scalar_get(pd_ref, u).astype(jnp.float32)
+            dv = scalar_get(pd_ref, v).astype(jnp.float32)
+            ru = row(rep_ref, u) > 0
+            rv = row(rep_ref, v) > 0
             theta_u = du / (du + dv)
             theta_v = 1.0 - theta_u
             g_u = jnp.where(ru, 1.0 + (1.0 - theta_u), 0.0)
@@ -60,89 +195,435 @@ def _scan_kernel(src_ref, dst_ref, load_in, rep_in, pd_in, lam_ref,
             maxl = jnp.max(loadf)
             minl = jnp.min(loadf)
             bal = (maxl - loadf) / (eps + maxl - minl)
-            score = g_u + g_v + lam_ref[0, 0] * bal
-            pick = jnp.argmax(score).astype(jnp.int32)
-        else:  # greedy
+            score = g_u + g_v + lam_in[0, 0] * bal
+            pick_ins = jnp.argmax(score).astype(jnp.int32)
+        else:
+            ru = row(rep_ref, u) > 0
+            rv = row(rep_ref, v) > 0
             both = ru & rv
             either = ru | rv
             case1 = jnp.any(both)
             case2 = jnp.any(ru) & jnp.any(rv)
             case3 = jnp.any(either)
             mask = jnp.where(
-                case1, both, jnp.where(case2, either, jnp.where(case3, either, True))
-            )
+                case1, both,
+                jnp.where(case2, either, jnp.where(case3, either, True)))
             score = jnp.where(mask, load, _INF_I32)
-            pick = jnp.argmin(score).astype(jnp.int32)
-        hit = (iota[0, :] == pick) & valid
-        load_ref[0, :] = load + hit.astype(jnp.int32)
-        rep_ref[u, :] = jnp.maximum(rep_ref[u, :], hit.astype(jnp.int32))
-        rep_ref[v, :] = jnp.maximum(rep_ref[v, :], hit.astype(jnp.int32))
-        parts_ref[e] = jnp.where(valid, pick, -1)
+            pick_ins = jnp.argmin(score).astype(jnp.int32)
+        pick = jnp.where(is_ins, pick_ins, jnp.maximum(p_ret, 0))
+        placed = real & (u != v) & jnp.where(is_ins, True, p_ret >= 0)
+        w = jnp.where(placed, sign, 0)
+        hit = jnp.where(iota == pick, w, 0)
+        load_ref[0, :] = load + hit
+        row_add(rep_ref, u, hit)
+        row_add(rep_ref, v, hit)
+        parts_ref[e] = jnp.where(
+            is_ins, jnp.where(real & (u != v), pick_ins, -1), p_ret)
         return 0
 
-    jax.lax.fori_loop(0, src_ref.shape[0], body, 0)
+    jax.lax.fori_loop(0, block, body, 0)
 
 
-@functools.partial(jax.jit, static_argnames=("mode", "eps", "interpret"))
-def _stream_scan_call(src, dst, load, rep, pd, lam, *, mode, eps, interpret):
-    """Jitted pallas_call dispatch — one trace per (shape, mode), so chunked
-    streams reuse the compiled kernel instead of re-tracing per chunk."""
-    E = src.shape[0]
-    V, k = rep.shape
-    kernel = functools.partial(_scan_kernel, mode=mode, eps=eps, k=k)
+@functools.partial(jax.jit,
+                   static_argnames=("mode", "eps", "block", "tiled",
+                                    "interpret"))
+def _scoring_call(meta, src, dst, pin, *state, mode, eps, block, tiled,
+                  interpret):
+    Epad = src.shape[0]
+    V, k = state[1].shape
+    table = _ANY_SPEC if tiled else _const_spec((V, k))
+    col = _ANY_SPEC if tiled else _const_spec((V, 1))
+    in_specs = [_edge_spec(block), _const_spec((1, k)), table]
+    out_specs = [_edge_spec(block), _const_spec((1, k)), table]
+    out_shape = [
+        jax.ShapeDtypeStruct((Epad,), jnp.int32),
+        jax.ShapeDtypeStruct((1, k), jnp.int32),
+        jax.ShapeDtypeStruct((V, k), jnp.int32),
+    ]
+    # aliasing indices count the scalar-prefetch args (meta, src, dst)
+    aliases = {3: 0, 4: 1, 5: 2}
+    if mode == "hdrf":
+        in_specs += [col, _const_spec((1, 1))]
+        out_specs += [col]
+        out_shape += [jax.ShapeDtypeStruct((V, 1), jnp.int32)]
+        aliases[6] = 3
+    kernel = functools.partial(_scoring_kernel, mode=mode, eps=eps, k=k,
+                               block=block, tiled=tiled)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=3,
+        grid=(Epad // block,),
+        in_specs=in_specs,
+        out_specs=out_specs,
+    )
     return pl.pallas_call(
         kernel,
-        grid=(1,),
-        in_specs=[
-            pl.BlockSpec((E,), lambda t: (0,)),
-            pl.BlockSpec((E,), lambda t: (0,)),
-            pl.BlockSpec((1, k), lambda t: (0, 0)),
-            pl.BlockSpec((V, k), lambda t: (0, 0)),
-            pl.BlockSpec((V, 1), lambda t: (0, 0)),
-            pl.BlockSpec((1, 1), lambda t: (0, 0)),
-        ],
-        out_specs=[
-            pl.BlockSpec((E,), lambda t: (0,)),
-            pl.BlockSpec((1, k), lambda t: (0, 0)),
-            pl.BlockSpec((V, k), lambda t: (0, 0)),
-            pl.BlockSpec((V, 1), lambda t: (0, 0)),
-        ],
-        out_shape=[
-            jax.ShapeDtypeStruct((E,), jnp.int32),
-            jax.ShapeDtypeStruct((1, k), jnp.int32),
-            jax.ShapeDtypeStruct((V, k), jnp.int32),
-            jax.ShapeDtypeStruct((V, 1), jnp.int32),
-        ],
+        grid_spec=grid_spec,
+        out_shape=out_shape,
+        input_output_aliases=aliases,
         interpret=interpret,
-    )(
-        src,
-        dst,
-        load.reshape(1, k),
-        rep,
-        pd.reshape(V, 1),
-        lam.reshape(1, 1),
-    )
+    )(meta, src, dst, pin, *state)
+
+
+def scoring_scan(src, dst, load, rep, pd=None, lam=None, *, mode: str,
+                 sign: int = 1, parts=None, n_valid=None, eps: float = 1e-3,
+                 block: int | None = None, tiled: bool = False,
+                 interpret: bool | None = None):
+    """One fused greedy/HDRF chunk — insert (``sign=+1``) or retract
+    (``sign=-1``, with the recorded per-edge ``parts`` and ``n_valid``).
+
+    src/dst: (E,) int32; load: (k,) int32; rep: (V, k) int32 **counted**
+    replica table; pd: (V,) int32 partial degrees (HDRF only); lam:
+    scalar f32.  Returns ``(parts (E,), load, rep, pd)`` (``pd`` None for
+    greedy).  ``tiled=True`` keeps rep/pd HBM-resident (``ANY``) for
+    tables past the VMEM budget.
+    """
+    if mode not in ("greedy", "hdrf"):
+        raise ValueError(f"unknown mode {mode!r}")
+    if sign not in (1, -1):
+        raise ValueError(f"sign must be +1 or -1, got {sign!r}")
+    if sign < 0 and (n_valid is None or parts is None):
+        raise ValueError("retract needs n_valid and recorded parts")
+    src = jnp.asarray(src, jnp.int32)
+    dst = jnp.asarray(dst, jnp.int32)
+    load = jnp.asarray(load, jnp.int32)
+    rep = jnp.asarray(rep, jnp.int32)
+    E = src.shape[0]
+    V, k = rep.shape
+    if mode == "hdrf":
+        pd = jnp.asarray(pd, jnp.int32)
+    if E == 0:
+        return jnp.zeros((0,), jnp.int32), load, rep, pd
+    blk, pad, interpret = _resolve(block, E, interpret)
+    src, dst, pin = _pad_edges(src, dst, parts, pad)
+    limit = jnp.asarray(E if sign > 0 else n_valid, jnp.int32)
+    meta = jnp.stack([limit, jnp.int32(sign)])
+    state = (load.reshape(1, k), rep)
+    if mode == "hdrf":
+        state += (pd.reshape(V, 1), jnp.asarray(lam, jnp.float32).reshape(1, 1))
+    _bump_dispatch()
+    out = _scoring_call(meta, src, dst, pin, *state, mode=mode,
+                        eps=float(eps), block=blk, tiled=bool(tiled),
+                        interpret=interpret)
+    if mode == "hdrf":
+        parts_out, load2, rep2, pd2 = out
+        return parts_out[:E], load2[0], rep2, pd2[:, 0]
+    parts_out, load2, rep2 = out
+    return parts_out[:E], load2[0], rep2, None
 
 
 def stream_scan_tpu(src, dst, load, rep, pd, lam, *, mode: str,
                     eps: float = 1e-3, interpret: bool | None = None):
-    """Run one fused scoring-scan chunk.
+    """Back-compat single-chunk insert surface (seed API).
 
-    src/dst: (E,) int32; load: (k,) int32; rep: (V, k) int32 0/1 bitmap;
-    pd: (V,) int32 partial degrees (ignored for mode="greedy");
-    lam: scalar f32 (HDRF λ).  Returns (parts (E,), load, rep, pd).
+    Same contract as the original whole-array kernel, now running the
+    blocked megakernel; ``rep`` is the counted replica table and comes
+    back with exact counters (the seed version wrote a saturated 0/1
+    projection).  Returns ``(parts, load, rep, pd)``.
     """
-    if mode not in ("greedy", "hdrf"):
-        raise ValueError(f"unknown mode {mode!r}")
-    if interpret is None:
-        interpret = jax.default_backend() == "cpu"
-    parts, load2, rep2, pd2 = _stream_scan_call(
-        jnp.asarray(src, jnp.int32),
-        jnp.asarray(dst, jnp.int32),
-        jnp.asarray(load, jnp.int32),
-        jnp.asarray(rep, jnp.int32),
-        jnp.asarray(pd, jnp.int32),
-        jnp.asarray(lam, jnp.float32),
-        mode=mode, eps=eps, interpret=interpret,
+    parts, load2, rep2, pd2 = scoring_scan(
+        src, dst, load, rep, pd if mode == "hdrf" else None, lam,
+        mode=mode, sign=1, eps=eps, interpret=interpret)
+    if pd2 is None:
+        pd2 = jnp.asarray(pd, jnp.int32)
+    return parts, load2, rep2, pd2
+
+
+# ===================================================================
+# Algorithm 1 clustering fold
+# ===================================================================
+
+
+def _cluster_kernel(meta_ref, src_ref, dst_ref, deg_in, *refs,
+                    xi, kappa, global_tail, block):
+    state_in = refs[:10]
+    (v2ch, v2ct, volh, volt, ld, nexth, nextt, cnth, cntt, alloch) = refs[10:]
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _():
+        for dst_ref_, src_ref_ in zip(
+                (v2ch, v2ct, volh, volt, ld, nexth, nextt, cnth, cntt,
+                 alloch), state_in):
+            dst_ref_[...] = src_ref_[...]
+
+    limit = meta_ref[0]
+    sink = volh.shape[0] - 1  # masked-write sink slot (static)
+
+    def body(e, _):
+        g = i * block + e
+        u = src_ref[g]
+        v = dst_ref[g]
+        real = g < limit
+        du = deg_in[u, 0]
+        dv = deg_in[v, 0]
+        is_head = (du > xi) & (dv > xi)
+        valid = real & (u != v)
+
+        # ---------------- head branch (global-degree volumes) ----------
+        cu = v2ch[u, 0]
+        cv = v2ch[v, 0]
+        new_u = cu < 0
+        new_v = cv < 0
+        h_on = is_head & valid
+        nh = nexth[0, 0]
+        cu2 = jnp.where(new_u, nh, cu)
+        nh = nh + jnp.where(h_on & new_u, 1, 0)
+        cv2 = jnp.where(new_v, nh, cv)
+        nh = nh + jnp.where(h_on & new_v, 1, 0)
+        nexth[0, 0] = nh
+        idx = jnp.where(h_on & new_u, cu2, sink)
+        volh[idx, 0] = volh[idx, 0] + jnp.where(h_on & new_u, du, 0)
+        idx = jnp.where(h_on & new_v, cv2, sink)
+        volh[idx, 0] = volh[idx, 0] + jnp.where(h_on & new_v, dv, 0)
+        cnth[u, 0] = cnth[u, 0] + jnp.where(h_on, 1, 0)
+        cnth[v, 0] = cnth[v, 0] + jnp.where(h_on, 1, 0)
+        alloch[u, 0] = alloch[u, 0] + jnp.where(h_on & new_u, du, 0)
+        alloch[v, 0] = alloch[v, 0] + jnp.where(h_on & new_v, dv, 0)
+        v2ch[u, 0] = jnp.where(h_on, cu2, v2ch[u, 0])
+        v2ch[v, 0] = jnp.where(h_on, cv2, v2ch[v, 0])
+        vu = volh[cu2, 0]
+        vv = volh[cv2, 0]
+        both_small = (vu < kappa) & (vv < kappa) & (cu2 != cv2)
+        score_u = vu - du
+        score_v = vv - dv
+        u_is_i = score_u <= score_v  # tie → u (matches reference)
+        ci = jnp.where(u_is_i, cu2, cv2)
+        cj = jnp.where(u_is_i, cv2, cu2)
+        i_vtx = jnp.where(u_is_i, u, v)
+        di = jnp.where(u_is_i, du, dv)
+        can_mig = h_on & both_small & (volh[cj, 0] + di < kappa)
+        idx = jnp.where(can_mig, cj, sink)
+        volh[idx, 0] = volh[idx, 0] + jnp.where(can_mig, di, 0)
+        idx = jnp.where(can_mig, ci, sink)
+        volh[idx, 0] = volh[idx, 0] + jnp.where(can_mig, -di, 0)
+        v2ch[i_vtx, 0] = jnp.where(can_mig, cj, v2ch[i_vtx, 0])
+
+        # ---------------- tail branch (local-degree volumes) -----------
+        t_on = (~is_head) & valid
+        tu = v2ct[u, 0]
+        tv = v2ct[v, 0]
+        tnew_u = tu < 0
+        tnew_v = tv < 0
+        nt = nextt[0, 0]
+        tu2 = jnp.where(tnew_u, nt, tu)
+        nt = nt + jnp.where(t_on & tnew_u, 1, 0)
+        tv2 = jnp.where(tnew_v, nt, tv)
+        nt = nt + jnp.where(t_on & tnew_v, 1, 0)
+        nextt[0, 0] = nt
+        if global_tail:
+            idx = jnp.where(t_on & tnew_u, tu2, sink)
+            volt[idx, 0] = volt[idx, 0] + jnp.where(t_on & tnew_u, du, 0)
+            idx = jnp.where(t_on & tnew_v, tv2, sink)
+            volt[idx, 0] = volt[idx, 0] + jnp.where(t_on & tnew_v, dv, 0)
+        else:
+            idx = jnp.where(t_on, tu2, sink)
+            volt[idx, 0] = volt[idx, 0] + jnp.where(t_on, 1, 0)
+            idx = jnp.where(t_on, tv2, sink)
+            volt[idx, 0] = volt[idx, 0] + jnp.where(t_on, 1, 0)
+            ld[u, 0] = ld[u, 0] + jnp.where(t_on, 1, 0)
+            ld[v, 0] = ld[v, 0] + jnp.where(t_on, 1, 0)
+        v2ct[u, 0] = jnp.where(t_on, tu2, v2ct[u, 0])
+        v2ct[v, 0] = jnp.where(t_on, tv2, v2ct[v, 0])
+        cntt[u, 0] = cntt[u, 0] + jnp.where(t_on, 1, 0)
+        cntt[v, 0] = cntt[v, 0] + jnp.where(t_on, 1, 0)
+        tvu = volt[tu2, 0]
+        tvv = volt[tv2, 0]
+        t_small = (tvu < kappa) & (tvv < kappa) & (tu2 != tv2)
+        tu_is_i = tvu <= tvv
+        tci = jnp.where(tu_is_i, tu2, tv2)
+        tcj = jnp.where(tu_is_i, tv2, tu2)
+        ti = jnp.where(tu_is_i, u, v)
+        ldi = deg_in[ti, 0] if global_tail else ld[ti, 0]
+        t_mig = t_on & t_small
+        if global_tail:
+            t_mig = t_mig & (volt[tcj, 0] + ldi < kappa)
+        idx = jnp.where(t_mig, tcj, sink)
+        volt[idx, 0] = volt[idx, 0] + jnp.where(t_mig, ldi, 0)
+        idx = jnp.where(t_mig, tci, sink)
+        volt[idx, 0] = volt[idx, 0] + jnp.where(t_mig, -ldi, 0)
+        v2ct[ti, 0] = jnp.where(t_mig, tcj, v2ct[ti, 0])
+        return 0
+
+    jax.lax.fori_loop(0, block, body, 0)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("xi", "kappa", "global_tail", "block",
+                                    "interpret"))
+def _cluster_call(meta, src, dst, degrees, *state, xi, kappa, global_tail,
+                  block, interpret):
+    V = degrees.shape[0]
+    shapes = [(V, 1), (V, 1), (V + 1, 1), (V + 1, 1), (V, 1), (1, 1),
+              (1, 1), (V, 1), (V, 1), (V, 1)]
+    state_specs = [_const_spec(s) for s in shapes]
+    kernel = functools.partial(_cluster_kernel, xi=xi, kappa=kappa,
+                               global_tail=global_tail, block=block)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=3,
+        grid=(src.shape[0] // block,),
+        in_specs=[_const_spec((V, 1))] + state_specs,
+        out_specs=list(state_specs),
     )
-    return parts, load2[0], rep2, pd2[:, 0]
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=[jax.ShapeDtypeStruct(s, jnp.int32) for s in shapes],
+        input_output_aliases={4 + i: i for i in range(10)},
+        interpret=interpret,
+    )(meta, src, dst, degrees, *state)
+
+
+def cluster_scan(state, src, dst, degrees, *, xi: int, kappa: int,
+                 global_tail: bool = False, block: int | None = None,
+                 interpret: bool | None = None):
+    """One fused Algorithm-1 chunk (insert path).
+
+    ``state`` is the 10-leaf ``ClusterState`` tuple (plain arrays — this
+    module cannot import ``core``); returns the updated leaves in the
+    same order.  Per-edge transitions mirror
+    ``core.clustering._edge_step`` expression-for-expression.
+    """
+    src = jnp.asarray(src, jnp.int32)
+    dst = jnp.asarray(dst, jnp.int32)
+    E = src.shape[0]
+    if E == 0:
+        return tuple(state)
+    blk, pad, interpret = _resolve(block, E, interpret)
+    src, dst, _ = _pad_edges(src, dst, None, pad)
+    (v2c_h, v2c_t, vol_h, vol_t, ld, next_h, next_t, cnt_h, cnt_t,
+     alloc_h) = (jnp.asarray(s, jnp.int32) for s in state)
+    V = ld.shape[0]
+    meta = jnp.stack([jnp.int32(E), jnp.int32(1)])
+    packed = (v2c_h.reshape(V, 1), v2c_t.reshape(V, 1),
+              vol_h.reshape(V + 1, 1), vol_t.reshape(V + 1, 1),
+              ld.reshape(V, 1), next_h.reshape(1, 1), next_t.reshape(1, 1),
+              cnt_h.reshape(V, 1), cnt_t.reshape(V, 1),
+              alloc_h.reshape(V, 1))
+    _bump_dispatch()
+    out = _cluster_call(meta, src, dst,
+                        jnp.asarray(degrees, jnp.int32).reshape(V, 1),
+                        *packed, xi=int(xi), kappa=int(kappa),
+                        global_tail=bool(global_tail), block=blk,
+                        interpret=interpret)
+    return (out[0][:, 0], out[1][:, 0], out[2][:, 0], out[3][:, 0],
+            out[4][:, 0], out[5][0, 0], out[6][0, 0], out[7][:, 0],
+            out[8][:, 0], out[9][:, 0])
+
+
+# ===================================================================
+# Algorithm 3 placement pass
+# ===================================================================
+
+
+def _assign_kernel(meta_ref, src_ref, dst_ref, head_ref, pcu_ref, pcv_ref,
+                   pin_ref, load_in, parts_ref, load_ref, *, k, block):
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _():
+        load_ref[...] = load_in[...]
+
+    limit = meta_ref[0]
+    sign = meta_ref[1]
+    cap = meta_ref[2]
+    iota = jax.lax.broadcasted_iota(jnp.int32, (1, k), 1)[0, :]
+
+    def body(e, _):
+        g = i * block + e
+        u = src_ref[g]
+        v = dst_ref[g]
+        real = g < limit
+        is_ins = sign > 0
+        head = head_ref[g] != 0
+        pcu = pcu_ref[g]
+        pcv = pcv_ref[g]
+        load = load_ref[0, :]
+        lu = jnp.sum(jnp.where(iota == pcu, load, 0))
+        lv = jnp.sum(jnp.where(iota == pcv, load, 0))
+        over_u = lu >= cap
+        over_v = lv >= cap
+        room = load < cap
+        any_room = jnp.any(room)
+        first_room = jnp.argmax(room).astype(jnp.int32)
+        # integer-equal to the oracle's k-1-argmax(room[::-1]) whenever
+        # any_room holds (the only case the value is consumed)
+        last_room = jnp.max(jnp.where(room, iota, -1)).astype(jnp.int32)
+        fallback = jnp.argmin(load).astype(jnp.int32)
+        overflow_choice = jnp.where(
+            any_room, jnp.where(head, first_room, last_room), fallback)
+        endpoint_choice = jnp.where(lu > lv, pcv, pcu)
+        part_ins = jnp.where(over_u & over_v, overflow_choice,
+                             endpoint_choice)
+        p_ret = pin_ref[e]
+        pick = jnp.where(is_ins, part_ins, jnp.maximum(p_ret, 0))
+        placed = real & (u != v) & jnp.where(is_ins, True, p_ret >= 0)
+        w = jnp.where(placed, sign, 0)
+        load_ref[0, :] = load + jnp.where(iota == pick, w, 0)
+        parts_ref[e] = jnp.where(
+            is_ins, jnp.where(real & (u != v), part_ins, -1), p_ret)
+        return 0
+
+    jax.lax.fori_loop(0, block, body, 0)
+
+
+@functools.partial(jax.jit, static_argnames=("block", "interpret"))
+def _assign_call(meta, src, dst, head, pcu, pcv, pin, load, *, block,
+                 interpret):
+    Epad = src.shape[0]
+    k = load.shape[1]
+    kernel = functools.partial(_assign_kernel, k=k, block=block)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=6,
+        grid=(Epad // block,),
+        in_specs=[_edge_spec(block), _const_spec((1, k))],
+        out_specs=[_edge_spec(block), _const_spec((1, k))],
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((Epad,), jnp.int32),
+            jax.ShapeDtypeStruct((1, k), jnp.int32),
+        ],
+        input_output_aliases={6: 0, 7: 1},
+        interpret=interpret,
+    )(meta, src, dst, head, pcu, pcv, pin, load)
+
+
+def assign_scan(load, src, dst, is_head_edge, pcu, pcv, *, max_load,
+                sign: int = 1, parts=None, n_valid=None,
+                block: int | None = None, interpret: bool | None = None):
+    """One fused Algorithm-3 chunk — insert or retract.
+
+    ``pcu``/``pcv`` are the endpoint **partition** ids (``c2p`` gathered
+    outside, exactly as the oracle does).  Returns ``(parts, load)``.
+    Mirrors ``core.postprocess._assign_chunk`` / ``_retract_load``.
+    """
+    if sign not in (1, -1):
+        raise ValueError(f"sign must be +1 or -1, got {sign!r}")
+    if sign < 0 and (n_valid is None or parts is None):
+        raise ValueError("retract needs n_valid and recorded parts")
+    src = jnp.asarray(src, jnp.int32)
+    dst = jnp.asarray(dst, jnp.int32)
+    load = jnp.asarray(load, jnp.int32)
+    E = src.shape[0]
+    k = load.shape[0]
+    if E == 0:
+        return jnp.zeros((0,), jnp.int32), load
+    blk, pad, interpret = _resolve(block, E, interpret)
+    head = jnp.asarray(is_head_edge, jnp.int32)
+    pcu = jnp.asarray(pcu, jnp.int32)
+    pcv = jnp.asarray(pcv, jnp.int32)
+    if pad:
+        head = jnp.pad(head, (0, pad))
+        pcu = jnp.pad(pcu, (0, pad))
+        pcv = jnp.pad(pcv, (0, pad))
+    src, dst, pin = _pad_edges(src, dst, parts, pad)
+    limit = jnp.asarray(E if sign > 0 else n_valid, jnp.int32)
+    meta = jnp.stack([limit, jnp.int32(sign),
+                      jnp.asarray(max_load, jnp.int32)])
+    _bump_dispatch()
+    parts_out, load2 = _assign_call(meta, src, dst, head, pcu, pcv, pin,
+                                    load.reshape(1, k), block=blk,
+                                    interpret=interpret)
+    return parts_out[:E], load2[0]

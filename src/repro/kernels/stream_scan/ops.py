@@ -1,96 +1,211 @@
-"""Dispatch layer: pick the fused Pallas chunk step or the scan oracle.
+"""Dispatch layer: the fused → tiled → oracle degradation ladder.
 
-``make_chunk_fn(mode)`` returns a chunk function with the engine contract
-``(carry, src, dst) -> (carry, parts)``.  On TPU (state within the VMEM
-budget) it runs the fused kernel; on CPU — where Pallas interpret mode is
-correctness-only — it runs the compiled ``lax.scan`` oracle.  Both paths
-produce bit-identical parts (tests/test_streaming.py).
+``select_path`` picks, per (state size, chunk size), how a chunk runs:
+
+- **fused** — the whole per-vertex state fits the VMEM budget; one
+  blocked-grid megakernel dispatch per chunk with the state VMEM-resident
+  across grid steps;
+- **tiled** — the replica table (and HDRF partial degrees) would blow the
+  budget; same single dispatch, but the table stays HBM-resident and the
+  kernel gathers/scatters rows manually (``pl.load``/``pl.store``);
+- **oracle** — even the edge-id prefetch doesn't fit (or the consumer has
+  no kernel variant): the jitted ``lax.scan`` reference.
+
+The budget resolves explicit argument → ``REPRO_VMEM_BUDGET`` env var →
+8 MiB default, and the chosen path is logged once per (consumer, mode,
+path) per process (``reset_path_log`` re-arms it, e.g. for tests).
 
 The scoring baselines' :class:`~repro.streaming.carry.PartitionerCarry`
 implementations live here too (``GreedyCarry`` / ``HdrfCarry`` /
-``GridCarry``): they wrap the oracle/kernel dispatch as ``step_chunk`` and
-declare the parallel-ingest merge algebra — counted replica tables and
-loads/partial degrees SUM, scenario constants (λ, k-mask, grid tables)
-replicated — so oracle and kernel stay in lockstep behind one protocol
-surface.  All three implement :meth:`~repro.streaming.carry
-.PartitionerCarry.retract_chunk` **exactly**: given the per-edge parts
-recorded at insertion, deleting an edge subtracts precisely the load /
+``GridCarry``): they wrap the ladder dispatch as ``step_chunk`` /
+``retract_chunk`` and declare the parallel-ingest merge algebra — counted
+replica tables COUNTED, loads/partial degrees SUM, scenario constants
+(λ, k-mask, grid tables) replicated — so oracle and kernel stay in
+lockstep behind one protocol surface.  Since the counted megakernel,
+**retraction is the same kernel invoked with ``sign=-1``**: the replica
+counters update in-kernel (the seed's separate ``_recount`` scatter-add
+patch is gone), and deleting an edge subtracts exactly the load /
 replica-count / partial-degree accounting its insertion added.
-
-Kernel note: the fused kernel scores against the OR-projection (``> 0``)
-of the counted replica table — which is all scoring ever reads — and
-writes back a saturated 0/1 table; the wrapper therefore keeps the exact
-counters itself with one vectorized scatter-add over the chunk's picks,
-so kernel and oracle paths maintain identical counted state.
 """
 
 from __future__ import annotations
+
+import logging
+import os
 
 import jax
 import jax.numpy as jnp
 
 from ...streaming.carry import COUNTED, REPLICATED, SUM, PartitionerCarry
-from .kernel import stream_scan_tpu
+from .kernel import scoring_scan
 from . import ref as _ref
 
-__all__ = ["make_chunk_fn", "kernel_fits", "GreedyCarry", "HdrfCarry",
-           "GridCarry"]
+__all__ = [
+    "DEFAULT_VMEM_BUDGET",
+    "GreedyCarry",
+    "GridCarry",
+    "HdrfCarry",
+    "VMEM_BUDGET_ENV",
+    "cluster_state_bytes",
+    "kernel_fits",
+    "make_chunk_fn",
+    "reset_path_log",
+    "scoring_state_bytes",
+    "select_path",
+    "vmem_budget",
+]
 
-_VMEM_STATE_BUDGET = 8 << 20  # bytes of bitmap+chunk state the kernel may hold
+DEFAULT_VMEM_BUDGET = 8 << 20
+VMEM_BUDGET_ENV = "REPRO_VMEM_BUDGET"
+
+_log = logging.getLogger(__name__)
+_logged_paths: set[tuple] = set()
 
 
-def kernel_fits(n_vertices: int, k: int, chunk_size: int) -> bool:
-    state = n_vertices * k * 4 + n_vertices * 4 + 2 * chunk_size * 4
-    return state <= _VMEM_STATE_BUDGET
+def vmem_budget(explicit: int | None = None) -> int:
+    """Resolve the VMEM budget: explicit arg → env var → 8 MiB default."""
+    if explicit is not None:
+        return int(explicit)
+    env = os.environ.get(VMEM_BUDGET_ENV)
+    if env:
+        return int(env)
+    return DEFAULT_VMEM_BUDGET
 
 
-@jax.jit
-def _recount(rep, src, dst, parts):
-    """Fold a chunk's picks into the counted replica table (kernel path)."""
-    w = ((src != dst) & (parts >= 0)).astype(jnp.int32)
-    p = jnp.maximum(parts, 0)
-    rep = rep.at[src, p].add(w)
-    rep = rep.at[dst, p].add(w)
-    return rep
+def scoring_state_bytes(n_vertices: int, k: int, mode: str = "hdrf") -> int:
+    """VMEM-resident state of the fused scoring kernel (int32 bytes)."""
+    pd = n_vertices * 4 if mode == "hdrf" else 0
+    return n_vertices * k * 4 + k * 4 + pd
 
 
-def _greedy_kernel_chunk(carry, src, dst):
+def cluster_state_bytes(n_vertices: int) -> int:
+    """VMEM-resident state of the fused Algorithm-1 kernel: 8 (V,) leaves,
+    2 (V+1,) volume arrays, the degree table, 2 scalar id counters."""
+    return (11 * n_vertices + 4) * 4
+
+
+def _ids_bytes(chunk_size: int) -> int:
+    return 2 * chunk_size * 4  # scalar-prefetched src + dst
+
+
+def select_path(n_vertices: int, k: int, chunk_size: int, *,
+                mode: str = "hdrf", budget: int | None = None,
+                consumer: str = "stream_scan") -> str:
+    """Pick ``"fused" | "tiled" | "oracle"`` for one chunk and log the
+    choice once per run."""
+    b = vmem_budget(budget)
+    ids = _ids_bytes(chunk_size)
+    if consumer == "cluster":
+        state = cluster_state_bytes(n_vertices)
+        path = "fused" if state + ids <= b else "oracle"
+    else:
+        state = scoring_state_bytes(n_vertices, k, mode)
+        if state + ids <= b:
+            path = "fused"
+        elif ids + k * 4 <= b:
+            path = "tiled"
+        else:
+            path = "oracle"
+    key = (consumer, mode, path)
+    if key not in _logged_paths:
+        _logged_paths.add(key)
+        _log.info(
+            "%s[%s]: %s path (state %.1f KiB + ids %.1f KiB, budget %.1f MiB)",
+            consumer, mode, path, state / 1024, ids / 1024, b / (1 << 20))
+    return path
+
+
+def reset_path_log() -> None:
+    """Re-arm the once-per-run path logging (used by tests)."""
+    _logged_paths.clear()
+
+
+def kernel_fits(n_vertices: int, k: int, chunk_size: int, *,
+                mode: str = "hdrf", budget: int | None = None) -> bool:
+    """Back-compat gate: does the *fused* path fit the VMEM budget?"""
+    state = scoring_state_bytes(n_vertices, k, mode)
+    return state + _ids_bytes(chunk_size) <= vmem_budget(budget)
+
+
+# ---------------------------------------------------------------------------
+# ladder-dispatching chunk functions (engine contract)
+# ---------------------------------------------------------------------------
+
+
+def _greedy_kernel_chunk(carry, src, dst, *, budget=None):
     load, rep = carry
-    if not kernel_fits(rep.shape[0], rep.shape[1], src.shape[0]):
-        return _ref.greedy_chunk(carry, src, dst)  # VMEM-gated fallback
-    parts, load2, _, _ = stream_scan_tpu(
-        src, dst, load, rep,
-        jnp.zeros((rep.shape[0],), jnp.int32), jnp.float32(0.0), mode="greedy",
-    )
-    return (load2, _recount(rep, src, dst, parts)), parts
+    path = select_path(rep.shape[0], rep.shape[1], src.shape[0],
+                       mode="greedy", budget=budget)
+    if path == "oracle":
+        return _ref.greedy_chunk(carry, src, dst)
+    parts, load2, rep2, _ = scoring_scan(
+        src, dst, load, rep, mode="greedy", tiled=(path == "tiled"))
+    return (load2, rep2), parts
 
 
-def _hdrf_kernel_chunk(carry, src, dst):
+def _greedy_kernel_retract(carry, src, dst, n_valid, parts, *, budget=None):
+    load, rep = carry
+    path = select_path(rep.shape[0], rep.shape[1], src.shape[0],
+                       mode="greedy", budget=budget)
+    if path == "oracle":
+        return _ref.greedy_retract_chunk(carry, src, dst, n_valid, parts)
+    _, load2, rep2, _ = scoring_scan(
+        src, dst, load, rep, mode="greedy", sign=-1, parts=parts,
+        n_valid=n_valid, tiled=(path == "tiled"))
+    return (load2, rep2)
+
+
+def _hdrf_kernel_chunk(carry, src, dst, *, budget=None):
     load, rep, pd, lam, kmask = carry
-    if not kernel_fits(rep.shape[0], rep.shape[1], src.shape[0]):
-        return _ref.hdrf_chunk(carry, src, dst)  # VMEM-gated fallback
-    parts, load2, _, pd2 = stream_scan_tpu(
-        src, dst, load, rep, pd, lam, mode="hdrf",
-    )
-    return (load2, _recount(rep, src, dst, parts), pd2, lam, kmask), parts
+    path = select_path(rep.shape[0], rep.shape[1], src.shape[0],
+                       mode="hdrf", budget=budget)
+    if path == "oracle":
+        return _ref.hdrf_chunk(carry, src, dst)
+    parts, load2, rep2, pd2 = scoring_scan(
+        src, dst, load, rep, pd, lam, mode="hdrf", tiled=(path == "tiled"))
+    return (load2, rep2, pd2, lam, kmask), parts
 
 
-def make_chunk_fn(mode: str, *, use_kernel: bool | None = None):
+def _hdrf_kernel_retract(carry, src, dst, n_valid, parts, *, budget=None):
+    load, rep, pd, lam, kmask = carry
+    path = select_path(rep.shape[0], rep.shape[1], src.shape[0],
+                       mode="hdrf", budget=budget)
+    if path == "oracle":
+        return _ref.hdrf_retract_chunk(carry, src, dst, n_valid, parts)
+    _, load2, rep2, pd2 = scoring_scan(
+        src, dst, load, rep, pd, lam, mode="hdrf", sign=-1, parts=parts,
+        n_valid=n_valid, tiled=(path == "tiled"))
+    return (load2, rep2, pd2, lam, kmask)
+
+
+def _auto_use_kernel(use_kernel: bool | None) -> bool:
+    """None → the fused kernel on TPU, the oracle scan elsewhere
+    (interpret-mode Pallas is orders slower than XLA's compiled scan)."""
+    if use_kernel is None:
+        return jax.default_backend() == "tpu"
+    return bool(use_kernel)
+
+
+def make_chunk_fn(mode: str, *, use_kernel: bool | None = None,
+                  vmem_budget: int | None = None):
     """Chunk function for ``streaming.run_scan``.
 
-    ``use_kernel=None`` auto-selects: the fused kernel on TPU, the oracle
-    scan elsewhere (interpret-mode Pallas is orders slower than XLA's
-    compiled scan on CPU).  The kernel path does not implement the padded
-    multi-k mask, so batched multi-k runs must use the oracle.
+    The kernel path does not implement the padded multi-k mask, so
+    batched multi-k runs must use the oracle.
     """
-    if use_kernel is None:
-        use_kernel = jax.default_backend() == "tpu"
+    kern = _auto_use_kernel(use_kernel)
     if mode == "greedy":
-        return _greedy_kernel_chunk if use_kernel else _ref.greedy_chunk
+        if kern:
+            return lambda c, s, d: _greedy_kernel_chunk(c, s, d,
+                                                        budget=vmem_budget)
+        return _ref.greedy_chunk
     if mode == "hdrf":
-        return _hdrf_kernel_chunk if use_kernel else _ref.hdrf_chunk
+        if kern:
+            return lambda c, s, d: _hdrf_kernel_chunk(c, s, d,
+                                                      budget=vmem_budget)
+        return _ref.hdrf_chunk
     if mode == "grid":
-        return _ref.grid_chunk  # O(k) carry — no bitmap, nothing to fuse
+        return _ref.grid_chunk  # O(k) carry — no replica table, nothing to fuse
     raise ValueError(f"unknown mode {mode!r}")
 
 
@@ -106,45 +221,65 @@ class GreedyCarry(PartitionerCarry):
     supports_retract = True
     retract_exact = True
 
-    def __init__(self, n_vertices: int, k: int, *, use_kernel: bool | None = None):
+    def __init__(self, n_vertices: int, k: int, *,
+                 use_kernel: bool | None = None,
+                 vmem_budget: int | None = None):
         self.n_vertices = int(n_vertices)
         self.k = int(k)
-        self._chunk_fn = make_chunk_fn("greedy", use_kernel=use_kernel)
+        self._use_kernel = _auto_use_kernel(use_kernel)
+        self._budget = vmem_budget
 
     def init(self):
         return _ref.greedy_init(self.n_vertices, self.k)
 
     def step_chunk(self, carry, src, dst, n_valid, *extras):
-        return self._chunk_fn(carry, src, dst)
+        if self._use_kernel:
+            return _greedy_kernel_chunk(carry, src, dst, budget=self._budget)
+        return _ref.greedy_chunk(carry, src, dst)
 
     def retract_chunk(self, carry, src, dst, n_valid, parts, *extras):
+        if self._use_kernel:
+            return _greedy_kernel_retract(carry, src, dst, n_valid, parts,
+                                          budget=self._budget)
         return _ref.greedy_retract_chunk(carry, src, dst, n_valid, parts)
 
 
 class HdrfCarry(PartitionerCarry):
     """HDRF as a carry: (load SUM, replica counters COUNTED, partial
-    degrees SUM, λ replicated, active-partition mask replicated)."""
+    degrees SUM, λ replicated, active-partition mask replicated).
+
+    The kernel scores without the padded multi-k mask, so a carry with
+    ``k_active < k`` always runs the oracle."""
 
     merge_ops = (SUM, COUNTED, SUM, REPLICATED, REPLICATED)
     supports_retract = True
     retract_exact = True
 
     def __init__(self, n_vertices: int, k: int, lam: float = 1.1, *,
-                 k_active: int | None = None, use_kernel: bool | None = None):
+                 k_active: int | None = None,
+                 use_kernel: bool | None = None,
+                 vmem_budget: int | None = None):
         self.n_vertices = int(n_vertices)
         self.k = int(k)
         self.lam = float(lam)
         self.k_active = k_active
-        self._chunk_fn = make_chunk_fn("hdrf", use_kernel=use_kernel)
+        masked = k_active is not None and int(k_active) != int(k)
+        self._use_kernel = _auto_use_kernel(use_kernel) and not masked
+        self._budget = vmem_budget
 
     def init(self):
         return _ref.hdrf_init(self.n_vertices, self.k, self.lam,
                               k_active=self.k_active)
 
     def step_chunk(self, carry, src, dst, n_valid, *extras):
-        return self._chunk_fn(carry, src, dst)
+        if self._use_kernel:
+            return _hdrf_kernel_chunk(carry, src, dst, budget=self._budget)
+        return _ref.hdrf_chunk(carry, src, dst)
 
     def retract_chunk(self, carry, src, dst, n_valid, parts, *extras):
+        if self._use_kernel:
+            return _hdrf_kernel_retract(carry, src, dst, n_valid, parts,
+                                        budget=self._budget)
         return _ref.hdrf_retract_chunk(carry, src, dst, n_valid, parts)
 
 

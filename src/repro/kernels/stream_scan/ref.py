@@ -37,6 +37,8 @@ __all__ = [
     "grid_init",
     "grid_chunk",
     "grid_retract_chunk",
+    "cluster_chunk_oracle",
+    "assign_chunk_oracle",
 ]
 
 _INF_I32 = jnp.int32(2**30)
@@ -209,3 +211,33 @@ def grid_retract_chunk(carry, src, dst, n_valid, parts):
     w, p = _retract_masks(src, dst, n_valid, parts)
     load = load - jax.ops.segment_sum(w, p, num_segments=load.shape[0])
     return (load, row, col, c)
+
+
+# --------------------------------------------------- cluster / assign oracles
+# The bit-parity references for the Algorithm-1 / Algorithm-3 megakernels
+# are the core scans themselves; these thin wrappers re-export them behind
+# lazy imports (``core.baselines`` imports this package at module level,
+# so the kernels package must never import ``core`` at module level).
+
+
+def cluster_chunk_oracle(state, src, dst, degrees, *, xi, kappa,
+                         global_tail=False):
+    """``core.clustering.cluster_chunk`` on a 10-leaf state tuple.
+
+    Takes/returns plain leaf tuples (same contract as
+    :func:`..kernel.cluster_scan`) so parity tests compare like for like.
+    """
+    from ...core.clustering import ClusterState, cluster_chunk
+
+    out = cluster_chunk(ClusterState(*state), src, dst, degrees,
+                        xi=xi, kappa=kappa, global_tail=global_tail)
+    return tuple(out)
+
+
+def assign_chunk_oracle(load, max_load, src, dst, is_head_edge, cu, cv, c2p,
+                        *, k):
+    """``core.postprocess._assign_chunk`` — the Algorithm-3 scan oracle."""
+    from ...core.postprocess import _assign_chunk
+
+    return _assign_chunk(load, max_load, src, dst, is_head_edge, cu, cv,
+                         c2p, k=k)

@@ -80,3 +80,352 @@ def test_cin_kernel_sweep(B, Hk, m, D, Hn, dtype):
     tol = 1e-1 if dtype == jnp.bfloat16 else 1e-4
     np.testing.assert_allclose(np.asarray(out, np.float32),
                                np.asarray(ref, np.float32), atol=tol, rtol=1e-2)
+
+
+# ===========================================================================
+# stream_scan megakernel: one dispatch per chunk, insert + retract (sign=±1)
+# ===========================================================================
+
+from proptest import cases, random_graph  # noqa: E402
+from repro.kernels import stream_scan as ss  # noqa: E402
+
+try:  # optional — the container image has no hypothesis; gate, don't require
+    from hypothesis import HealthCheck, given, settings
+    from hypothesis import strategies as st_
+
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+_ON_CPU = jax.default_backend() == "cpu"
+K = 4
+
+
+def _graph(seed, cap=400):
+    src, dst, n, label = random_graph(seed)
+    return (jnp.asarray(src[:cap], jnp.int32),
+            jnp.asarray(dst[:cap], jnp.int32), n, label)
+
+
+def _scoring_carry(mode, n):
+    if mode == "greedy":
+        return ss.greedy_init(n, K)
+    return ss.hdrf_init(n, K, 1.1)
+
+
+def _scoring_step_ref(mode, carry, src, dst):
+    fn = ss.greedy_chunk if mode == "greedy" else ss.hdrf_chunk
+    return fn(carry, src, dst)
+
+
+def _scoring_step_kernel(mode, carry, src, dst, tiled, block=64):
+    if mode == "greedy":
+        parts, load, rep, _ = ss.scoring_scan(
+            src, dst, carry[0], carry[1], mode=mode, tiled=tiled, block=block)
+        return (load, rep), parts
+    parts, load, rep, pd = ss.scoring_scan(
+        src, dst, carry[0], carry[1], carry[2], carry[3], mode=mode,
+        tiled=tiled, block=block)
+    return (load, rep, pd, carry[3], carry[4]), parts
+
+
+def _tree_bitwise(a, b, label=""):
+    for i, (x, y) in enumerate(zip(a, b)):
+        assert np.array_equal(np.asarray(x), np.asarray(y)), f"{label} leaf {i}"
+
+
+@pytest.mark.parametrize("tiled", [False, True], ids=["fused", "tiled"])
+@pytest.mark.parametrize("mode", ["greedy", "hdrf"])
+@pytest.mark.parametrize("seed", list(cases(3)))
+def test_scoring_scan_insert_parity(seed, mode, tiled):
+    """Megakernel insert is bit-identical to the lax.scan oracle — exact
+    counted replica table, not just the 0/1 scoring projection."""
+    src, dst, n, label = _graph(seed)
+    if src.shape[0] == 0:
+        return
+    carry = _scoring_carry(mode, n)
+    ref_carry, ref_parts = _scoring_step_ref(mode, carry, src, dst)
+    out_carry, parts = _scoring_step_kernel(mode, carry, src, dst, tiled)
+    assert np.array_equal(np.asarray(parts), np.asarray(ref_parts)), label
+    _tree_bitwise(out_carry, ref_carry, label)
+
+
+@pytest.mark.parametrize("tiled", [False, True], ids=["fused", "tiled"])
+@pytest.mark.parametrize("mode", ["greedy", "hdrf"])
+@pytest.mark.parametrize("seed", list(cases(3)))
+def test_scoring_retract_is_bitwise_inverse(seed, mode, tiled):
+    """retract_chunk through the kernel (same kernel, sign=-1) undoes
+    step_chunk exactly — the counted-table roundtrip property."""
+    src, dst, n, label = _graph(seed)
+    E = int(src.shape[0])
+    if E == 0:
+        return
+    carry0 = _scoring_carry(mode, n)
+    carry1, parts = _scoring_step_kernel(mode, carry0, src, dst, tiled)
+    if mode == "greedy":
+        _, load, rep, _ = ss.scoring_scan(
+            src, dst, carry1[0], carry1[1], mode=mode, sign=-1, parts=parts,
+            n_valid=E, tiled=tiled, block=64)
+        back = (load, rep)
+    else:
+        _, load, rep, pd = ss.scoring_scan(
+            src, dst, carry1[0], carry1[1], carry1[2], carry1[3], mode=mode,
+            sign=-1, parts=parts, n_valid=E, tiled=tiled, block=64)
+        back = (load, rep, pd, carry1[3], carry1[4])
+    _tree_bitwise(back, carry0, label)
+
+
+@pytest.mark.parametrize("mode", ["greedy", "hdrf"])
+def test_carry_retract_kernel_matches_oracle(mode):
+    """GreedyCarry/HdrfCarry retract through the kernel == the vectorized
+    oracle retraction, bitwise (deletion batches chunk arbitrarily)."""
+    src, dst, n, _ = _graph(1)
+    E = int(src.shape[0])
+    pc_k = (ss.GreedyCarry(n, K, use_kernel=True) if mode == "greedy"
+            else ss.HdrfCarry(n, K, use_kernel=True))
+    pc_o = (ss.GreedyCarry(n, K, use_kernel=False) if mode == "greedy"
+            else ss.HdrfCarry(n, K, use_kernel=False))
+    carry, parts = pc_k.step_chunk(pc_k.init(), src, dst, jnp.int32(E))
+    nv = jnp.int32(max(E - 37, 1))  # partial retraction exercises the limit
+    a = pc_k.retract_chunk(carry, src, dst, nv, parts)
+    b = pc_o.retract_chunk(carry, src, dst, nv, parts)
+    _tree_bitwise(a, b, mode)
+
+
+if HAVE_HYPOTHESIS:
+
+    @settings(max_examples=25, deadline=None,
+              suppress_health_check=[HealthCheck.too_slow])
+    @given(data=st_.data())
+    def test_scoring_roundtrip_property(data):
+        n = data.draw(st_.integers(4, 40), label="n")
+        E = data.draw(st_.integers(1, 120), label="E")
+        mode = data.draw(st_.sampled_from(["greedy", "hdrf"]), label="mode")
+        edges = st_.integers(0, n - 1)
+        src = jnp.asarray(data.draw(st_.lists(edges, min_size=E, max_size=E)),
+                          jnp.int32)
+        dst = jnp.asarray(data.draw(st_.lists(edges, min_size=E, max_size=E)),
+                          jnp.int32)
+        carry0 = _scoring_carry(mode, n)
+        carry1, parts = _scoring_step_kernel(mode, carry0, src, dst, False)
+        if mode == "greedy":
+            _, load, rep, _ = ss.scoring_scan(
+                src, dst, carry1[0], carry1[1], mode=mode, sign=-1,
+                parts=parts, n_valid=E, block=64)
+            back = (load, rep)
+        else:
+            _, load, rep, pd = ss.scoring_scan(
+                src, dst, carry1[0], carry1[1], carry1[2], carry1[3],
+                mode=mode, sign=-1, parts=parts, n_valid=E, block=64)
+            back = (load, rep, pd, carry1[3], carry1[4])
+        _tree_bitwise(back, carry0, mode)
+
+
+# --------------------------------------------------- Alg. 1 / Alg. 3 kernels
+
+
+@pytest.mark.parametrize("global_tail", [False, True], ids=["s5p", "s5p-b"])
+@pytest.mark.parametrize("seed", list(cases(3)))
+def test_cluster_scan_parity(seed, global_tail):
+    from repro.core.clustering import compute_degrees, init_state
+
+    src, dst, n, label = _graph(seed)
+    if src.shape[0] == 0:
+        return
+    deg = compute_degrees(src, dst, n)
+    xi = max(int(np.asarray(deg).mean()), 1)
+    kappa = max(2 * int(src.shape[0]) // K, 2)
+    s0 = tuple(init_state(n))
+    ref = ss.cluster_chunk_oracle(s0, src, dst, deg, xi=xi, kappa=kappa,
+                                  global_tail=global_tail)
+    out = ss.cluster_scan(s0, src, dst, deg, xi=xi, kappa=kappa,
+                          global_tail=global_tail, block=64)
+    _tree_bitwise(out, ref, label)
+
+
+@pytest.mark.parametrize("seed", list(cases(3)))
+def test_assign_scan_parity(seed):
+    src, dst, n, label = _graph(seed)
+    E = int(src.shape[0])
+    if E == 0:
+        return
+    rng = np.random.default_rng(seed)
+    n_cl = 8
+    c2p = jnp.asarray(rng.integers(0, K, n_cl), jnp.int32)
+    cu = jnp.asarray(rng.integers(0, n_cl, E), jnp.int32)
+    cv = jnp.asarray(rng.integers(0, n_cl, E), jnp.int32)
+    head = jnp.asarray(rng.integers(0, 2, E), jnp.int32)
+    load0 = jnp.zeros((K,), jnp.int32)
+    L = max(E // (2 * K), 1)  # tight cap: exercise the overflow branches
+    ref_load, ref_parts = ss.assign_chunk_oracle(
+        load0, jnp.int32(L), src, dst, head, cu, cv, c2p, k=K)
+    parts, load = ss.assign_scan(load0, src, dst, head, c2p[cu], c2p[cv],
+                                 max_load=L, block=64)
+    assert np.array_equal(np.asarray(parts), np.asarray(ref_parts)), label
+    assert np.array_equal(np.asarray(load), np.asarray(ref_load))
+    # retract through the same kernel == the vectorized oracle
+    from repro.core.postprocess import _retract_load
+
+    nv = jnp.int32(max(E - 19, 1))
+    _, l2 = ss.assign_scan(load, src, dst, head, c2p[cu], c2p[cv],
+                           max_load=L, sign=-1, parts=parts, n_valid=nv,
+                           block=64)
+    assert np.array_equal(
+        np.asarray(l2), np.asarray(_retract_load(load, src, dst, nv, parts)))
+
+
+def test_cluster_carry_kernel_via_engine():
+    """ClusterCarry(use_kernel=True) through run_carry == oracle, bitwise."""
+    from repro.core.clustering import ClusterCarry, compute_degrees
+    from repro.streaming import EdgeStream, run_carry
+
+    src, dst, n, _ = _graph(2)
+    deg = compute_degrees(src, dst, n)
+    st = EdgeStream(src, dst, n, chunk_size=128)
+    kw = dict(xi=3, kappa=max(int(src.shape[0]) // 2, 2))
+    _, a = run_carry(st, ClusterCarry(deg, n, use_kernel=True, **kw))
+    _, b = run_carry(st, ClusterCarry(deg, n, use_kernel=False, **kw))
+    _tree_bitwise(tuple(a), tuple(b), "cluster engine")
+
+
+def test_assign_carry_kernel_via_engine():
+    """AssignCarry(use_kernel=True) through run_carry == oracle, bitwise."""
+    from repro.core.postprocess import AssignCarry
+    from repro.streaming import EdgeStream, run_carry
+
+    src, dst, n, _ = _graph(3)
+    E = int(src.shape[0])
+    rng = np.random.default_rng(3)
+    n_cl = 8
+    c2p = jnp.asarray(rng.integers(0, K, n_cl), jnp.int32)
+    cu = jnp.asarray(rng.integers(0, n_cl, E), jnp.int32)
+    cv = jnp.asarray(rng.integers(0, n_cl, E), jnp.int32)
+    head = jnp.asarray(rng.integers(0, 2, E), jnp.int32)
+    L = max(E // K, 1)
+    st = EdgeStream(src, dst, n, chunk_size=128)
+    pa, la = run_carry(st, AssignCarry(K, L, c2p, use_kernel=True),
+                       head, cu, cv)
+    pb, lb = run_carry(st, AssignCarry(K, L, c2p, use_kernel=False),
+                       head, cu, cv)
+    assert np.array_equal(np.asarray(pa), np.asarray(pb))
+    assert np.array_equal(np.asarray(la), np.asarray(lb))
+
+
+# --------------------------------------------------- VMEM ladder + logging
+
+
+def test_vmem_budget_resolution(monkeypatch):
+    monkeypatch.delenv(ss.VMEM_BUDGET_ENV, raising=False)
+    assert ss.vmem_budget() == ss.DEFAULT_VMEM_BUDGET
+    monkeypatch.setenv(ss.VMEM_BUDGET_ENV, "123456")
+    assert ss.vmem_budget() == 123456
+    assert ss.vmem_budget(777) == 777  # explicit beats env
+
+
+def test_select_path_gate_boundaries():
+    V, k, chunk = 100, 4, 64
+    state = ss.scoring_state_bytes(V, k, "hdrf")
+    ids = 2 * chunk * 4
+    assert ss.select_path(V, k, chunk, mode="hdrf",
+                          budget=state + ids) == "fused"
+    assert ss.select_path(V, k, chunk, mode="hdrf",
+                          budget=state + ids - 1) == "tiled"
+    assert ss.select_path(V, k, chunk, mode="hdrf",
+                          budget=ids + k * 4 - 1) == "oracle"
+    assert ss.kernel_fits(V, k, chunk, mode="hdrf", budget=state + ids)
+    assert not ss.kernel_fits(V, k, chunk, mode="hdrf",
+                              budget=state + ids - 1)
+    # greedy state is smaller (no partial degrees): same budget, wider gate
+    assert ss.scoring_state_bytes(V, k, "greedy") < state
+    # cluster ladder has no tiled rung
+    cstate = ss.cluster_state_bytes(V)
+    assert ss.select_path(V, 1, chunk, consumer="cluster",
+                          budget=cstate + ids) == "fused"
+    assert ss.select_path(V, 1, chunk, consumer="cluster",
+                          budget=cstate + ids - 1) == "oracle"
+
+
+def test_path_logged_once_per_run(caplog):
+    ss.reset_path_log()
+    with caplog.at_level("INFO", logger="repro.kernels.stream_scan.ops"):
+        ss.select_path(100, 4, 64, mode="greedy", budget=1 << 20)
+        ss.select_path(100, 4, 64, mode="greedy", budget=1 << 20)
+    hits = [r for r in caplog.records if "greedy" in r.getMessage()]
+    assert len(hits) == 1 and "fused" in hits[0].getMessage()
+    ss.reset_path_log()
+    with caplog.at_level("INFO", logger="repro.kernels.stream_scan.ops"):
+        ss.select_path(100, 4, 64, mode="greedy", budget=1 << 20)
+    assert len([r for r in caplog.records
+                if "greedy" in r.getMessage()]) == 2  # re-armed
+
+
+def test_ladder_tiled_path_bitwise_via_carry():
+    """A budget too small for the fused table (but fine for edge ids)
+    forces the tiled rung — results must stay bitwise-oracle."""
+    src, dst, n, _ = _graph(0)
+    E = int(src.shape[0])
+    if E == 0:
+        return
+    state = ss.scoring_state_bytes(n, K, "hdrf")
+    tight = state - 1 + 2 * 65536 * 4  # ids for the default chunk fit
+    pc_t = ss.HdrfCarry(n, K, use_kernel=True, vmem_budget=tight)
+    pc_o = ss.HdrfCarry(n, K, use_kernel=False)
+    ca, pa = pc_t.step_chunk(pc_t.init(), src, dst, jnp.int32(E))
+    cb, pb = pc_o.step_chunk(pc_o.init(), src, dst, jnp.int32(E))
+    assert np.array_equal(np.asarray(pa), np.asarray(pb))
+    _tree_bitwise(ca, cb, "tiled ladder")
+
+
+def test_dispatch_count_one_per_chunk():
+    """The acceptance contract on CPU: 1 pallas_call per chunk (the oracle
+    re-materializes the carry per edge inside its scan)."""
+    from repro.streaming import EdgeStream, run_carry
+
+    src, dst, n, _ = _graph(1)
+    E = int(src.shape[0])
+    chunk = 100
+    st = EdgeStream(src, dst, n, chunk_size=chunk)
+    ss.reset_dispatch_count()
+    run_carry(st, ss.GreedyCarry(n, K, use_kernel=True))
+    assert ss.dispatch_count() == -(-E // chunk)
+
+
+# --------------------------------------------------- compiled (accelerator)
+
+
+@pytest.mark.skipif(_ON_CPU, reason="compiled Pallas needs a TPU/GPU backend")
+@pytest.mark.parametrize("mode", ["greedy", "hdrf"])
+def test_scoring_scan_compiled_matches_oracle(mode):
+    """Accelerator lane: the compiled (non-interpret) megakernel against
+    the XLA oracle.  Skips cleanly on CPU-only hosts."""
+    src, dst, n, _ = _graph(0)
+    if src.shape[0] == 0:
+        return
+    carry = _scoring_carry(mode, n)
+    ref_carry, ref_parts = _scoring_step_ref(mode, carry, src, dst)
+    if mode == "greedy":
+        parts, load, rep, _ = ss.scoring_scan(
+            src, dst, carry[0], carry[1], mode=mode, interpret=False)
+        out_carry = (load, rep)
+    else:
+        parts, load, rep, pd = ss.scoring_scan(
+            src, dst, carry[0], carry[1], carry[2], carry[3], mode=mode,
+            interpret=False)
+        out_carry = (load, rep, pd, carry[3], carry[4])
+    assert np.array_equal(np.asarray(parts), np.asarray(ref_parts))
+    _tree_bitwise(out_carry, ref_carry, mode)
+
+
+@pytest.mark.skipif(_ON_CPU, reason="compiled Pallas needs a TPU/GPU backend")
+def test_cluster_scan_compiled_matches_oracle():
+    from repro.core.clustering import compute_degrees, init_state
+
+    src, dst, n, _ = _graph(1)
+    if src.shape[0] == 0:
+        return
+    deg = compute_degrees(src, dst, n)
+    s0 = tuple(init_state(n))
+    kw = dict(xi=3, kappa=max(int(src.shape[0]) // 2, 2))
+    ref = ss.cluster_chunk_oracle(s0, src, dst, deg, **kw)
+    out = ss.cluster_scan(s0, src, dst, deg, interpret=False, **kw)
+    _tree_bitwise(out, ref, "cluster compiled")
