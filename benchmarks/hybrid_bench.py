@@ -1,0 +1,108 @@
+"""Hybrid quality/memory frontier: RF vs host budget (repro.hybrid).
+
+HEP's central claim, reproduced at container scale: between the pure-
+streaming partitioner (budget 0) and the fully in-memory one (budget ≥
+edge list) lies a *frontier* — each extra byte of resident core buys
+replication quality.  The sweep runs ``run_hybrid`` on a hub-heavy block
+R-MAT at budget fractions 0 → 100 % of the core-record cost of the whole
+edge list and gates three invariants the driver guarantees by
+construction:
+
+- **monotone**: RF is non-increasing as the budget grows (a larger
+  budget evaluates a superset of refinement candidates with an identical
+  prefix);
+- **dominates streaming**: hybrid RF ≤ pure-streaming RF at every
+  non-zero budget rung (the incumbent is the pure-streaming run itself);
+- **caged**: the peak ``HostBudget`` high-water mark never exceeds the
+  requested budget (hard-cap accounting with ladder retreat).
+
+Writes ``BENCH_hybrid.json`` (own-file idiom like ``kernels_bench``)
+with the full frontier, and emits one ROWS line per rung.
+"""
+
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+import numpy as np
+
+from .common import emit, timed
+
+from repro.core.s5p import S5PConfig
+from repro.graphs import block_rmat_graph
+from repro.hybrid import CORE_EDGE_BYTES, run_hybrid
+
+BENCH_JSON = "BENCH_hybrid.json"
+
+# budget rungs as fractions of the whole edge list's core-record cost
+FRACTIONS = (0.0, 0.05, 0.15, 0.3, 0.6, 1.0)
+
+
+def sweep(quick: bool = True):
+    scale = 7 if quick else 9
+    src, dst, n = block_rmat_graph(block_scale=scale, n_blocks=8,
+                                   edge_factor=8, seed=0)
+    E = int(np.asarray(src).shape[0])
+    cfg = S5PConfig(k=8, seed=0, chunk_size=1 << 14)
+    full_bytes = E * CORE_EDGE_BYTES * 2  # headroom past every record
+
+    rows = []
+    prev_rf = None
+    rf_streaming = None
+    for frac in FRACTIONS:
+        budget = int(frac * full_bytes)
+        res, us = timed(run_hybrid, (src, dst, n), cfg, host_budget=budget)
+        if rf_streaming is None:
+            rf_streaming = res.rf_streaming
+        # --- the three frontier gates ---
+        if budget > 0:
+            assert res.peak_budget_bytes <= budget, (
+                f"budget gate: peak {res.peak_budget_bytes} > {budget}")
+            assert res.rf <= rf_streaming + 1e-9, (
+                f"dominance gate: {res.rf} > streaming {rf_streaming}")
+        if prev_rf is not None:
+            assert res.rf <= prev_rf + 1e-9, (
+                f"monotone gate: {res.rf} > {prev_rf} at frac={frac}")
+        prev_rf = res.rf
+        rows.append({
+            "budget_fraction": frac,
+            "budget_bytes": budget,
+            "mode": res.mode,
+            "xi_star": int(res.xi_star) if res.mode != "streaming" else None,
+            "core_edges": res.core_edges,
+            "core_fraction": round(res.core_edges / max(E, 1), 4),
+            "rf": round(res.rf, 6),
+            "rf_streaming": round(res.rf_streaming, 6),
+            "balance": round(res.balance, 4),
+            "peak_budget_bytes": res.peak_budget_bytes,
+            "accepted_levels": list(res.accepted_levels),
+            "game_rounds": res.game_rounds,
+            "plan_est_core_edges": res.plan.est_core_edges,
+            "seconds": round(us / 1e6, 2),
+        })
+        emit(f"hybrid/frontier/{frac:g}", us,
+             f"mode={res.mode},rf={res.rf:.4f},"
+             f"core={res.core_edges},peak={res.peak_budget_bytes}B")
+
+    doc = {
+        "schema": 1,
+        "graph": {"kind": "block_rmat", "scale": scale, "n_blocks": 8,
+                  "edge_factor": 8, "edges": E, "vertices": int(n)},
+        "k": cfg.k,
+        "core_edge_bytes": CORE_EDGE_BYTES,
+        "gates": {
+            "monotone_rf": True,
+            "hybrid_le_streaming": True,
+            "peak_le_budget": True,
+        },
+        "rows": rows,
+    }
+    Path(BENCH_JSON).write_text(json.dumps(doc, indent=2, sort_keys=True)
+                                + "\n")
+    emit("hybrid/json", 0.0, f"wrote={BENCH_JSON},rows={len(rows)}")
+    return rows
+
+
+def run(quick: bool = True):
+    sweep(quick)

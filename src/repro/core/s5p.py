@@ -77,6 +77,10 @@ class S5PConfig:
     # gate (falls back to REPRO_VMEM_BUDGET env, then 8 MiB)
     use_kernel: bool | None = None
     vmem_budget: int | None = None
+    # hybrid memory-budget mode (repro.hybrid): host bytes the partitioner
+    # may spend on a resident high-degree core (HEP regime).  None/0 keeps
+    # the pure-streaming pipeline; run_hybrid's host_budget= overrides.
+    host_budget: int | None = None
 
 
 @dataclasses.dataclass

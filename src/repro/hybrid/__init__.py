@@ -1,0 +1,53 @@
+"""Memory-budget hybrid partitioner — in-memory skew core + streamed tail.
+
+The HEP regime (Mayer & Jacobsen, "Hybrid Edge Partitioner"; PAPERS.md):
+spend a bounded slice of host memory on an in-memory partition of the
+high-degree core — the skewed minority of edges that dominates replication
+quality — and stream the low-degree remainder.  This package allocates a
+caller-supplied **byte budget** between the two halves the repo already
+owns (the Θ/ξ skew separator + CMS sketches, and the out-of-core
+`ShardedEdgeStream` with `HostBudget` accounting):
+
+- :mod:`planner` — :func:`plan_budget` sizes the resident core online
+  from a CMS degree sketch and picks the core threshold ξ* that fits the
+  budget (budget 0 ⇒ pure streaming; a budget covering the whole edge
+  list ⇒ fully in-memory);
+- :mod:`refiner` — the retained core is refined with multiple passes of
+  the masked Stackelberg game (the game reused as the in-memory NE-style
+  refiner) and re-scored through the megakernel-backed Alg. 3 carry;
+- :mod:`driver` — :func:`run_hybrid` makes the budget-bounded pass:
+  core edges spill to a resident buffer charged against a hard-capped
+  :class:`~repro.streaming.HostBudget`, tail edges stream through the
+  existing Alg. 3 carry seeded with the core's load vector, and the
+  result packs into a standard warm bundle so incremental deltas,
+  elastic resharding and serving all keep working.
+
+One knob — ``S5PConfig.host_budget`` / ``--host-budget`` — sweeps
+pure-streaming → hybrid → fully in-memory.
+"""
+
+from .planner import (  # noqa: F401
+    BudgetPlan,
+    CORE_EDGE_BYTES,
+    build_degree_sketch,
+    plan_budget,
+)
+from .refiner import TailAssignCarry, core_move_mask, place_core  # noqa: F401
+from .driver import (  # noqa: F401
+    HybridResult,
+    HybridServingChain,
+    run_hybrid,
+)
+
+__all__ = [
+    "BudgetPlan",
+    "CORE_EDGE_BYTES",
+    "build_degree_sketch",
+    "plan_budget",
+    "TailAssignCarry",
+    "core_move_mask",
+    "place_core",
+    "HybridResult",
+    "HybridServingChain",
+    "run_hybrid",
+]

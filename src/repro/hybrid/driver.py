@@ -1,0 +1,354 @@
+"""``run_hybrid`` — one budget-bounded pass: resident core + streamed tail.
+
+Control flow (all passes replay the same EdgeStream):
+
+1. **baseline** — the unmodified pure-streaming S5P pipeline runs first;
+   its parts/c2p/load are the incumbent.  A zero budget returns exactly
+   this (bit-identical to :func:`~repro.core.s5p.s5p_partition`).
+2. **plan** — :func:`~repro.hybrid.planner.plan_budget` picks ξ* and the
+   refinement ladder from a CMS degree sketch (budget-independent
+   thresholds, see planner docs).
+3. **spill** — core edges (min endpoint degree > ξ*) spill to a resident
+   :class:`~repro.hybrid.refiner.CoreBuffer`, every allocation charged
+   against a **hard-capped** :class:`~repro.streaming.HostBudget`; a
+   :class:`~repro.streaming.BudgetExceededError` (sketch under-estimate)
+   retreats ξ* one ladder level up and re-spills.
+4. **refine** — for each ladder level ℓ (descending): the masked
+   Stackelberg game frees the clusters level-ℓ core edges touch, and the
+   candidate map is scored by *composing* the placement — core records
+   placed resident first (megakernel Alg. 3), then the tail streamed
+   through :class:`~repro.hybrid.refiner.TailAssignCarry` seeded with the
+   core's load vector.  A candidate is kept iff its composed RF strictly
+   improves the incumbent.
+5. **bundle** — the winner packs into a standard warm
+   :func:`~repro.incremental.pack_warm_bundle`, so incremental deltas,
+   deletions, elastic resharding and the serving loop all consume a
+   hybrid run exactly like a cold one.
+
+Monotonicity by construction: ladder levels, their games and their
+seeds depend only on the level's position in the budget-independent
+ladder — a larger budget evaluates a strict superset of candidates with
+an identical prefix, and accept-iff-better can only keep or improve the
+incumbent.  Hence RF(budget) is non-increasing and every non-zero rung
+is ≤ the pure-streaming RF, deterministically, which is exactly what
+``benchmarks/hybrid_bench.py`` gates on.
+"""
+
+from __future__ import annotations
+
+import time
+from typing import Any, NamedTuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from ..core import game as _game
+from ..core.metrics import load_balance, replication_factor
+from ..core.s5p import S5PConfig, S5POutput, s5p_partition
+from ..incremental.pipeline import (
+    IncrementalResult,
+    pack_warm_bundle,
+    s5p_apply_delta,
+)
+from ..streaming import BudgetExceededError, HostBudget, run_parallel
+from ..streaming.engine import as_stream
+from .planner import PLAN_FIXED_BYTES, BudgetPlan, plan_budget
+from .refiner import CoreBuffer, TailAssignCarry, core_move_mask, place_core, \
+    refine_core_game
+
+__all__ = ["HybridResult", "HybridServingChain", "run_hybrid"]
+
+
+class HybridResult(NamedTuple):
+    """What one hybrid run produced (and what pure streaming would have)."""
+
+    parts: np.ndarray          # (E,) int32, arrival order
+    k: int
+    mode: str                  # plan mode after spill retries
+    plan: BudgetPlan
+    xi_star: int               # effective core threshold after retries
+    rf: float
+    balance: float
+    rf_streaming: float        # the pure-streaming incumbent's quality
+    balance_streaming: float
+    accepted_levels: tuple[int, ...]  # ladder levels that improved RF
+    game_rounds: int           # masked-game rounds spent refining
+    core_edges: int            # resident records actually spilled
+    peak_budget_bytes: int     # HostBudget high-water mark (≤ budget)
+    budget_bytes: int          # the requested cap
+    bundle: dict               # standard warm bundle (pack_warm_bundle)
+    timings: dict[str, float]
+
+
+def _materialize(stream_or_edges):
+    """(src, dst, n, stream) from an EdgeStream / OOC stream / triple."""
+    s = stream_or_edges
+    if isinstance(s, tuple):
+        src, dst, n = s
+        return np.asarray(src, np.int32), np.asarray(dst, np.int32), int(n), None
+    if hasattr(s, "arrival_arrays"):  # ShardedEdgeStream pages from disk
+        src, dst = s.arrival_arrays()
+    else:
+        src, dst = s.src, s.dst
+    return (np.asarray(src, np.int32), np.asarray(dst, np.int32),
+            int(s.n_vertices), s)
+
+
+def _spill_core(src, dst, degrees, v2c_h, v2c_t, xi: int, threshold: int,
+                budget: HostBudget, chunk_size: int) -> tuple[CoreBuffer, int]:
+    """One bounded pass collecting core records, charging as it goes.
+
+    Returns ``(core, charged_bytes)``; on :class:`BudgetExceededError`
+    everything charged so far is released before re-raising, so the
+    caller can retreat to a stricter threshold with clean accounting.
+    """
+    E = int(src.shape[0])
+    cols: list[CoreBuffer] = []
+    charged = 0
+    try:
+        for start in range(0, E, max(int(chunk_size), 1)):
+            sl = slice(start, start + chunk_size)
+            s, d = src[sl], dst[sl]
+            du, dv = degrees[s], degrees[d]
+            dmin = np.minimum(du, dv).astype(np.int32)
+            m = (dmin > threshold) & (s != d)
+            if not m.any():
+                continue
+            is_head = (du > xi) & (dv > xi)
+            cu = np.where(is_head, v2c_h[s], v2c_t[s]).astype(np.int32)
+            cv = np.where(is_head, v2c_h[d], v2c_t[d]).astype(np.int32)
+            rec = CoreBuffer(
+                src=s[m], dst=d[m],
+                arrival=(start + np.nonzero(m)[0]).astype(np.int64),
+                cu=cu[m], cv=cv[m], deg_min=dmin[m], head=is_head[m])
+            budget.charge(rec.nbytes())
+            charged += rec.nbytes()
+            cols.append(rec)
+    except BudgetExceededError:
+        budget.release(charged)
+        raise
+    if not cols:
+        empty = CoreBuffer(*(np.zeros(0, dt) for dt in
+                             (np.int32, np.int32, np.int64, np.int32,
+                              np.int32, np.int32, bool)))
+        return empty, charged
+    return CoreBuffer(*(np.concatenate(f) for f in zip(*cols))), charged
+
+
+def run_hybrid(stream, config: S5PConfig, *,
+               host_budget: int | None = None) -> HybridResult:
+    """Partition under a host-memory budget: resident skew core + tail.
+
+    ``stream`` is an :class:`~repro.streaming.EdgeStream` (including the
+    out-of-core :class:`~repro.streaming.ShardedEdgeStream`) or an
+    ``(src, dst, n_vertices)`` triple.  ``host_budget`` (bytes) overrides
+    ``config.host_budget``; 0/None degrades to pure streaming, a budget
+    covering the whole edge list runs fully in-memory.
+    """
+    src, dst, n_vertices, es = _materialize(stream)
+    budget = host_budget if host_budget is not None else config.host_budget
+    budget = 0 if budget is None else max(int(budget), 0)
+    k = config.k
+    timings: dict[str, float] = {}
+
+    # ---- pass 0: the pure-streaming incumbent (bit-identical to s5p) ----
+    base = s5p_partition(src, dst, n_vertices, config, stream=es)
+    internals = base.aux.get("incremental")
+    if internals is None:
+        raise ValueError("hybrid run produced no pipeline state "
+                         "(no valid edges)")
+    res = internals["compact"]
+    degrees_np = np.asarray(internals["degrees"], np.int32)
+    v2c_h = np.asarray(res.v2c_h, np.int32)
+    v2c_t = np.asarray(res.v2c_t, np.int32)
+    C = int(res.n_clusters)
+
+    parts_best = np.asarray(base.parts, np.int32)
+    c2p_best = np.asarray(base.cluster_assignment, np.int32)
+    load_best = internals["load"]
+    rf_streaming = replication_factor(src, dst, parts_best,
+                                      n_vertices=n_vertices, k=k)
+    bal_streaming = load_balance(parts_best, k=k)
+    rf_best, bal_best = rf_streaming, bal_streaming
+
+    # ---- plan: size the resident core for the budget ----
+    t0 = time.perf_counter()
+    plan = plan_budget(
+        src, dst, n_vertices, budget, stream=es,
+        epsilon=config.cms_epsilon, nu=config.cms_nu, seed=config.seed,
+        chunk_size=config.chunk_size, num_streams=config.num_streams,
+        super_chunk=config.super_chunk)
+    timings["plan"] = time.perf_counter() - t0
+
+    acct = HostBudget(limit_bytes=budget if budget > 0 else None)
+
+    def _result(mode, xi_star, ladder_used, accepted, rounds, core_edges,
+                charged):
+        bundle = pack_warm_bundle(
+            src, dst, n_vertices, config,
+            state=internals["cluster_state"], res=res,
+            degrees=internals["degrees"], sizes=internals["sizes"],
+            pair_a=internals["pair_a"], pair_b=internals["pair_b"],
+            pair_w=internals["pair_w"], c2p=c2p_best, parts=parts_best,
+            load=load_best, xi=base.xi, kappa=base.kappa,
+            sketch=base.aux.get("sketch"))
+        acct.release(charged)  # resident records die with this frame
+        return HybridResult(
+            parts=parts_best, k=k, mode=mode, plan=plan,
+            xi_star=int(xi_star), rf=float(rf_best), balance=float(bal_best),
+            rf_streaming=float(rf_streaming),
+            balance_streaming=float(bal_streaming),
+            accepted_levels=tuple(accepted), game_rounds=int(rounds),
+            core_edges=int(core_edges),
+            peak_budget_bytes=int(acct.peak_bytes), budget_bytes=budget,
+            bundle=bundle, timings=timings)
+
+    if not plan.resident or C == 0:
+        return _result("streaming", plan.xi_star, (), (), 0, 0, 0)
+
+    # ---- spill the core, retreating up the ladder on a hard-cap hit ----
+    t0 = time.perf_counter()
+    ladder = list(plan.ladder)
+    core = None
+    charged = 0
+    acct.charge(PLAN_FIXED_BYTES)
+    charged += PLAN_FIXED_BYTES
+    while ladder:
+        try:
+            core, spilled = _spill_core(
+                src, dst, degrees_np, v2c_h, v2c_t, base.xi, ladder[-1],
+                acct, config.chunk_size)
+            charged += spilled
+            break
+        except BudgetExceededError:
+            ladder.pop()  # strictly fewer resident edges next try
+            core = None
+    timings["spill"] = time.perf_counter() - t0
+    if core is None or core.n_edges == 0:
+        return _result("streaming", plan.xi_star, (), (), 0, 0, charged)
+    xi_star = ladder[-1]
+    mode = "in_memory" if xi_star == 0 else "hybrid"
+
+    # ---- refinement ladder: masked game + composed re-scoring ----
+    t0 = time.perf_counter()
+    comb_is_head = (np.ones(C, bool) if config.one_stage
+                    else np.arange(C) < res.n_head)
+    inputs = _game.GameInputs(
+        sizes=jnp.asarray(internals["sizes"], jnp.float32),
+        pair_a=jnp.asarray(internals["pair_a"]),
+        pair_b=jnp.asarray(internals["pair_b"]),
+        pair_w=jnp.asarray(internals["pair_w"], jnp.float32),
+        n_head=res.n_head, k=k)
+    accepted: list[int] = []
+    rounds = 0
+    for i, level in enumerate(ladder):
+        sub = core.select(np.asarray(core.deg_min) > level)
+        if sub.n_edges == 0:
+            continue
+        move_mask = core_move_mask(sub, C)
+        if not move_mask.any():
+            continue
+        game = refine_core_game(
+            inputs, C, c2p_best,
+            leader_mask=comb_is_head, move_mask=move_mask,
+            rounds=config.refine_rounds or config.game_max_rounds,
+            accept_prob=config.game_accept_prob,
+            seed=config.seed + 101 + i,
+            batch_size=config.game_batch_size)
+        rounds += int(game.rounds)
+        c2p_cand = np.asarray(game.assignment, np.int32)
+        # composed placement: core resident first, tail streamed after,
+        # both against one shared capacity L
+        core_parts, core_load = place_core(
+            sub, c2p_cand, k, base.max_load, n_vertices,
+            chunk_size=config.chunk_size, use_kernel=config.use_kernel,
+            vmem_budget=config.vmem_budget)
+        tail = TailAssignCarry(
+            k, base.max_load, jnp.asarray(c2p_cand),
+            degrees=degrees_np, v2c_h=v2c_h, v2c_t=v2c_t,
+            xi=base.xi, core_threshold=level,
+            use_kernel=config.use_kernel, vmem_budget=config.vmem_budget)
+        tail_stream = as_stream(src, dst, stream=es,
+                                chunk_size=config.chunk_size)
+        tail_parts, tail_load = run_parallel(
+            tail_stream, tail, num_streams=config.num_streams,
+            super_chunk=config.super_chunk, carry=core_load)
+        parts_cand = np.asarray(tail_parts, np.int32).copy()
+        parts_cand[sub.arrival] = core_parts
+        rf_cand = replication_factor(src, dst, parts_cand,
+                                     n_vertices=n_vertices, k=k)
+        if rf_cand < rf_best - 1e-12:
+            rf_best = rf_cand
+            bal_best = load_balance(parts_cand, k=k)
+            parts_best, c2p_best, load_best = parts_cand, c2p_cand, tail_load
+            accepted.append(int(level))
+    timings["refine"] = time.perf_counter() - t0
+
+    return _result(mode, xi_star, tuple(ladder), accepted, rounds,
+                   core.n_edges, charged)
+
+
+class _HybridStep(NamedTuple):
+    """The first serving step of a hybrid chain (duck-typed record)."""
+
+    rf: float
+    balance: float
+    refined: bool = False
+    filling: bool = False
+
+
+class HybridServingChain:
+    """Serve a hybrid bundle through the standard ServingController.
+
+    Duck-typed like :class:`~repro.incremental.S5PWindowChain`: the first
+    ``step()`` publishes the hybrid partition itself; each later step
+    absorbs one queued insertion batch through the ordinary warm-bundle
+    delta path — proof by construction that a hybrid run's bundle is a
+    first-class citizen of the incremental/serving stack.
+    """
+
+    def __init__(self, result: HybridResult, config: S5PConfig, src, dst,
+                 n_vertices: int, deltas=()):
+        self.bundle: dict | None = dict(result.bundle)
+        self.config = config
+        self.n_vertices = int(n_vertices)
+        self._full_src = np.asarray(src, np.int32)
+        self._full_dst = np.asarray(dst, np.int32)
+        self._first = _HybridStep(rf=result.rf, balance=result.balance)
+        self._emitted = False
+        self._deltas = list(deltas)
+
+    @property
+    def lo(self) -> int:
+        return 0
+
+    @property
+    def hi(self) -> int:
+        return int(self.bundle["stream_pos"])
+
+    def live_partition(self):
+        b = self.bundle
+        arrival = np.asarray(b["arrival"], np.int64)
+        alive = np.asarray(b["alive"], bool)
+        return (self._full_src[arrival[alive]],
+                self._full_dst[arrival[alive]],
+                np.asarray(b["parts"], np.int32)[alive])
+
+    def step(self) -> "_HybridStep | IncrementalResult | None":
+        if not self._emitted:
+            self._emitted = True
+            return self._first
+        if not self._deltas:
+            return None
+        dsrc, ddst = self._deltas.pop(0)
+        pos = int(self.bundle["stream_pos"])
+        self._full_src = np.concatenate(
+            [self._full_src, np.asarray(dsrc, np.int32)])
+        self._full_dst = np.concatenate(
+            [self._full_dst, np.asarray(ddst, np.int32)])
+        self.n_vertices = max(
+            self.n_vertices,
+            int(max(self._full_src.max(), self._full_dst.max())) + 1)
+        self.bundle, rec = s5p_apply_delta(
+            self.bundle, self.config, self._full_src, self._full_dst, pos)
+        return rec

@@ -1,0 +1,176 @@
+"""In-memory core refinement + the core-aware streamed tail carry.
+
+Two halves of the hybrid composition live here:
+
+- :func:`place_core` / :func:`refine_core_game` — the retained
+  high-degree core is held resident and refined with passes of the
+  existing masked Stackelberg game (``core.game`` reused as the
+  in-memory NE-style refiner: only clusters the core level touches may
+  deviate, every other player is frozen context), each candidate
+  re-scored through the megakernel-backed Alg. 3 carry over the resident
+  records;
+- :class:`TailAssignCarry` — the streamed remainder.  It is the standard
+  :class:`~repro.core.postprocess.AssignCarry` (same O(k) load carry,
+  same SUM merge, so ``run_parallel`` lanes work unchanged) except that
+  the per-edge extras (head flag, endpoint clusters) are *derived inside
+  the chunk step* from resident O(|V|) tables instead of riding the
+  stream, and edges belonging to the resident core are masked to padding
+  self-loops — they were already placed in-memory, so the tail pass must
+  neither place nor load-charge them.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from ..core import game as _game
+from ..core.postprocess import AssignCarry
+from ..streaming import EdgeStream, run_carry
+
+__all__ = [
+    "CoreBuffer",
+    "TailAssignCarry",
+    "core_move_mask",
+    "place_core",
+    "refine_core_game",
+]
+
+
+class CoreBuffer(NamedTuple):
+    """Resident records of the spilled high-degree core (host numpy).
+
+    ``arrival`` is each edge's index in the *arrival-ordered* edge list,
+    so core placements scatter straight into the final parts vector;
+    ``deg_min`` (min endpoint degree) lets one spill at ξ* serve every
+    refinement level ℓ ≥ ξ* by masking (``deg_min > ℓ``).
+    """
+
+    src: np.ndarray       # (M,) int32
+    dst: np.ndarray       # (M,) int32
+    arrival: np.ndarray   # (M,) int64 — position in arrival order
+    cu: np.ndarray        # (M,) int32 — endpoint cluster (combined id)
+    cv: np.ndarray        # (M,) int32
+    deg_min: np.ndarray   # (M,) int32 — min(deg(u), deg(v))
+    head: np.ndarray      # (M,) bool  — Alg. 3 head-edge flag
+
+    @property
+    def n_edges(self) -> int:
+        return int(self.src.shape[0])
+
+    def nbytes(self) -> int:
+        return sum(int(a.nbytes) for a in self)
+
+    def select(self, mask: np.ndarray) -> "CoreBuffer":
+        return CoreBuffer(*(a[mask] for a in self))
+
+
+class TailAssignCarry(AssignCarry):
+    """Alg. 3 over the streamed tail of a hybrid run.
+
+    Extras are computed per chunk from resident tables (exact degrees +
+    the compacted head/tail cluster maps — O(|V|) pipeline state the pure
+    streaming run keeps anyway), and core edges (both endpoint degrees
+    above ``core_threshold``) are rewritten to ``(0, 0)`` self-loops so
+    the underlying scan treats them as padding: part −1, no load charge.
+    The merge contract is inherited (load vector, SUM), so S-way parallel
+    ingest over the tail works exactly like the pure-streaming pass.
+    """
+
+    def __init__(self, k: int, max_load: int, c2p, *, degrees, v2c_h,
+                 v2c_t, xi: int, core_threshold: int,
+                 use_kernel: bool | None = None,
+                 vmem_budget: int | None = None):
+        super().__init__(k, max_load, c2p, use_kernel=use_kernel,
+                         vmem_budget=vmem_budget)
+        self.degrees = jnp.asarray(degrees, jnp.int32)
+        self.v2c_h = jnp.asarray(v2c_h, jnp.int32)
+        self.v2c_t = jnp.asarray(v2c_t, jnp.int32)
+        self.xi = jnp.int32(xi)
+        self.core_threshold = jnp.int32(core_threshold)
+
+    def _tag_chunk(self, src, dst):
+        deg_u = self.degrees[src]
+        deg_v = self.degrees[dst]
+        is_core = (deg_u > self.core_threshold) & (deg_v > self.core_threshold)
+        h = (deg_u > self.xi) & (deg_v > self.xi)
+        cu = jnp.where(h, self.v2c_h[src], self.v2c_t[src])
+        cv = jnp.where(h, self.v2c_h[dst], self.v2c_t[dst])
+        return is_core, h, jnp.maximum(cu, 0), jnp.maximum(cv, 0)
+
+    def step_chunk(self, carry, src, dst, n_valid, *extras):
+        is_core, h, cu, cv = self._tag_chunk(src, dst)
+        zero = jnp.zeros_like(src)
+        src = jnp.where(is_core, zero, src)
+        dst = jnp.where(is_core, zero, dst)
+        return super().step_chunk(carry, src, dst, n_valid, h, cu, cv)
+
+    def retract_chunk(self, carry, src, dst, n_valid, parts, *extras):
+        is_core, _, _, _ = self._tag_chunk(src, dst)
+        zero = jnp.zeros_like(src)
+        src = jnp.where(is_core, zero, src)
+        dst = jnp.where(is_core, zero, dst)
+        return super().retract_chunk(carry, src, dst, n_valid, parts)
+
+
+def place_core(core: CoreBuffer, c2p, k: int, max_load: int,
+               n_vertices: int, *, chunk_size: int = 1 << 16,
+               use_kernel: bool | None = None,
+               vmem_budget: int | None = None):
+    """Place the resident core records under Alg. 3 (megakernel-backed).
+
+    Returns ``(parts, load)`` for the core edges in buffer order — the
+    load vector then seeds the tail pass so the composed placement
+    respects one shared capacity L across both halves.
+    """
+    if core.n_edges == 0:
+        return (np.zeros(0, np.int32),
+                jnp.zeros((int(k),), jnp.int32))
+    stream = EdgeStream(core.src, core.dst, n_vertices,
+                        chunk_size=min(chunk_size, max(core.n_edges, 1)))
+    pc = AssignCarry(k, max_load, jnp.asarray(c2p, jnp.int32),
+                     use_kernel=use_kernel, vmem_budget=vmem_budget)
+    parts, load = run_carry(
+        stream, pc,
+        jnp.asarray(core.head),
+        jnp.maximum(jnp.asarray(core.cu, jnp.int32), 0),
+        jnp.maximum(jnp.asarray(core.cv, jnp.int32), 0))
+    return np.asarray(parts, np.int32), load
+
+
+def core_move_mask(core: CoreBuffer, n_clusters: int) -> np.ndarray:
+    """Movable-player mask: clusters with at least one resident core edge.
+
+    The refinement game at a ladder level frees exactly the clusters that
+    level's core touches; the rest of the equilibrium is frozen context —
+    the same "refine only what was touched" shape the incremental path
+    uses for delta refinement.
+    """
+    mask = np.zeros(int(n_clusters), bool)
+    for c in (core.cu, core.cv):
+        c = np.asarray(c)
+        c = c[(c >= 0) & (c < n_clusters)]
+        mask[c] = True
+    return mask
+
+
+def refine_core_game(inputs: "_game.GameInputs", n_clusters: int, c2p,
+                     *, leader_mask, move_mask, rounds: int,
+                     accept_prob: float, seed: int,
+                     batch_size: int) -> "_game.GameResult":
+    """One masked-game refinement pass over the resident core's clusters.
+
+    Thin wrapper over :func:`repro.core.game.run_game`: ``assign0`` is
+    the incumbent map, only ``move_mask`` players deviate, and the
+    leader/follower split comes from the combined-id head mask — the
+    two-stage Stackelberg structure is preserved inside the core.
+    """
+    bs = _game.default_batch_size(batch_size, n_clusters)
+    return _game.run_game(
+        inputs, n_clusters,
+        batch_size=bs, max_rounds=max(int(rounds), 1),
+        accept_prob=accept_prob, assign0=np.asarray(c2p, np.int32),
+        seed=seed, leader_mask=np.asarray(leader_mask, bool),
+        move_mask=np.asarray(move_mask, bool))

@@ -88,6 +88,7 @@ from .pipeline import (  # noqa: F401
     compact_bundle,
     compact_edge_slots,
     ensure_slot_index,
+    pack_warm_bundle,
     s5p_apply_delta,
     s5p_apply_deletion,
     s5p_cold_bundle,
@@ -108,6 +109,7 @@ __all__ = [
     "RefreshDecision",
     "IncrementalResult",
     "s5p_cold_bundle",
+    "pack_warm_bundle",
     "s5p_apply_delta",
     "s5p_apply_deletion",
     "s5p_cold_restart",

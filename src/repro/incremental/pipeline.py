@@ -83,6 +83,7 @@ from .delta import DeltaStream, grow_carry, run_incremental_carry
 from .drift import DriftMonitor
 
 __all__ = ["IncrementalResult", "s5p_identity_config", "s5p_cold_bundle",
+           "pack_warm_bundle",
            "s5p_apply_delta", "s5p_apply_deletion", "compact_bundle",
            "compact_edge_slots", "ensure_slot_index", "s5p_cold_restart",
            "JOURNAL_PREFIX"]
@@ -153,16 +154,36 @@ def s5p_cold_bundle(src, dst, n_vertices: int, config: S5PConfig, *,
                     stream=None) -> tuple[S5POutput, dict]:
     """Run S5P cold and pack the warm-start bundle from its internals."""
     out = s5p_partition(src, dst, n_vertices, config, stream=stream)
-    src = np.asarray(src, np.int32)
-    dst = np.asarray(dst, np.int32)
     internals = out.aux.get("incremental")
     if internals is None:  # degenerate no-valid-edge graphs skip the passes
         raise ValueError("cold run produced no pipeline state to carry "
                          "(no valid edges)")
-    state: _cl.ClusterState = internals["cluster_state"]
-    res: _cl.ClusterResult = internals["compact"]
-    degrees = np.asarray(internals["degrees"], np.int32)
-    sketch = out.aux.get("sketch")
+    bundle = pack_warm_bundle(
+        src, dst, n_vertices, config,
+        state=internals["cluster_state"], res=internals["compact"],
+        degrees=internals["degrees"], sizes=internals["sizes"],
+        pair_a=internals["pair_a"], pair_b=internals["pair_b"],
+        pair_w=internals["pair_w"], c2p=out.cluster_assignment,
+        parts=out.parts, load=internals["load"], xi=out.xi,
+        kappa=out.kappa, sketch=out.aux.get("sketch"))
+    return out, bundle
+
+
+def pack_warm_bundle(src, dst, n_vertices: int, config: S5PConfig, *,
+                     state: _cl.ClusterState, res: _cl.ClusterResult,
+                     degrees, sizes, pair_a, pair_b, pair_w, c2p, parts,
+                     load, xi: int, kappa: int, sketch=None) -> dict:
+    """Pack pipeline internals + a final (c2p, parts, load) into the flat
+    warm-start carry bundle.
+
+    Shared by the cold run (:func:`s5p_cold_bundle`) and the hybrid
+    memory-budget driver (:func:`repro.hybrid.run_hybrid`), whose refined
+    assignment replaces the cold game's — everything downstream (deltas,
+    deletions, resharding, serving snapshots) treats the two identically.
+    """
+    src = np.asarray(src, np.int32)
+    dst = np.asarray(dst, np.int32)
+    degrees = np.asarray(degrees, np.int32)
 
     v2c_h = np.asarray(state.v2c_h)
     v2c_t = np.asarray(state.v2c_t)
@@ -174,8 +195,8 @@ def s5p_cold_bundle(src, dst, n_vertices: int, config: S5PConfig, *,
     comb_is_head = (np.ones(C, bool) if config.one_stage
                     else np.arange(C) < res.n_head)
 
-    parts = np.asarray(out.parts, np.int32)
-    is_head_e = (degrees[src] > out.xi) & (degrees[dst] > out.xi)
+    parts = np.asarray(parts, np.int32)
+    is_head_e = (degrees[src] > xi) & (degrees[dst] > xi)
     comb_h = np.asarray(res.v2c_h)
     comb_t = np.asarray(res.v2c_t)
     e_cu = np.where(is_head_e, comb_h[src], comb_t[src]).astype(np.int32)
@@ -208,12 +229,12 @@ def s5p_cold_bundle(src, dst, n_vertices: int, config: S5PConfig, *,
         "raw2comb_h": raw2comb_h,
         "raw2comb_t": raw2comb_t,
         "comb_is_head": comb_is_head,
-        "sizes": np.asarray(internals["sizes"], np.float32),
-        "pair_a": np.asarray(internals["pair_a"], np.int32),
-        "pair_b": np.asarray(internals["pair_b"], np.int32),
-        "pair_w": np.asarray(internals["pair_w"], np.float32),
-        "c2p": np.asarray(out.cluster_assignment, np.int32),
-        "load": np.asarray(internals["load"], np.int32),
+        "sizes": np.asarray(sizes, np.float32),
+        "pair_a": np.asarray(pair_a, np.int32),
+        "pair_b": np.asarray(pair_b, np.int32),
+        "pair_w": np.asarray(pair_w, np.float32),
+        "c2p": np.asarray(c2p, np.int32),
+        "load": np.asarray(load, np.int32),
         "parts": parts,
         "edge_cu": e_cu,
         "edge_cv": e_cv,
@@ -233,15 +254,15 @@ def s5p_cold_bundle(src, dst, n_vertices: int, config: S5PConfig, *,
         "journal_valid": np.bool_(False),
         "journal_pos": np.int64(-1),
         "journal_slots": np.int64(-1),
-        "xi": np.int32(out.xi),
-        "kappa": np.int32(out.kappa),
+        "xi": np.int32(xi),
+        "kappa": np.int32(kappa),
         "rf_baseline": np.float64(rf),
         "balance_baseline": np.float64(bal),
     }
     if sketch is not None:
         bundle["theta_table"] = np.asarray(sketch.table)
         bundle["theta_seeds"] = np.asarray(sketch.seeds)
-    return out, bundle
+    return bundle
 
 
 # ---------------------------------------------------------------------------

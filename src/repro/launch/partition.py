@@ -119,6 +119,29 @@ def write_shards_cli(graph: str, out_dir: str, shard_edges: int,
     return str(mpath)
 
 
+_BYTE_SUFFIXES = {"K": 1 << 10, "M": 1 << 20, "G": 1 << 30, "T": 1 << 40}
+
+
+def parse_bytes(spec: str) -> int:
+    """``--host-budget`` spec → bytes: plain int, or ``512M`` / ``2G`` /
+    ``64KB`` (binary suffixes, case-insensitive, optional trailing B)."""
+    s = str(spec).strip().upper()
+    if s.endswith("B") and len(s) > 1 and not s[:-1].isdigit():
+        s = s[:-1]
+    mult = 1
+    if s and s[-1] in _BYTE_SUFFIXES:
+        mult = _BYTE_SUFFIXES[s[-1]]
+        s = s[:-1]
+    try:
+        value = int(s)
+    except ValueError:
+        raise argparse.ArgumentTypeError(
+            f"expected bytes like 1048576, 512M or 2G, got {spec!r}")
+    if value < 0:
+        raise argparse.ArgumentTypeError(f"byte budget must be >= 0, got {spec!r}")
+    return value * mult
+
+
 def _parse_delete(spec: str, n_edges: int, seed: int) -> np.ndarray:
     """``--delete`` spec → arrival indices.
 
@@ -156,11 +179,20 @@ def run(graph: str, k: int, partitioner: str = "s5p", seed: int = 0,
         refine_rounds: int | None = None,
         xi_refresh_threshold: float | None = None,
         window_edges: int | None = None, window_step: int | None = None,
-        resize_k: int | None = None):
+        resize_k: int | None = None, host_budget: int | None = None):
     for pname, v in (("k", k), ("chunk_size", chunk_size), ("window", window),
                      ("num_streams", num_streams), ("super_chunk", super_chunk)):
         if v < 1:
             raise ValueError(f"{pname} must be >= 1, got {v}")
+    if host_budget is not None:
+        if partitioner != "s5p":
+            raise ValueError("--host-budget drives the s5p hybrid pipeline; "
+                             "use --partitioner s5p")
+        if (compare or window_edges is not None or resize_k is not None
+                or resume_carry or delta or delete):
+            raise ValueError("--host-budget runs a single hybrid partition; "
+                             "drop --compare/--window-edges/--resize-k/"
+                             "carry-resume flags (--save-carry combines)")
     if resize_k is not None:
         if compare or window_edges is not None or resume_carry or delta or delete:
             raise ValueError("--resize-k runs a single cold partition "
@@ -200,6 +232,16 @@ def run(graph: str, k: int, partitioner: str = "s5p", seed: int = 0,
                 drift_threshold=drift_threshold,
                 refine_rounds=refine_rounds,
                 xi_refresh_threshold=xi_refresh_threshold)
+        finally:
+            if stream is not None:
+                stream.close()
+    if host_budget is not None:
+        try:
+            return _run_hybrid_cli(
+                src, dst, n, k, seed, host_budget, stream=stream,
+                chunk_size=chunk_size, ordering=ordering,
+                num_streams=num_streams, super_chunk=super_chunk,
+                refine_rounds=refine_rounds, save_carry=save_carry)
         finally:
             if stream is not None:
                 stream.close()
@@ -315,6 +357,47 @@ def _run_window_cli(src, dst, n, k, partitioner, seed, window_edges,
     print(f"[window] {len(history)} steps, {dt:.1f}s total "
           f"({dt / max(len(history), 1):.2f}s/step)")
     return history
+
+
+def _run_hybrid_cli(src, dst, n, k, seed, host_budget, *, stream,
+                    chunk_size, ordering, num_streams, super_chunk,
+                    refine_rounds, save_carry):
+    """``--host-budget`` flow: memory-budget hybrid partition (s5p).
+
+    Budget 0 degrades to the pure-streaming pipeline; a budget covering
+    the edge list runs fully in-memory; anything between holds the
+    high-degree core resident (``repro.hybrid``).  ``--save-carry``
+    persists the hybrid warm bundle exactly like a cold run's.
+    """
+    import dataclasses
+
+    from ..hybrid import run_hybrid
+
+    cfg = _s5p_cfg(k, seed, chunk_size, ordering, num_streams, super_chunk,
+                   None, refine_rounds, None)
+    cfg = dataclasses.replace(cfg, host_budget=int(host_budget))
+    t0 = time.time()
+    res = run_hybrid(stream if stream is not None else (src, dst, n), cfg)
+    dt = time.time() - t0
+    pct = res.peak_budget_bytes / max(host_budget, 1)
+    print(f"{'hybrid':10s} RF={res.rf:7.3f} balance={res.balance:5.2f} "
+          f"mode={res.mode} core={res.core_edges} "
+          f"streamRF={res.rf_streaming:7.3f} "
+          f"peak={res.peak_budget_bytes}B ({pct:.0%} of budget) "
+          f"rounds={res.game_rounds}  {dt:6.1f}s")
+    if save_carry:
+        from ..incremental.driver import _prefix_crc
+        from ..incremental import CarryStore, s5p_identity_config
+
+        E = int(np.asarray(src).shape[0])
+        store = CarryStore(save_carry)
+        path = store.save(
+            res.bundle, consumer="s5p", config=s5p_identity_config(cfg),
+            stream_pos=E,
+            extra_meta={"n_vertices": int(n),
+                        "prefix_crc": _prefix_crc(src, dst, E)})
+        print(f"[hybrid] carry→{path}")
+    return res
 
 
 def _run_resize_cli(src, dst, n, k, k_new, partitioner, seed, *,
@@ -490,6 +573,11 @@ def main():
                     help="elastic resize: cold-partition at --k, then "
                          "reshard the warm bundle onto this partition "
                          "count with bounded migration (s5p)")
+    ap.add_argument("--host-budget", type=parse_bytes, default=None,
+                    metavar="BYTES",
+                    help="memory-budget hybrid mode: host bytes spendable "
+                         "on a resident high-degree core (accepts 512M / "
+                         "2G suffixes; 0 = pure streaming; s5p only)")
     ap.add_argument("--xi-refresh-threshold", type=float, default=None,
                     help="relative ξ/κ drift past which a warm chain "
                          "reports needs_cold_restart (s5p; default from "
@@ -510,7 +598,7 @@ def main():
         refine_rounds=args.refine_rounds,
         xi_refresh_threshold=args.xi_refresh_threshold,
         window_edges=args.window_edges, window_step=args.window_step,
-        resize_k=args.resize_k)
+        resize_k=args.resize_k, host_budget=args.host_budget)
 
 
 if __name__ == "__main__":

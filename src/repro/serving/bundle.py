@@ -154,7 +154,7 @@ class BundleRegistry:
             yield bundle
         finally:
             if bundle is not None:
-                with self._lock:
+                with self._cond:
                     n = self._pins[bundle.version] - 1
                     if n:
                         self._pins[bundle.version] = n
@@ -163,6 +163,39 @@ class BundleRegistry:
                         cur = self._current
                         if cur is None or cur.version != bundle.version:
                             self.versions_retired += 1
+                    # a drop can shrink reader lag — wake throttled writers
+                    self._cond.notify_all()
+
+    def oldest_pinned_version(self) -> int:
+        """The oldest version a reader still pins (−1 when none are)."""
+        with self._lock:
+            return min(self._pins) if self._pins else -1
+
+    def reader_lag(self) -> int:
+        """Published-ahead distance: newest version − oldest pinned.
+
+        0 when nothing is published or no reader pins anything — an idle
+        registry never counts as lagging.
+        """
+        with self._lock:
+            if self._current is None or not self._pins:
+                return 0
+            return self._current.version - min(self._pins)
+
+    def wait_reader_lag(self, max_lag: int, timeout: float | None = None
+                        ) -> bool:
+        """Block until ``reader_lag() <= max_lag`` (writer backpressure).
+
+        Pin releases and publishes both notify, so a throttled ingest
+        thread wakes exactly when the slowest reader catches up.
+        """
+        def _ok():
+            if self._current is None or not self._pins:
+                return True
+            return self._current.version - min(self._pins) <= max_lag
+
+        with self._cond:
+            return self._cond.wait_for(_ok, timeout)
 
     def wait_version(self, version: int, timeout: float | None = None
                      ) -> bool:

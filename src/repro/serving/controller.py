@@ -172,19 +172,41 @@ class ServingController:
             return res
 
     # ---------------------------------------------------------- background
-    def start(self, *, throttle_s: float = 0.0) -> None:
+    def start(self, *, throttle_s: float = 0.0,
+              max_lag: int | None = None) -> None:
         """Run the churn schedule on a background ingest thread.
 
         ``throttle_s`` sleeps between events — a crude arrival-rate model
         that gives readers time to observe intermediate versions.
+
+        ``max_lag`` adds reader **backpressure**: before each event the
+        ingest thread blocks while the newest published version is more
+        than ``max_lag`` ahead of the oldest version a reader still pins
+        (``registry.wait_reader_lag``).  A slow reader therefore bounds
+        how far ingest can run ahead of it — the registry's double-buffer
+        degenerates to at most ``max_lag + 1`` retained versions instead
+        of unboundedly outpacing the reader.  Idle registries (no pins)
+        never throttle; ``stop()`` wakes a blocked wait via its poll
+        timeout.
         """
         if self._thread is not None:
             raise RuntimeError("controller already started")
+        if max_lag is not None and max_lag < 0:
+            raise ValueError("max_lag must be >= 0")
         self._stop.clear()
 
         def ingest():
             try:
                 while not self._stop.is_set():
+                    if max_lag is not None:
+                        # bounded waits so a stop() during backpressure
+                        # still terminates the thread promptly
+                        while not self._stop.is_set() and not \
+                                self.registry.wait_reader_lag(
+                                    max_lag, timeout=0.05):
+                            pass
+                        if self._stop.is_set():
+                            break
                     if self.step() is None:
                         break
                     if throttle_s:

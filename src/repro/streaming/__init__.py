@@ -91,6 +91,7 @@ from .engine import (  # noqa: F401
 )
 from .parallel import ParallelEdgeStream, run_parallel  # noqa: F401
 from .oocstream import (  # noqa: F401
+    BudgetExceededError,
     HostBudget,
     ShardedEdgeStream,
     append_shards,
@@ -104,5 +105,6 @@ __all__ = ["Chunk", "EdgeStream", "as_stream", "run_carry", "run_retract",
            "RetractCarry",
            "SUM", "COUNTED", "OR", "MAX", "REPLICATED", "CARRY_REPR",
            "ParallelEdgeStream", "run_parallel", "HostBudget",
+           "BudgetExceededError",
            "ShardedEdgeStream", "read_manifest", "write_shards",
            "append_shards", "SlidingWindowStream", "WindowEvent"]

@@ -62,8 +62,9 @@ import numpy as np
 
 from .stream import DEFAULT_CHUNK, ORDERINGS, EdgeStream, _windowed_emit
 
-__all__ = ["HostBudget", "ShardedEdgeStream", "write_shards", "append_shards",
-           "read_manifest", "DEFAULT_SHARD_EDGES", "MANIFEST_NAME"]
+__all__ = ["HostBudget", "BudgetExceededError", "ShardedEdgeStream",
+           "write_shards", "append_shards", "read_manifest",
+           "DEFAULT_SHARD_EDGES", "MANIFEST_NAME"]
 
 MANIFEST_NAME = "manifest.json"
 MANIFEST_VERSION = 1
@@ -75,6 +76,18 @@ DEFAULT_SHARD_EDGES = 1 << 20
 # ---------------------------------------------------------------------------
 
 
+class BudgetExceededError(MemoryError):
+    """A :class:`HostBudget` charge would push residency past its hard cap."""
+
+    def __init__(self, requested: int, current: int, limit: int):
+        self.requested = int(requested)
+        self.current = int(current)
+        self.limit = int(limit)
+        super().__init__(
+            f"host budget exceeded: charging {requested} bytes at "
+            f"{current} resident would pass the {limit}-byte limit")
+
+
 class HostBudget:
     """Accounting hook for host allocations made *by the stream*.
 
@@ -82,14 +95,29 @@ class HostBudget:
     every real ndarray the stream allocates — chunk staging copies, reorder
     block buffers, gather outputs — is charged while live.  ``peak_bytes``
     is what the bounded-memory tests assert against.
+
+    ``limit_bytes`` turns the observer into an enforcer: a :meth:`charge`
+    that would push ``current_bytes`` past the limit raises
+    :class:`BudgetExceededError` *before* mutating any counter, so the
+    hybrid planner's residency promise is a hard cap, not a report.  The
+    default (``None``) keeps the original unlimited-observe behavior
+    bit-for-bit.
     """
 
-    def __init__(self) -> None:
+    def __init__(self, limit_bytes: int | None = None) -> None:
+        if limit_bytes is not None and int(limit_bytes) < 0:
+            raise ValueError(f"limit_bytes must be >= 0, got {limit_bytes}")
+        self.limit_bytes = None if limit_bytes is None else int(limit_bytes)
         self.current_bytes = 0
         self.peak_bytes = 0
 
     def charge(self, nbytes: int) -> None:
-        self.current_bytes += int(nbytes)
+        nbytes = int(nbytes)
+        if (self.limit_bytes is not None
+                and self.current_bytes + nbytes > self.limit_bytes):
+            raise BudgetExceededError(nbytes, self.current_bytes,
+                                      self.limit_bytes)
+        self.current_bytes += nbytes
         if self.current_bytes > self.peak_bytes:
             self.peak_bytes = self.current_bytes
 

@@ -1,0 +1,210 @@
+"""Memory-budget hybrid partitioner (``repro.hybrid``).
+
+Tier-1 coverage of the whole subsystem:
+
+1. *Planner* — budget 0 plans pure streaming, a budget covering the edge
+   list plans fully in-memory, and the refinement ladder is
+   budget-independent: a smaller budget's ladder is always a prefix of a
+   larger one's (the structural fact behind the monotone-RF gate).
+2. *Zero-budget parity* — ``run_hybrid`` at budget 0 is bit-identical to
+   the pure-streaming :func:`~repro.core.s5p.s5p_partition`.
+3. *Small-budget smoke* (the tier-1 gate from the bench) — on a
+   hub-heavy block R-MAT: peak resident bytes ≤ the requested budget,
+   hybrid RF ≤ pure-streaming RF, and the result packs a standard
+   40-key warm bundle.
+4. *Monotone frontier* — RF non-increasing over three budget rungs.
+5. *Round-trips* — a hybrid bundle persisted through
+   :class:`~repro.incremental.CarryStore` warm-starts
+   :func:`~repro.incremental.run_incremental` on a grown stream, and a
+   :class:`~repro.hybrid.HybridServingChain` publishes through the
+   standard :class:`~repro.serving.ServingController` (atomic, untorn)
+   with delta steps landing as further swaps.
+6. *CLI* — ``--host-budget`` accepts ``512M`` / ``2G`` style sizes.
+"""
+
+from __future__ import annotations
+
+import argparse
+
+import numpy as np
+import pytest
+
+from repro.core import S5PConfig, replication_factor
+from repro.core.s5p import s5p_partition
+from repro.graphs import block_rmat_graph
+from repro.graphs.generators import community_graph
+from repro.hybrid import (
+    CORE_EDGE_BYTES,
+    HybridServingChain,
+    plan_budget,
+    run_hybrid,
+)
+from repro.incremental import CarryStore, run_incremental, s5p_identity_config
+from repro.incremental.driver import _prefix_crc
+from repro.launch.partition import parse_bytes
+from repro.serving import BundleRegistry, ServingController
+
+K = 4
+
+
+def _graph(seed=0):
+    return community_graph(400, n_communities=8, avg_degree=6,
+                           p_intra=0.9, seed=seed)
+
+
+def _cfg(k=K, seed=0, chunk=1 << 12):
+    return S5PConfig(k=k, seed=seed, chunk_size=chunk)
+
+
+# =================================================== 1. budget planner
+def test_planner_modes_and_ladder_prefix():
+    src, dst, n = _graph()
+    E = src.size
+    full = E * CORE_EDGE_BYTES + (1 << 20)  # past every record + overhead
+
+    p0 = plan_budget(src, dst, n, 0)
+    assert p0.mode == "streaming" and not p0.resident
+    assert p0.ladder == ()
+
+    p_full = plan_budget(src, dst, n, full)
+    assert p_full.mode == "in_memory"
+    assert p_full.xi_star == 0  # threshold 0 = every edge is core
+    assert p_full.ladder[-1] == 0
+
+    # budget-independent ladder: smaller budget => prefix of larger
+    p_mid = plan_budget(src, dst, n, full // 4)
+    p_big = plan_budget(src, dst, n, full // 2)
+    assert p_big.ladder[:len(p_mid.ladder)] == p_mid.ladder
+    assert p_full.ladder[:len(p_big.ladder)] == p_big.ladder
+    # conservative plan: estimated core cost respects the budget
+    for p in (p_mid, p_big):
+        if p.resident:
+            assert p.est_core_bytes <= p.budget_bytes
+
+
+# ============================================== 2. zero-budget parity
+def test_zero_budget_bit_identical_to_streaming():
+    src, dst, n = _graph(1)
+    cfg = _cfg()
+    base = s5p_partition(src, dst, n, cfg)
+    res = run_hybrid((src, dst, n), cfg, host_budget=0)
+    assert res.mode == "streaming"
+    assert res.core_edges == 0
+    np.testing.assert_array_equal(res.parts, np.asarray(base.parts))
+    assert res.rf == pytest.approx(res.rf_streaming)
+
+
+# ============================================ 3. small-budget smoke
+def test_small_budget_hybrid_gates():
+    src, dst, n = block_rmat_graph(block_scale=6, n_blocks=4,
+                                   edge_factor=8, seed=0)
+    E = src.size
+    cfg = _cfg(chunk=1 << 12)
+    budget = int(0.25 * E * CORE_EDGE_BYTES * 2)
+    res = run_hybrid((src, dst, n), cfg, host_budget=budget)
+
+    assert res.mode in ("hybrid", "in_memory")
+    assert res.core_edges > 0
+    # gate: resident accounting never exceeded the requested budget
+    assert res.peak_budget_bytes <= budget
+    # gate: refinement never loses to the pure-streaming incumbent
+    assert res.rf <= res.rf_streaming + 1e-9
+    assert res.rf == pytest.approx(
+        replication_factor(src, dst, res.parts, n_vertices=n, k=K))
+    # a standard warm bundle, ready for the incremental/serving stack
+    assert len(res.bundle) == 40
+    for key in ("parts", "c2p", "load", "stream_pos", "arrival", "alive"):
+        assert key in res.bundle
+    assert int(res.bundle["stream_pos"]) == E
+
+
+# ============================================== 4. monotone frontier
+def test_frontier_monotone_rf():
+    src, dst, n = _graph(2)
+    E = src.size
+    cfg = _cfg()
+    full = E * CORE_EDGE_BYTES * 2
+    prev = None
+    for frac in (0.0, 0.3, 1.0):
+        res = run_hybrid((src, dst, n), cfg,
+                         host_budget=int(frac * full))
+        if prev is not None:
+            assert res.rf <= prev + 1e-9
+        prev = res.rf
+
+
+# ========================================== 5a. incremental round-trip
+def test_bundle_roundtrip_run_incremental(tmp_path):
+    src, dst, n = _graph(3)
+    E = src.size
+    cfg = _cfg()
+    res = run_hybrid((src, dst, n), cfg,
+                     host_budget=E * CORE_EDGE_BYTES * 2)
+
+    store = CarryStore(tmp_path)
+    store.save(res.bundle, consumer="s5p",
+               config=s5p_identity_config(cfg), stream_pos=E,
+               extra_meta={"n_vertices": int(n),
+                           "prefix_crc": _prefix_crc(src, dst, E)})
+
+    # grow the stream with a foreign suffix and warm-start from the store
+    rng = np.random.default_rng(7)
+    dsrc = rng.integers(0, n, 64).astype(np.int32)
+    ddst = rng.integers(0, n, 64).astype(np.int32)
+    full_src = np.concatenate([src, dsrc])
+    full_dst = np.concatenate([dst, ddst])
+    inc = run_incremental(tmp_path, "s5p", full_src, full_dst, n, K,
+                          s5p_config=cfg, save=False)
+    assert inc.n_delta_edges == 64
+    assert inc.parts.shape[0] == E + 64
+    live = inc.parts >= 0
+    assert inc.rf == pytest.approx(replication_factor(
+        full_src[live], full_dst[live], inc.parts[live],
+        n_vertices=n, k=K), abs=1e-6)
+
+
+# ============================================= 5b. serving round-trip
+def test_serving_roundtrip_publishes_hybrid_bundle():
+    src, dst, n = _graph(4)
+    E = src.size
+    cfg = _cfg()
+    res = run_hybrid((src, dst, n), cfg,
+                     host_budget=E * CORE_EDGE_BYTES * 2)
+
+    rng = np.random.default_rng(11)
+    delta = (rng.integers(0, n, 48).astype(np.int32),
+             rng.integers(0, n, 48).astype(np.int32))
+    chain = HybridServingChain(res, cfg, src, dst, n, deltas=[delta])
+    reg = BundleRegistry()
+    controller = ServingController(reg, chain)
+
+    # step 1 publishes the hybrid partition itself, atomically
+    assert controller.step() is not None
+    b1 = reg.current
+    assert b1.version == 1 and b1.origin == "cold"
+    b1.check()
+    assert b1.n_edges == E
+    assert b1.rf == pytest.approx(res.rf)
+
+    # step 2 folds the delta through the ordinary warm-bundle path
+    assert controller.step() is not None
+    b2 = reg.current
+    assert b2.version == 2
+    b2.check()
+    assert b2.n_edges == E + 48
+    assert reg.swap_count == 1
+
+    assert controller.step() is None  # deltas drained
+    assert controller.done.is_set()
+
+
+# ======================================================== 6. CLI sizes
+def test_parse_bytes_accepts_human_sizes():
+    assert parse_bytes("512M") == 512 << 20
+    assert parse_bytes("2G") == 2 << 30
+    assert parse_bytes("64KB") == 64 << 10
+    assert parse_bytes("1048576") == 1 << 20
+    assert parse_bytes("0") == 0
+    for bad in ("", "-1", "12Q", "G", "1.5.2M"):
+        with pytest.raises(argparse.ArgumentTypeError):
+            parse_bytes(bad)

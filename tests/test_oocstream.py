@@ -35,7 +35,9 @@ from repro.core.baselines import greedy_partition, grid_partition, hdrf_partitio
 from repro.core.clustering import cluster_stream
 from repro.data.pipeline import EdgeChunkPipeline, Prefetcher
 from repro.streaming import (
+    BudgetExceededError,
     EdgeStream,
+    HostBudget,
     ShardedEdgeStream,
     read_manifest,
     write_shards,
@@ -440,3 +442,48 @@ def test_prefetcher_worker_death_raises_instead_of_hanging():
             p(2)
     finally:
         p.stop()
+
+
+# ---------------------------------------------------------------------------
+# HostBudget hard-cap mode (the hybrid partitioner's enforcement knob)
+# ---------------------------------------------------------------------------
+
+
+def test_host_budget_default_observe_mode_unchanged():
+    """No limit ⇒ the original observe-only accounting, bit for bit."""
+    hb = HostBudget()
+    assert hb.limit_bytes is None
+    hb.charge(100)
+    hb.charge(1 << 40)  # absurdly large: observe mode never raises
+    assert hb.current_bytes == 100 + (1 << 40)
+    assert hb.peak_bytes == hb.current_bytes
+    hb.release(1 << 40)
+    assert hb.current_bytes == 100
+    assert hb.peak_bytes == 100 + (1 << 40)  # peak is a high-water mark
+    with hb.scoped(50):
+        assert hb.current_bytes == 150
+    assert hb.current_bytes == 100
+
+
+def test_host_budget_hard_cap_raises_and_keeps_state():
+    hb = HostBudget(limit_bytes=1000)
+    hb.charge(600)
+    with pytest.raises(BudgetExceededError) as ei:
+        hb.charge(500)
+    err = ei.value
+    assert (err.requested, err.current, err.limit) == (500, 600, 1000)
+    assert isinstance(err, MemoryError)
+    # a refused charge leaves the accounting untouched (retry-safe)
+    assert hb.current_bytes == 600
+    assert hb.peak_bytes == 600
+    hb.charge(400)  # exactly to the cap is allowed
+    assert hb.current_bytes == 1000
+    with pytest.raises(BudgetExceededError):
+        hb.charge(1)
+    hb.release(1000)
+    # scoped() composes with the cap: inside ≤ limit, released after
+    with hb.scoped(1000):
+        assert hb.current_bytes == 1000
+    assert hb.current_bytes == 0
+    with pytest.raises(ValueError):
+        HostBudget(limit_bytes=-1)

@@ -508,3 +508,111 @@ def test_parallel_retraction_bit_parity(name):
     assert _tree_equal(seq, par), name
     assert _tree_equal(seq, vm), name
     assert not _tree_equal(seq, carry)  # it actually subtracted
+
+
+# ================================================ 8. reader backpressure
+def test_backpressure_max_lag_blocks_behind_slow_reader():
+    """start(max_lag=N): ingest stalls while the newest published version
+    is more than N ahead of the oldest pinned reader version, and resumes
+    the moment the slow reader lets go."""
+    src, dst, n = _small_graph(5)
+    E = src.size
+    cfg = S5PConfig(k=K, seed=0, chunk_size=max(E, 256))
+    chain = S5PWindowChain(src, dst, n, cfg, E // 2, step_edges=E // 12)
+    reg = BundleRegistry()
+    controller = ServingController(reg, chain)
+    # drive synchronously to the first published version
+    while reg.current is None:
+        assert controller.step() is not None
+    assert reg.reader_lag() == 0  # idle registry never counts as lagging
+    # a deliberately slow reader: pin the current version and hold it
+    pin_cm = reg.pin()
+    held = pin_cm.__enter__()
+    try:
+        v0 = held.version
+        assert reg.oldest_pinned_version() == v0
+        controller.start(max_lag=1)
+        # ingest may run at most max_lag versions past the held pin
+        # before the gate closes; give it ample time to (wrongly) race on
+        assert reg.wait_version(v0 + 1, timeout=30)
+        assert not controller.done.wait(0.5)
+        assert reg.current_version <= v0 + 2  # gate closes past lag 1
+        assert reg.reader_lag() <= 2
+        assert not controller.done.is_set()
+        blocked_at = reg.current_version
+    finally:
+        pin_cm.__exit__(None, None, None)  # slow reader catches up
+    # with no pins the registry is idle again — ingest drains to the end
+    assert controller.done.wait(60)
+    controller.join(5)
+    assert reg.current_version > blocked_at
+    assert reg.active_pins == 0
+
+
+def test_backpressure_rejects_negative_lag():
+    reg = BundleRegistry()
+    controller = ServingController(reg, object())
+    with pytest.raises(ValueError):
+        controller.start(max_lag=-1)
+    assert controller._thread is None  # nothing was spawned
+
+
+# ================================================ 9. multi-reader fan-out
+def test_fanout_eight_readers_under_churn():
+    """≥8 GASServer readers over one registry while the controller churns:
+    no reader ever sees a torn bundle, every superseded version retires
+    exactly once, and each reader's carried PageRank converges to the
+    final window's fixed point."""
+    import time
+
+    src, dst, n = _small_graph(6)
+    E = src.size
+    cfg = S5PConfig(k=K, seed=0, chunk_size=max(E, 256))
+    chain = S5PWindowChain(src, dst, n, cfg, E // 2, step_edges=E // 4)
+    reg = BundleRegistry()
+    controller = ServingController(reg, chain)
+    servers = [GASServer(reg) for _ in range(8)]
+    stop = threading.Event()
+    errors: list[BaseException] = []
+
+    def reader(srv):
+        seen = -1
+        try:
+            while not stop.is_set():
+                with reg.pin() as b:
+                    if b is None:
+                        time.sleep(0.01)
+                        continue
+                    b.check()  # pin/publish atomicity: never torn
+                    assert b.version >= seen
+                    seen = b.version
+                srv.superstep()
+                # yield the GIL so ingest makes progress under 8 readers
+                time.sleep(0.005)
+        except BaseException as e:  # noqa: BLE001
+            errors.append(e)
+
+    threads = [threading.Thread(target=reader, args=(s,)) for s in servers]
+    for t in threads:
+        t.start()
+    controller.start()
+    assert controller.done.wait(120)
+    controller.join(5)
+    stop.set()
+    for t in threads:
+        t.join()
+    assert not errors, errors
+    assert reg.active_pins == 0
+    # refcounted retirement drained every superseded version exactly once
+    assert reg.swap_count == controller.version - 1
+    assert reg.versions_retired == reg.swap_count
+    # per-reader convergence: all 8 carried states reach the same fixed
+    # point as a cold PageRank over the final published window
+    b = reg.current
+    b.check()
+    cold_vals, _ = pagerank(b.gas, iterations=300)
+    for srv in servers:
+        srv.run_to_convergence(tol=1e-7, max_steps=300)
+        np.testing.assert_allclose(np.asarray(srv.values),
+                                   np.asarray(cold_vals),
+                                   rtol=1e-3, atol=1e-5)
