@@ -93,7 +93,8 @@ def _grid_rowcol(n_vertices, k, c, seed):
 
 
 def grid_partition(src, dst, n_vertices, k, seed=0, *, stream=None,
-                   chunk_size=None, num_streams=1, super_chunk=8):
+                   chunk_size=None, num_streams=1, super_chunk=8,
+                   shard="range"):
     """Grid/constrained candidate partitioning, sequential least-loaded pick.
 
     Candidate set: grid intersection of u's row/col with v's — cells
@@ -103,7 +104,8 @@ def grid_partition(src, dst, n_vertices, k, seed=0, *, stream=None,
     row, col = _grid_rowcol(n_vertices, k, c, seed)
     st = as_stream(src, dst, n_vertices, stream=stream, chunk_size=chunk_size)
     parts, _ = run_parallel(st, _scan.GridCarry(k, row, col, c),
-                            num_streams=num_streams, super_chunk=super_chunk)
+                            num_streams=num_streams, super_chunk=super_chunk,
+                            shard=shard)
     return parts
 
 
@@ -124,25 +126,26 @@ def grid_partition_multi_seed(src, dst, n_vertices, k, seeds, *, stream=None,
 
 def greedy_partition(src, dst, n_vertices, k, seed=0, *, stream=None,
                      chunk_size=None, use_kernel=None, vmem_budget=None,
-                     num_streams=1, super_chunk=8):
+                     num_streams=1, super_chunk=8, shard="range"):
     """PowerGraph Greedy: 4-case replica-aware assignment."""
     st = as_stream(src, dst, n_vertices, stream=stream, chunk_size=chunk_size)
     pc = _scan.GreedyCarry(n_vertices, k, use_kernel=use_kernel,
                            vmem_budget=vmem_budget)
     parts, _ = run_parallel(st, pc, num_streams=num_streams,
-                            super_chunk=super_chunk)
+                            super_chunk=super_chunk, shard=shard)
     return parts
 
 
 def hdrf_partition(src, dst, n_vertices, k, seed=0, lam: float = 1.1, *,
                    stream=None, chunk_size=None, use_kernel=None,
-                   vmem_budget=None, num_streams=1, super_chunk=8):
+                   vmem_budget=None, num_streams=1, super_chunk=8,
+                   shard="range"):
     """High-Degree Replicated First (partial-degree variant, as published)."""
     st = as_stream(src, dst, n_vertices, stream=stream, chunk_size=chunk_size)
     pc = _scan.HdrfCarry(n_vertices, k, lam, use_kernel=use_kernel,
                          vmem_budget=vmem_budget)
     parts, _ = run_parallel(st, pc, num_streams=num_streams,
-                            super_chunk=super_chunk)
+                            super_chunk=super_chunk, shard=shard)
     return parts
 
 
@@ -226,17 +229,19 @@ def clugp_partition(src, dst, n_vertices, k, seed=0):
 
 
 def _s5p(src, dst, n_vertices, k, seed=0, *, stream=None, chunk_size=None,
-         num_streams=1, super_chunk=8):
+         num_streams=1, super_chunk=8, shard="range"):
     cfg = S5PConfig(k=k, seed=seed, chunk_size=chunk_size or 1 << 16,
-                    num_streams=num_streams, super_chunk=super_chunk)
+                    num_streams=num_streams, super_chunk=super_chunk,
+                    shard=shard)
     return s5p_partition(src, dst, n_vertices, cfg, stream=stream).parts
 
 
 def _s5p_exact(src, dst, n_vertices, k, seed=0, *, stream=None,
-               chunk_size=None, num_streams=1, super_chunk=8):
+               chunk_size=None, num_streams=1, super_chunk=8, shard="range"):
     cfg = S5PConfig(k=k, use_cms=False, seed=seed,
                     chunk_size=chunk_size or 1 << 16,
-                    num_streams=num_streams, super_chunk=super_chunk)
+                    num_streams=num_streams, super_chunk=super_chunk,
+                    shard=shard)
     return s5p_partition(src, dst, n_vertices, cfg, stream=stream).parts
 
 

@@ -350,14 +350,18 @@ class ClusterCarry(PartitionerCarry):
     value (the overwhelmingly common case under chunk-range sharding);
     membership counters are COUNTED.  When two workers concurrently
     reassign the *same* vertex within one super-chunk the telescoped sum
-    is a fabricated id — out-of-range sums project to unassigned
-    (:meth:`ClusterState.effective`), in-range ones alias an unrelated
-    cluster.  Parallel cluster ingest has always been approximate by
-    design (the previous MAX resolution kept one worker's id while
-    *summing both workers' volume deltas*, an equally fictitious state);
-    the slow-lane 8-device band test pins the quality envelope, and the
-    group structure is what buys exact deletions everywhere else.
-    State-only — no per-edge parts.
+    would be a fabricated id (out-of-range sums project to unassigned,
+    in-range ones alias an unrelated cluster), so the two v2c leaves are
+    flagged :attr:`~repro.streaming.carry.PartitionerCarry.pick_first`:
+    concurrent reassignments resolve to the lowest-lane writer's id — a
+    *real* cluster some lane chose — instead of the telescoped sum.
+    Parallel cluster ingest is still approximate by design (the loser
+    lane's volume deltas were accrued against its own id), but membership
+    is never garbage; hub-sharded lanes (``shard="hub"``) additionally
+    make every hub single-writer, shrinking the conflict set to
+    cross-lane tail vertices.  The slow-lane 8-device band test pins the
+    quality envelope, and the group structure is what buys exact
+    deletions everywhere else.  State-only — no per-edge parts.
     """
 
     emits_parts = False
@@ -366,6 +370,7 @@ class ClusterCarry(PartitionerCarry):
     # ClusterState leaf order: v2c_h, v2c_t, vol_h, vol_t, ld, next_h,
     # next_t, cnt_h, cnt_t, alloc_h
     merge_ops = (SUM, SUM, SUM, SUM, SUM, SUM, SUM, COUNTED, COUNTED, SUM)
+    pick_first = (0, 1)  # v2c_h, v2c_t: keep a real id under contention
 
     def __init__(self, degrees: jax.Array, n_vertices: int, *, xi: int,
                  kappa: int, global_tail: bool = False,
@@ -406,6 +411,25 @@ class ClusterCarry(PartitionerCarry):
     def retract_chunk(self, carry, src, dst, n_valid, parts, *extras):
         return cluster_retract_chunk(carry, src, dst, n_valid, self.degrees,
                                      xi=self.xi)
+
+    def occupancy_contest(self, before, after) -> float:
+        """Membership churn between consecutive merge bases.
+
+        The COUNTED occupancy default saturates almost immediately here
+        (membership *counters* go nonzero on first touch and stay), which
+        would let auto cadence back off while vertices are still hopping
+        between clusters — exactly the window where concurrent
+        reassignments degrade quality.  Measure reassignment instead:
+        the fraction of assigned vertices whose cluster id moved
+        (assigned→assigned with a different id) across the two v2c
+        tables.  Fresh assignments (unassigned→id) are growth, not
+        contention, and don't count."""
+        changed = active = 0
+        for b, a in ((before.v2c_h, after.v2c_h),
+                     (before.v2c_t, after.v2c_t)):
+            changed += int(jnp.sum((b >= 0) & (a >= 0) & (a != b)))
+            active += int(jnp.sum(a >= 0))
+        return changed / max(active, 1)
 
 
 class DegreeCarry(PartitionerCarry):
@@ -456,7 +480,8 @@ def cluster_stream(
     global_tail: bool = False,
     stream=None,
     num_streams: int = 1,
-    super_chunk: int = 8,
+    super_chunk: int | str = 8,
+    shard: str = "range",
     use_kernel: bool | None = None,
     vmem_budget: int | None = None,
 ) -> ClusterState:
@@ -487,7 +512,7 @@ def cluster_stream(
                       global_tail=global_tail, use_kernel=use_kernel,
                       vmem_budget=vmem_budget)
     _, state = run_parallel(stream, pc, num_streams=num_streams,
-                            super_chunk=super_chunk)
+                            super_chunk=super_chunk, shard=shard)
     return state
 
 

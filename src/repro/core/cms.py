@@ -41,6 +41,7 @@ __all__ = [
     "SketchCarry",
     "make_sketch",
     "pair_key",
+    "vertex_key",
     "cms_update",
     "cms_retract",
     "cms_query",
@@ -109,6 +110,17 @@ def pair_key(a: jax.Array, b: jax.Array) -> jax.Array:
     h = lo * _GOLDEN
     h = _avalanche(h ^ hi)
     return h
+
+
+def vertex_key(v: jax.Array) -> jax.Array:
+    """uint32 sketch key for a single vertex id (degenerate pair key).
+
+    Shared by every per-vertex degree sketch — the hybrid budget planner's
+    :class:`~repro.hybrid.planner.DegreeSketchCarry` and the hub-routing
+    plan in :class:`~repro.streaming.parallel.ParallelEdgeStream` — so
+    their estimates agree on what a "hub" is."""
+    v = jnp.asarray(v)
+    return pair_key(v, v)
 
 
 def _row_cols(keys: jax.Array, seeds: jax.Array, width: int) -> jax.Array:

@@ -138,7 +138,8 @@ def assign_edges_stream(
     chunk_size: int = 1 << 16,
     stream=None,
     num_streams: int = 1,
-    super_chunk: int = 8,
+    super_chunk: int | str = 8,
+    shard: str = "range",
     use_kernel: bool | None = None,
     vmem_budget: int | None = None,
 ):
@@ -157,7 +158,7 @@ def assign_edges_stream(
                      vmem_budget=vmem_budget)
     parts, load = run_parallel(
         stream, pc, is_head_edge, cu, cv,
-        num_streams=num_streams, super_chunk=super_chunk)
+        num_streams=num_streams, super_chunk=super_chunk, shard=shard)
     return parts, load
 
 

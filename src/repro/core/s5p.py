@@ -54,9 +54,17 @@ class S5PConfig:
     one_stage: bool = False  # Fig. 7d ablation: no leader/follower split
     seed: int = 0
     # parallel ingest (HEP/CuSP regime): S sharded sub-streams per pass,
-    # carry all-reduced every super_chunk chunks; 1 = sequential (exact)
+    # carry all-reduced every super_chunk chunks; 1 = sequential (exact).
+    # super_chunk may be "auto" (adaptive merge cadence) and shard picks
+    # the lane layout ("range" / "round-robin" / "hub" — hub-pinned edge
+    # routing, the quality-neutral mode); see streaming.parallel.
     num_streams: int = 1
-    super_chunk: int = 8
+    super_chunk: int | str = 8
+    shard: str = "range"
+    # post-ingest touch-up (S > 1 only): one bounded masked-game pass over
+    # clusters whose membership was written by ≥ 2 lanes, re-placing only
+    # the moved clusters' edges (budget = refine_rounds)
+    touch_up: bool = True
     # incremental re-partitioning (repro.incremental): relative RF /
     # absolute balance drift past which a delta triggers game refinement,
     # and the refinement budget in Stackelberg rounds (0 disables)
@@ -188,6 +196,9 @@ def cluster_statistics(
             a_np[a_np < C], b_np[a_np < C], C + 1, chunk_size=chunk_size
         )
         theta = SketchCarry(w * max(1, int(math.sqrt(C))), d, seed=seed)
+        # the pair stream always shards by range: the sketch is linear, so
+        # lane merges are exact regardless of routing — hub pinning buys
+        # nothing here and would re-sketch degrees of cluster-pair ids
         _, sketch = _stream.run_parallel(
             pair_stream, theta, num_streams=num_streams,
             super_chunk=super_chunk)
@@ -233,6 +244,7 @@ def s5p_partition(src, dst, n_vertices: int, config: S5PConfig,
         src, dst, n_vertices, xi=xi, kappa=kappa,
         global_tail=config.bounded, stream=stream,
         num_streams=config.num_streams, super_chunk=config.super_chunk,
+        shard=config.shard,
         use_kernel=config.use_kernel, vmem_budget=config.vmem_budget,
     )
     res = _cl.compact_clusters(state, degrees, xi)
@@ -275,9 +287,24 @@ def s5p_partition(src, dst, n_vertices: int, config: S5PConfig,
         src, dst, is_head, jnp.maximum(cu, 0), jnp.maximum(cv, 0),
         game.assignment, k, max_load, stream=stream,
         num_streams=config.num_streams, super_chunk=config.super_chunk,
+        shard=config.shard,
         use_kernel=config.use_kernel, vmem_budget=config.vmem_budget,
     )
     timings["postprocess"] = time.perf_counter() - t0
+    ingest = _stream.last_ingest_stats()  # the placement pass's drive
+    if ingest is not None:
+        stats["parallel_ingest"] = ingest.as_dict()
+
+    # ---- post-ingest touch-up (parallel quality recovery) ----
+    c2p = np.asarray(game.assignment)
+    if (config.num_streams > 1 and config.touch_up
+            and config.refine_rounds > 0 and res.n_clusters > 1):
+        t0 = time.perf_counter()
+        parts, load, c2p, tu_stats = _touch_up(
+            src, dst, n_vertices, config, stream, res, inputs, bs,
+            cu, cv, is_head, sizes, parts, load, c2p, k, max_load)
+        timings["touch_up"] = time.perf_counter() - t0
+        stats["touch_up"] = tu_stats
 
     # pipeline internals for warm starts (repro.incremental builds its
     # carry bundle from these instead of re-deriving them): O(|V| + C + P
@@ -303,7 +330,76 @@ def s5p_partition(src, dst, n_vertices: int, config: S5PConfig,
         xi=xi,
         kappa=kappa,
         max_load=max_load,
-        cluster_assignment=np.asarray(game.assignment),
+        cluster_assignment=c2p,
         timings=timings,
         aux=stats,
     )
+
+
+def _touch_up(src, dst, n_vertices, config, stream, res, inputs, bs,
+              cu, cv, is_head, sizes, parts, load, c2p, k, max_load):
+    """One bounded masked-game pass over the clusters whose membership was
+    written by ≥ 2 ingest lanes — the only clusters whose carry state could
+    have gone stale across lanes — then re-place exactly those clusters'
+    edges (the ``_refine_pass`` recipe of ``repro.incremental``): lift the
+    moved edges out of the load vector and replay them in arrival order
+    against the refined cluster→partition table."""
+    C = res.n_clusters
+    # provenance: which lane folded each edge (the plan is deterministic,
+    # so rebuilding it gives exactly the lanes the ingest used — no need
+    # to have carried per-edge lane ids through the passes)
+    ps = _stream.ParallelEdgeStream(stream, config.num_streams,
+                                    shard=config.shard)
+    lanes = ps.edge_lanes()
+    cu_np = np.asarray(cu)
+    cv_np = np.asarray(cv)
+    valid = np.asarray(src != dst)
+    c_all = np.concatenate([cu_np[valid], cv_np[valid]])
+    l_all = np.concatenate([lanes[valid], lanes[valid]])
+    ok = c_all >= 0
+    mn = np.full(C, np.iinfo(np.int32).max, np.int64)
+    mx = np.full(C, -1, np.int64)
+    np.minimum.at(mn, c_all[ok], l_all[ok])
+    np.maximum.at(mx, c_all[ok], l_all[ok])
+    contested = (mx > mn)  # touched by ≥ 2 lanes
+    move_mask = contested & (np.asarray(sizes) > 0)
+    stats = {"contested_clusters": int(contested.sum()), "moved_clusters": 0,
+             "replayed_edges": 0, "rounds": 0}
+    if not move_mask.any():
+        return parts, load, c2p, stats
+    refined = _game.run_game(
+        inputs, C, batch_size=bs, max_rounds=config.refine_rounds,
+        accept_prob=config.game_accept_prob, assign0=jnp.asarray(c2p),
+        seed=config.seed + 1,
+        leader_mask=np.arange(C) < inputs.n_head,
+        move_mask=move_mask,
+    )
+    stats["rounds"] = int(refined.rounds)
+    c2p_new = np.asarray(refined.assignment)
+    moved = np.flatnonzero(c2p_new != c2p)
+    stats["moved_clusters"] = int(moved.size)
+    if not moved.size:
+        return parts, load, c2p, stats
+    moved_mask = np.zeros(C, bool)
+    moved_mask[moved] = True
+    aff = valid & (moved_mask[np.maximum(cu_np, 0)]
+                   | moved_mask[np.maximum(cv_np, 0)])
+    aidx = np.flatnonzero(aff)
+    stats["replayed_edges"] = int(aidx.size)
+    parts_np = np.asarray(parts).copy()
+    load64 = np.asarray(load).astype(np.int64)
+    np.subtract.at(load64, parts_np[aidx], 1)
+    re_stream = _stream.EdgeStream(
+        np.asarray(src)[aidx], np.asarray(dst)[aidx], n_vertices,
+        chunk_size=config.chunk_size)
+    ac = _post.AssignCarry(k, max_load, jnp.asarray(c2p_new),
+                           use_kernel=config.use_kernel,
+                           vmem_budget=config.vmem_budget)
+    re_parts, load = _stream.run_carry(
+        re_stream, ac,
+        jnp.asarray(np.asarray(is_head)[aidx]),
+        jnp.asarray(np.maximum(cu_np[aidx], 0)),
+        jnp.asarray(np.maximum(cv_np[aidx], 0)),
+        carry=jnp.asarray(load64.astype(np.int32)))
+    parts_np[aidx] = np.asarray(re_parts)
+    return jnp.asarray(parts_np), load, c2p_new, stats

@@ -34,7 +34,8 @@ from typing import NamedTuple
 import jax.numpy as jnp
 import numpy as np
 
-from ..core.cms import CMSketch, cms_query, make_sketch, pair_key, suggest_params
+from ..core.cms import (CMSketch, cms_query, make_sketch, pair_key,
+                        suggest_params, vertex_key)
 from ..streaming import REPLICATED, SUM, PartitionerCarry, as_stream, run_parallel
 
 __all__ = [
@@ -80,9 +81,8 @@ class BudgetPlan(NamedTuple):
 
 
 def _vertex_key(v) -> jnp.ndarray:
-    """uint32 sketch key for a single vertex id (degenerate pair key)."""
-    v = jnp.asarray(v)
-    return pair_key(v, v)
+    """uint32 sketch key for a single vertex id (see ``cms.vertex_key``)."""
+    return vertex_key(v)
 
 
 class DegreeSketchCarry(PartitionerCarry):

@@ -17,6 +17,17 @@ Parallel ingest (S sharded sub-streams per pass, carries merged every
 
   python -m repro.launch.partition --graph rmat:17 --k 8 \
       --partitioner hdrf --num-streams 8 --super-chunk 8
+  # quality-neutral lanes: pin each hub's edges to one lane and let the
+  # merge cadence adapt to carry contention
+  python -m repro.launch.partition --graph rmat:17 --k 8 \
+      --partitioner hdrf --num-streams 8 --shard-mode hub --super-chunk auto
+
+Memory-budget hybrid (resident high-degree core + streamed tail; see
+``repro.hybrid``).  ``--hybrid`` alone sizes the budget from available
+host memory (``--budget-fraction`` of it); ``--host-budget`` pins it:
+
+  python -m repro.launch.partition --graph rmat:18 --k 32 --hybrid
+  python -m repro.launch.partition --graph rmat:18 --k 32 --host-budget 2G
 
 Incremental re-partitioning (warm-start replay of only the new edges; see
 ``repro.incremental``):
@@ -142,6 +153,69 @@ def parse_bytes(spec: str) -> int:
     return value * mult
 
 
+def _parse_meminfo_available(text: str) -> int | None:
+    """``/proc/meminfo`` text → available bytes (``MemAvailable`` line,
+    falling back to ``MemFree``), or None when neither parses."""
+    free = None
+    for line in text.splitlines():
+        key, _, rest = line.partition(":")
+        key = key.strip()
+        if key not in ("MemAvailable", "MemFree"):
+            continue
+        fields = rest.split()
+        if not fields or not fields[0].isdigit():
+            continue
+        value = int(fields[0])
+        unit = fields[1].upper() if len(fields) > 1 else "KB"
+        mult = {"B": 1, "KB": 1 << 10, "MB": 1 << 20, "GB": 1 << 30}.get(unit)
+        if mult is None:
+            continue
+        if key == "MemAvailable":
+            return value * mult
+        free = value * mult
+    return free
+
+
+def detect_available_memory() -> int | None:
+    """Available host memory in bytes, or None when undetectable.
+
+    ``/proc/meminfo``'s MemAvailable first (counts reclaimable cache, the
+    honest answer on Linux), then the portable
+    ``os.sysconf(SC_AVPHYS_PAGES) * SC_PAGE_SIZE``.  No new deps.
+    """
+    import os
+
+    try:
+        with open("/proc/meminfo") as fh:
+            avail = _parse_meminfo_available(fh.read())
+        if avail is not None:
+            return avail
+    except OSError:
+        pass
+    try:
+        pages = os.sysconf("SC_AVPHYS_PAGES")
+        page_size = os.sysconf("SC_PAGE_SIZE")
+    except (ValueError, OSError, AttributeError):
+        return None
+    if pages <= 0 or page_size <= 0:
+        return None
+    return int(pages) * int(page_size)
+
+
+def auto_host_budget(fraction: float = 0.5) -> int:
+    """Size ``--host-budget`` from available memory (``--hybrid`` with no
+    explicit budget): ``fraction`` of what the host reports as available."""
+    if not 0 < fraction <= 1:
+        raise ValueError(
+            f"budget_fraction must be in (0, 1], got {fraction}")
+    avail = detect_available_memory()
+    if avail is None:
+        raise RuntimeError(
+            "could not detect available host memory (/proc/meminfo and "
+            "os.sysconf both unavailable); pass --host-budget explicitly")
+    return int(avail * fraction)
+
+
 def _parse_delete(spec: str, n_edges: int, seed: int) -> np.ndarray:
     """``--delete`` spec → arrival indices.
 
@@ -172,18 +246,33 @@ def _parse_delete(spec: str, n_edges: int, seed: int) -> np.ndarray:
 def run(graph: str, k: int, partitioner: str = "s5p", seed: int = 0,
         compare: bool = False, *, chunk_size: int = 1 << 16,
         ordering: str = "natural", window: int = 4096,
-        num_streams: int = 1, super_chunk: int = 8,
+        num_streams: int = 1, super_chunk: int | str = 8,
+        shard: str = "range",
         save_carry: str | None = None, resume_carry: str | None = None,
         delta: str | None = None, delete: str | None = None,
         drift_threshold: float | None = None,
         refine_rounds: int | None = None,
         xi_refresh_threshold: float | None = None,
         window_edges: int | None = None, window_step: int | None = None,
-        resize_k: int | None = None, host_budget: int | None = None):
+        resize_k: int | None = None, host_budget: int | None = None,
+        hybrid: bool = False, budget_fraction: float = 0.5):
     for pname, v in (("k", k), ("chunk_size", chunk_size), ("window", window),
-                     ("num_streams", num_streams), ("super_chunk", super_chunk)):
+                     ("num_streams", num_streams)):
         if v < 1:
             raise ValueError(f"{pname} must be >= 1, got {v}")
+    if isinstance(super_chunk, str):
+        if super_chunk != "auto":
+            raise ValueError(
+                f"super_chunk must be >= 1 or 'auto', got {super_chunk!r}")
+    elif super_chunk < 1:
+        raise ValueError(f"super_chunk must be >= 1, got {super_chunk}")
+    if shard not in ("range", "rr", "round-robin", "hub"):
+        raise ValueError(f"shard must be one of range | rr | round-robin | "
+                         f"hub, got {shard!r}")
+    if hybrid and host_budget is None:
+        host_budget = auto_host_budget(budget_fraction)
+        print(f"[hybrid] auto-sized --host-budget: {host_budget} bytes "
+              f"({budget_fraction:.0%} of available host memory)")
     if host_budget is not None:
         if partitioner != "s5p":
             raise ValueError("--host-budget drives the s5p hybrid pipeline; "
@@ -210,6 +299,21 @@ def run(graph: str, k: int, partitioner: str = "s5p", seed: int = 0,
         src, dst = stream.arrival_arrays()
     else:
         src, dst, n = load_graph(graph, seed)
+    if num_streams > 1:
+        # a lane count or super-chunk longer than the stream used to
+        # degenerate silently (clamped lanes / a single merge); reject it
+        # like the other stream args instead
+        n_chunks = max(-(-len(src) // chunk_size), 1)
+        if num_streams > n_chunks:
+            raise ValueError(
+                f"num_streams must be <= the stream's chunk count "
+                f"({n_chunks} chunks of {chunk_size}), got {num_streams}")
+        rounds = -(-n_chunks // num_streams)
+        if not isinstance(super_chunk, str) and super_chunk > rounds:
+            raise ValueError(
+                f"super_chunk must be <= the {rounds} chunks each of the "
+                f"{num_streams} sub-streams ingests (else it degenerates "
+                f"to a single merge), got {super_chunk}")
     if window_edges is not None:
         if compare:
             raise ValueError("--window-edges runs a single partitioner, "
@@ -241,7 +345,8 @@ def run(graph: str, k: int, partitioner: str = "s5p", seed: int = 0,
                 src, dst, n, k, seed, host_budget, stream=stream,
                 chunk_size=chunk_size, ordering=ordering,
                 num_streams=num_streams, super_chunk=super_chunk,
-                refine_rounds=refine_rounds, save_carry=save_carry)
+                shard=shard, refine_rounds=refine_rounds,
+                save_carry=save_carry)
         finally:
             if stream is not None:
                 stream.close()
@@ -261,6 +366,7 @@ def run(graph: str, k: int, partitioner: str = "s5p", seed: int = 0,
                 graph, src, dst, n, k, partitioner, seed, compare,
                 stream=stream, chunk_size=chunk_size, ordering=ordering,
                 num_streams=num_streams, super_chunk=super_chunk,
+                shard=shard,
                 save_carry=save_carry, resume_carry=resume_carry,
                 delta=delta, delete=delete,
                 drift_threshold=drift_threshold,
@@ -283,6 +389,8 @@ def run(graph: str, k: int, partitioner: str = "s5p", seed: int = 0,
         if num_streams > 1 and "num_streams" in params:
             kw["num_streams"] = num_streams
             kw["super_chunk"] = super_chunk
+            if "shard" in params:
+                kw["shard"] = shard
         t0 = time.time()
         parts = fn(src, dst, n, k, seed, **kw)
         dt = time.time() - t0
@@ -306,13 +414,15 @@ def run(graph: str, k: int, partitioner: str = "s5p", seed: int = 0,
 
 
 def _s5p_cfg(k, seed, chunk_size, ordering, num_streams, super_chunk,
-             drift_threshold, refine_rounds, xi_refresh_threshold):
+             drift_threshold, refine_rounds, xi_refresh_threshold,
+             shard="range"):
     import dataclasses
 
     from ..core import S5PConfig
 
     cfg = S5PConfig(k=k, seed=seed, chunk_size=chunk_size, ordering=ordering,
-                    num_streams=num_streams, super_chunk=super_chunk)
+                    num_streams=num_streams, super_chunk=super_chunk,
+                    shard=shard)
     overrides = {}
     if drift_threshold is not None:
         overrides["drift_rf_threshold"] = drift_threshold
@@ -361,7 +471,7 @@ def _run_window_cli(src, dst, n, k, partitioner, seed, window_edges,
 
 def _run_hybrid_cli(src, dst, n, k, seed, host_budget, *, stream,
                     chunk_size, ordering, num_streams, super_chunk,
-                    refine_rounds, save_carry):
+                    shard, refine_rounds, save_carry):
     """``--host-budget`` flow: memory-budget hybrid partition (s5p).
 
     Budget 0 degrades to the pure-streaming pipeline; a budget covering
@@ -374,7 +484,7 @@ def _run_hybrid_cli(src, dst, n, k, seed, host_budget, *, stream,
     from ..hybrid import run_hybrid
 
     cfg = _s5p_cfg(k, seed, chunk_size, ordering, num_streams, super_chunk,
-                   None, refine_rounds, None)
+                   None, refine_rounds, None, shard)
     cfg = dataclasses.replace(cfg, host_budget=int(host_budget))
     t0 = time.time()
     res = run_hybrid(stream if stream is not None else (src, dst, n), cfg)
@@ -438,7 +548,7 @@ def _run_resize_cli(src, dst, n, k, k_new, partitioner, seed, *,
 
 def _run_incremental_cli(graph, src, dst, n, k, partitioner, seed, compare,
                          *, stream, chunk_size, ordering, num_streams,
-                         super_chunk, save_carry, resume_carry, delta,
+                         super_chunk, shard, save_carry, resume_carry, delta,
                          delete, drift_threshold, refine_rounds,
                          xi_refresh_threshold):
     """``--save-carry`` / ``--resume-carry`` / ``--delta`` / ``--delete``."""
@@ -466,7 +576,8 @@ def _run_incremental_cli(graph, src, dst, n, k, partitioner, seed, compare,
                               np.asarray(ddst, np.int32)])
         n = max(n, dn)
     cfg = _s5p_cfg(k, seed, chunk_size, ordering, num_streams, super_chunk,
-                   drift_threshold, refine_rounds, xi_refresh_threshold)
+                   drift_threshold, refine_rounds, xi_refresh_threshold,
+                   shard)
 
     if resume_carry:
         delete_idx = _parse_delete(delete, len(src), seed) if delete else None
@@ -512,6 +623,30 @@ def _positive_int(value: str) -> int:
     return iv
 
 
+def _super_chunk_arg(value: str):
+    """argparse type for ``--super-chunk``: a positive chunk count, or
+    ``auto`` for the adaptive cadence controller."""
+    if value.strip().lower() == "auto":
+        return "auto"
+    try:
+        return _positive_int(value)
+    except argparse.ArgumentTypeError:
+        raise argparse.ArgumentTypeError(
+            f"expected a chunk count >= 1 or 'auto', got {value!r}")
+
+
+def _fraction_arg(value: str) -> float:
+    """argparse type for ``--budget-fraction``: a float in (0, 1]."""
+    try:
+        fv = float(value)
+    except ValueError:
+        raise argparse.ArgumentTypeError(f"expected a fraction, got {value!r}")
+    if not 0 < fv <= 1:
+        raise argparse.ArgumentTypeError(
+            f"must be a fraction in (0, 1], got {value!r}")
+    return fv
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--graph", default="community:4000",
@@ -532,9 +667,21 @@ def main():
     ap.add_argument("--num-streams", type=_positive_int, default=1,
                     help="parallel-ingest sub-streams per pass (1 = "
                          "sequential, bit-identical)")
-    ap.add_argument("--super-chunk", type=_positive_int, default=8,
+    ap.add_argument("--super-chunk", type=_super_chunk_arg, default=8,
                     help="chunks each sub-stream ingests between carry "
-                         "merges (parallel ingest only)")
+                         "merges, or 'auto' for the adaptive cadence "
+                         "controller (merge every chunk while contested, "
+                         "geometric backoff as the tables warm; state-only "
+                         "passes fold isolated and merge once) — parallel "
+                         "ingest only")
+    ap.add_argument("--shard-mode", default="range",
+                    choices=("range", "rr", "round-robin", "hub"),
+                    help="how edges are dealt onto the --num-streams lanes: "
+                         "contiguous chunk ranges (range), interleaved "
+                         "chunks (rr), or hub-pinned edge routing (hub: an "
+                         "online CMS degree sketch pins every hub's edges "
+                         "to one rendezvous-hashed lane — the "
+                         "quality-neutral mode on power-law graphs)")
     ap.add_argument("--write-shards", default=None, metavar="DIR",
                     help="convert --graph to edge shards in DIR and exit")
     ap.add_argument("--shard-edges", type=_positive_int, default=1 << 20,
@@ -578,6 +725,15 @@ def main():
                     help="memory-budget hybrid mode: host bytes spendable "
                          "on a resident high-degree core (accepts 512M / "
                          "2G suffixes; 0 = pure streaming; s5p only)")
+    ap.add_argument("--hybrid", action="store_true",
+                    help="memory-budget hybrid mode with the budget "
+                         "auto-sized from available host memory "
+                         "(--budget-fraction of /proc/meminfo "
+                         "MemAvailable, falling back to os.sysconf); "
+                         "--host-budget overrides")
+    ap.add_argument("--budget-fraction", type=_fraction_arg, default=0.5,
+                    help="fraction of detected available memory --hybrid "
+                         "spends on the resident core (default 0.5)")
     ap.add_argument("--xi-refresh-threshold", type=float, default=None,
                     help="relative ξ/κ drift past which a warm chain "
                          "reports needs_cold_restart (s5p; default from "
@@ -592,13 +748,15 @@ def main():
     run(args.graph, args.k, args.partitioner, args.seed, args.compare,
         chunk_size=args.chunk_size, ordering=args.ordering,
         window=args.window, num_streams=args.num_streams,
-        super_chunk=args.super_chunk, save_carry=args.save_carry,
+        super_chunk=args.super_chunk, shard=args.shard_mode,
+        save_carry=args.save_carry,
         resume_carry=args.resume_carry, delta=args.delta,
         delete=args.delete, drift_threshold=args.drift_threshold,
         refine_rounds=args.refine_rounds,
         xi_refresh_threshold=args.xi_refresh_threshold,
         window_edges=args.window_edges, window_step=args.window_step,
-        resize_k=args.resize_k, host_budget=args.host_budget)
+        resize_k=args.resize_k, host_budget=args.host_budget,
+        hybrid=args.hybrid, budget_fraction=args.budget_fraction)
 
 
 if __name__ == "__main__":

@@ -48,6 +48,15 @@ class LaneFaultInjector:
     ``lane_injector=`` — the raise lands inside the lane's fold, mid-
     super-chunk, which is exactly the window where a worker death loses
     uncommitted carry state.
+
+    Replay contract under hub sharding (``shard="hub"``): a replayed lane
+    re-folds exactly its own pinned chunk registry from the last committed
+    merge base, so every hub's edges stay on the lane the rendezvous hash
+    pinned them to and the recovered drive is bit-identical to the
+    undisturbed one.  Lane *handoff* (straggler mitigation) is the one
+    path allowed to move a pin: it re-slices at a whole-hub boundary and
+    moves the affected hubs' ``pin_map`` entries with the range — a hub's
+    edges are never split across two lanes, failed or not.
     """
 
     def __init__(self, fail_at: Iterable[tuple[int, int]] = ()):

@@ -9,7 +9,10 @@ fleet median is flagged.  Mitigation hooks:
   :func:`repro.streaming.run_parallel` drives this live: pass it a
   monitor and at each super-chunk boundary :meth:`rebalance_plan` moves a
   tail cut of every straggler lane's remaining chunk range to the fastest
-  lane;
+  lane.  Under hub sharding the cut is taken at a whole-hub boundary and
+  the moved hubs' pin-map entries travel with it (an edge of a pinned hub
+  is never served by two lanes — the invariant the quality argument and
+  lane-death replay both rest on);
 - **checkpoint-and-exclude**: at persistent stragglers the elastic
   controller (elastic.py) reshapes the mesh without the slow host.
 """

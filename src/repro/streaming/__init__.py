@@ -89,7 +89,14 @@ from .engine import (  # noqa: F401
     run_scan,
     run_scan_batched,
 )
-from .parallel import ParallelEdgeStream, run_parallel  # noqa: F401
+from .parallel import (  # noqa: F401
+    IngestStats,
+    LaneStats,
+    ParallelEdgeStream,
+    last_ingest_stats,
+    reset_cadence_log,
+    run_parallel,
+)
 from .oocstream import (  # noqa: F401
     BudgetExceededError,
     HostBudget,
@@ -104,7 +111,8 @@ __all__ = ["Chunk", "EdgeStream", "as_stream", "run_carry", "run_retract",
            "run_scan", "run_scan_batched", "PartitionerCarry", "FnCarry",
            "RetractCarry",
            "SUM", "COUNTED", "OR", "MAX", "REPLICATED", "CARRY_REPR",
-           "ParallelEdgeStream", "run_parallel", "HostBudget",
+           "ParallelEdgeStream", "run_parallel", "IngestStats", "LaneStats",
+           "last_ingest_stats", "reset_cadence_log", "HostBudget",
            "BudgetExceededError",
            "ShardedEdgeStream", "read_manifest", "write_shards",
            "append_shards", "SlidingWindowStream", "WindowEvent"]

@@ -132,6 +132,18 @@ class PartitionerCarry:
     #: one merge op per carry leaf, in ``jax.tree_util`` flattening order
     merge_ops: tuple[str, ...] = ()
 
+    #: leaf indices (into the flattened carry) whose SUM merge resolves
+    #: *concurrent* writers by keeping the lowest-lane writer's value
+    #: instead of the telescoped sum.  For assignment tables (vertex →
+    #: cluster ids) the telescoped ``base + Σ (cᵢ − base)`` fabricates an
+    #: id whenever two lanes reassigned the same vertex within one
+    #: super-chunk; pick-first keeps a *real* id one lane assigned.  When
+    #: at most one lane wrote a cell the result is bit-identical to the
+    #: telescoped sum, so sequential and conflict-free parallel runs are
+    #: unaffected.  The group algebra (signed_delta / apply_delta) still
+    #: treats these leaves as plain integers — only merging changes.
+    pick_first: tuple[int, ...] = ()
+
     #: False for state-only consumers whose step_chunk returns parts=None
     emits_parts: bool = True
 
@@ -249,6 +261,16 @@ class PartitionerCarry:
         for i, op in enumerate(self.merge_ops):
             leaves = [jnp.asarray(c[i]) for c in cols]
             if op in GROUP_OPS:
+                if i in self.pick_first and base_flat is not None:
+                    b = jnp.asarray(base_flat[i])
+                    acc = b
+                    taken = jnp.zeros(b.shape, jnp.bool_)
+                    for x in leaves:
+                        ch = x != b
+                        acc = jnp.where(ch & ~taken, x, acc)
+                        taken = taken | ch
+                    out.append(acc.astype(leaves[0].dtype))
+                    continue
                 acc = leaves[0]
                 for x in leaves[1:]:
                     acc = acc + x
@@ -276,6 +298,15 @@ class PartitionerCarry:
         for i, op in enumerate(self.merge_ops):
             x = jnp.asarray(flat[i])
             if op in GROUP_OPS:
+                if i in self.pick_first and base_flat is not None:
+                    b = jnp.asarray(base_flat[i])
+                    changed = x != b[None, ...]
+                    first = jnp.argmax(changed, axis=0)
+                    picked = jnp.take_along_axis(x, first[None, ...],
+                                                 axis=0)[0]
+                    out.append(jnp.where(jnp.any(changed, axis=0), picked,
+                                         b).astype(x.dtype))
+                    continue
                 acc = jnp.sum(x, axis=0)
                 if base_flat is not None:
                     b = jnp.asarray(base_flat[i])
@@ -290,6 +321,36 @@ class PartitionerCarry:
                 out.append(x[0])
         return jax.tree_util.tree_unflatten(treedef, out)
 
+    def occupancy_contest(self, before, after) -> float:
+        """How contested the carry's placement state still is, as the
+        fraction of active cells whose zero/nonzero projection flipped
+        between two consecutive merge bases — the signal the adaptive
+        super-chunk cadence (``super_chunk="auto"`` in
+        :func:`~repro.streaming.parallel.run_parallel`) backs off on.
+
+        COUNTED fields (replica-occupancy counters: the `(v, p)` bitmap
+        projection is ``count > 0``) are the natural churn meter; carries
+        without COUNTED fields (linear consumers like the degree/Θ
+        sketches) fall back to the same projection over SUM fields, whose
+        zero→nonzero transitions die out as the tables fill.  Returns a
+        host float in ``[0, 1]`` (0 for carries with no group fields —
+        nothing to contest, so auto cadence backs off immediately)."""
+        fb = [jnp.asarray(x) for x in jax.tree_util.tree_leaves(before)]
+        fa = [jnp.asarray(x) for x in jax.tree_util.tree_leaves(after)]
+        _check_ops(self.merge_ops, len(fa))
+        for pick in (COUNTED, SUM):
+            changed = active = 0
+            seen = False
+            for op, b, a in zip(self.merge_ops, fb, fa):
+                if op != pick:
+                    continue
+                seen = True
+                changed += int(jnp.sum((b != 0) != (a != 0)))
+                active += int(jnp.sum(a != 0))
+            if seen:
+                return changed / max(active, 1)
+        return 0.0
+
     def merge_collective(self, local, base, axis: str):
         """The shard_map form of :meth:`merge`: one collective per field
         (``psum`` of deltas for SUM, ``pmax`` for OR/MAX, base for
@@ -302,6 +363,15 @@ class PartitionerCarry:
             x = flat[i]
             if op in GROUP_OPS:
                 b = base_flat[i].astype(x.dtype)
+                if i in self.pick_first:
+                    n = jax.lax.psum(jnp.ones((), jnp.int32), axis)
+                    idx = jax.lax.axis_index(axis).astype(jnp.int32)
+                    changed = x != b
+                    winner = jax.lax.pmin(jnp.where(changed, idx, n), axis)
+                    contrib = jnp.where(changed & (idx == winner), x - b,
+                                        jnp.zeros((), x.dtype))
+                    out.append(b + jax.lax.psum(contrib, axis))
+                    continue
                 out.append(b + jax.lax.psum(x - b, axis))
             elif op in (OR, MAX):
                 if x.dtype == jnp.bool_:

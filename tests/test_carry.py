@@ -121,8 +121,38 @@ def _check_merge_algebra(name, pc, n_extras, n, seed):
     # the base itself is the merge identity: base + (c1 − base) == c1
     assert _tree_equal(m([c1, base], base=base), c1), name
     assert _tree_equal(m([base, c1], base=base), c1), name
-    # commutative
-    assert _tree_equal(m([c1, c2], base=base), m([c2, c1], base=base)), name
+    # commutative on the group leaves.  pick_first leaves (assignment
+    # tables: ClusterCarry's v2c) trade commutativity for sanity under
+    # contention — they are deterministic by lane order instead: both
+    # orders agree wherever at most one lane wrote, and the winner on a
+    # contested cell is the first changed lane (a real id, never the
+    # telescoped sum).  run_parallel always merges in lane order, so the
+    # parallel result stays deterministic.
+    ab = m([c1, c2], base=base)
+    ba = m([c2, c1], base=base)
+    pick = set(getattr(pc, "pick_first", ()))
+    if not pick:
+        assert _tree_equal(ab, ba), name
+    else:
+        la = jax.tree_util.tree_leaves(ab)
+        lb = jax.tree_util.tree_leaves(ba)
+        l1 = jax.tree_util.tree_leaves(c1)
+        l2 = jax.tree_util.tree_leaves(c2)
+        l0 = jax.tree_util.tree_leaves(base)
+        for i, (x, y) in enumerate(zip(la, lb)):
+            x, y = np.asarray(x), np.asarray(y)
+            if i not in pick:
+                np.testing.assert_array_equal(x, y, err_msg=name)
+                continue
+            v1, v2, b0 = (np.asarray(l1[i]), np.asarray(l2[i]),
+                          np.asarray(l0[i]))
+            ch1, ch2 = v1 != b0, v2 != b0
+            both = ch1 & ch2
+            np.testing.assert_array_equal(x[~both], y[~both], err_msg=name)
+            np.testing.assert_array_equal(x, np.where(ch1, v1, v2),
+                                          err_msg=name)
+            np.testing.assert_array_equal(y, np.where(ch2, v2, v1),
+                                          err_msg=name)
     # associative: merging a merged pair against the same base equals the
     # flat n-ary merge (the merged pair re-enters as one diverged carry)
     flat = m([c1, c2, c3], base=base)
@@ -459,7 +489,8 @@ def test_cli_rejects_nonpositive_sizes(monkeypatch, capsys):
             cli.main()
         assert exc.value.code == 2  # argparse usage error, not a traceback
         err = capsys.readouterr().err
-        assert "must be >= 1" in err or "expected an integer" in err
+        assert ("must be >= 1" in err or "expected an integer" in err
+                or "chunk count >= 1 or 'auto'" in err)
     # the library-level entry validates too (not just argparse)
     with pytest.raises(ValueError, match="num_streams"):
         cli.run("toy", 4, "hdrf", num_streams=0)
